@@ -1,0 +1,90 @@
+"""Roofline report generator: reads experiments/dryrun/*.json (written by
+launch/dryrun.py) and emits the EXPERIMENTS.md §Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "smollm_360m", "h2o_danube_1_8b", "command_r_plus_104b", "gemma3_12b",
+    "mamba2_2_7b", "jamba_1_5_large_398b", "internvl2_76b",
+    "deepseek_v2_lite_16b", "qwen2_moe_a2_7b", "musicgen_medium",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_cells(dirpath: str = "experiments/dryrun", mesh: str = "single",
+               tag: str = "") -> list[dict]:
+    cells = []
+    for path in glob.glob(os.path.join(dirpath, "*.json")):
+        base = os.path.basename(path)[:-5]
+        parts = base.split("__")
+        cell_tag = parts[2].split("_", 1)[1] if "_" in parts[2] else ""
+        if parts[2].split("_")[0] != mesh or cell_tag != tag:
+            continue
+        with open(path) as f:
+            cells.append(json.load(f))
+    key = lambda c: (ARCH_ORDER.index(c["arch"]) if c["arch"] in ARCH_ORDER
+                     else 99, SHAPE_ORDER.index(c["shape"]))
+    return sorted(cells, key=key)
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def roofline_fraction(c: dict) -> float:
+    """Achievable MFU proxy: model_flops_time / max(all terms).
+    model_flops_time = useful flops at peak; the bound is the slowest
+    resource."""
+    t = c["terms"]
+    bound = max(t.values())
+    if bound <= 0:
+        return 0.0
+    useful_time = c["model_flops_per_dev"] / 197e12
+    return useful_time / bound
+
+
+def markdown_table(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| peak mem/dev | useful/HLO flops | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    rows = [hdr]
+    for c in cells:
+        t = c["terms"]
+        rows.append(
+            f"| {c['arch']} | {c['shape']} "
+            f"| {t['compute_s']:.2e} | {t['memory_s']:.2e} "
+            f"| {t['collective_s']:.2e} "
+            f"| {c['dominant'].replace('_s', '')} "
+            f"| {fmt_bytes(c['memory'].get('peak_memory_in_bytes', 0))} "
+            f"| {c['useful_flops_ratio']:.3f} "
+            f"| {roofline_fraction(c):.3f} |")
+    return "\n".join(rows)
+
+
+def summary(cells) -> dict:
+    doms = {}
+    for c in cells:
+        doms[c["dominant"]] = doms.get(c["dominant"], 0) + 1
+    worst = min(cells, key=roofline_fraction) if cells else None
+    most_coll = max(cells, key=lambda c: c["terms"]["collective_s"]
+                    / max(max(c["terms"].values()), 1e-30)) if cells else None
+    return {"cells": len(cells), "dominant_histogram": doms,
+            "worst_roofline": (worst["arch"], worst["shape"],
+                               round(roofline_fraction(worst), 4)) if worst else None,
+            "most_collective_bound": (most_coll["arch"], most_coll["shape"])
+            if most_coll else None}
+
+
+if __name__ == "__main__":
+    cells = load_cells()
+    print(markdown_table(cells))
+    print()
+    print(json.dumps(summary(cells), indent=1))

@@ -1,0 +1,85 @@
+"""Benchmark harness — one entry per paper table/figure plus framework
+benches. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--paper-scale]
+
+Paper experiments (§6, Figures 1-4) run at CI scale by default (compressed
+intervals, smaller N — structure preserved: speed ratios 1:5:10, crash
+probability 1.0); ``--paper-scale`` runs the exact paper setup (slower).
+The roofline rows summarise the multi-pod dry-run artifacts if present
+(see launch/dryrun.py)."""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    paper_scale = "--paper-scale" in sys.argv
+    scale = "paper" if paper_scale else "ci"
+    rows: list[tuple[str, float, str]] = []
+
+    from benchmarks import paper_experiments as PE
+
+    t0 = time.perf_counter()
+    r1 = PE.exp1_feasibility(scale)
+    rows.append(("exp1_feasibility_fig1", (time.perf_counter() - t0) * 1e6,
+                 f"mse {r1['first_mse']:.3f}->{r1['last_mse']:.3f} "
+                 f"decreased={r1['decreased']} pouches={r1['pouches']}"))
+
+    t0 = time.perf_counter()
+    r2 = PE.exp2_adaptability(scale)
+    rows.append(("exp2_adaptability_fig2", (time.perf_counter() - t0) * 1e6,
+                 f"corr(timeout,power)={r2['corr_timeout_power']:.3f} "
+                 f"inverse={r2['inverse']} pouches={r2['pouches']}"))
+
+    t0 = time.perf_counter()
+    r3 = PE.exp3_robustness(scale)
+    rows.append(("exp3_robustness_fig3_4", (time.perf_counter() - t0) * 1e6,
+                 f"completed={r3['completed']} "
+                 f"mse {r3['first_mse']:.3f}->{r3['last_mse']:.3f} "
+                 f"mgr_revive={r3['manager_revivals']} "
+                 f"hdl_revive={r3['handler_revivals']} "
+                 f"corr={r3['corr_timeout_power']:.3f}"))
+
+    t0 = time.perf_counter()
+    r4 = PE.acan_overhead(scale)
+    rows.append(("acan_vs_direct_overhead_s8", (time.perf_counter() - t0) * 1e6,
+                 f"overhead={r4['overhead_x']:.1f}x ts_ops={r4['ts_ops']}"))
+
+    t0 = time.perf_counter()
+    for row in PE.ablation_task_pouch(scale):
+        rows.append((f"ablation_cap{int(row['task_cap'])}_pouch{row['pouch']}",
+                     row["wall"] * 1e6,
+                     f"pouches={row['pouches']} ts_ops={row['ts_ops']} "
+                     f"mse={row['final_mse']}"))
+
+    from benchmarks import kernel_bench as KB
+    rows.extend(KB.bench_tuplespace())
+    rows.extend(KB.bench_tile_matmul())
+    rows.extend(KB.bench_attention())
+    rows.extend(KB.bench_ssd())
+
+    # Roofline summary from dry-run artifacts (if the sweep has been run)
+    try:
+        from benchmarks.roofline import load_cells, roofline_fraction, summary
+        cells = load_cells()
+        if cells:
+            s = summary(cells)
+            rows.append(("dryrun_roofline_cells", 0.0,
+                         f"n={s['cells']} dominant={s['dominant_histogram']}"))
+            for c in cells:
+                rows.append((f"roofline_{c['arch']}_{c['shape']}", 0.0,
+                             f"dom={c['dominant'].replace('_s','')} "
+                             f"frac={roofline_fraction(c):.3f}"))
+    except Exception as e:              # noqa: BLE001
+        rows.append(("dryrun_roofline_cells", 0.0, f"unavailable: {e}"))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""ACAN-over-JAX: the paper's runtime scheduling *real* JAX model training
+(reduced deepseek-v2-lite MoE) — microbatch-gradient tasks flow through
+the Tuple Space with timeout/re-issue, handlers crash mid-task at 25%
+probability, and the §5.4 sliding window commits each param version
+exactly once.
+
+    PYTHONPATH=src python examples/acan_jax_train.py
+"""
+
+from repro.configs import get_config
+from repro.ts_exec.step_runner import ACANStepRunner, ACANTrainConfig
+
+
+def main() -> None:
+    cfg = get_config("deepseek_v2_lite_16b", reduced=True)
+    tcfg = ACANTrainConfig(n_handlers=4, n_micro=4, micro_batch=2, seq=32,
+                           steps=8, lr=0.05, timeout=30.0,
+                           handler_crash_prob=0.25, seed=0)
+    print(f"arch: {cfg.name} (reduced, MoE {cfg.period[0].moe.n_experts}e "
+          f"top-{cfg.period[0].moe.top_k}); {tcfg.n_handlers} handlers, "
+          f"{tcfg.n_micro} grad tasks/step, 25% crash prob/task\n")
+    res = ACANStepRunner(cfg, tcfg).run()
+    for i, l in enumerate(res.losses):
+        print(f"step {i}: loss {l:.4f}")
+    print(f"\ncrashes: {res.crashes}  re-issues: {res.reissues}  "
+          f"param versions committed: {res.param_versions}")
+    assert res.losses[-1] < res.losses[0]
+    print("loss decreased through crashes — ACAN semantics hold for real "
+          "JAX training.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Sharded npz checkpointing + restore-with-resharding.
+
+Conventional checkpoints are the *baseline* the paper argues against; we
+implement them anyway (a production framework needs both) and pair them
+with the journal (:mod:`repro.checkpoint.journal`) whose replay makes
+checkpoints optional for short horizons — the paper's claim, reproduced at
+the step-runner level (tests/test_elastic.py)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out
+
+
+def save_checkpoint(path: str, step: int, params, opt_state=None) -> str:
+    os.makedirs(path, exist_ok=True)
+    trees = {"params": params}
+    if opt_state is not None:
+        trees["opt"] = opt_state
+    manifest = {"step": int(step), "arrays": {}}
+    for name, tree in trees.items():
+        flat = _flatten_with_paths(tree)
+        arrays = {}
+        for k, v in flat.items():
+            arr = np.asarray(jax.device_get(v))
+            if arr.dtype == jnp.bfloat16:
+                arrays[k] = arr.view(np.uint16)
+                manifest["arrays"][f"{name}/{k}"] = "bfloat16"
+            else:
+                arrays[k] = arr
+                manifest["arrays"][f"{name}/{k}"] = str(arr.dtype)
+        np.savez(os.path.join(path, f"{name}.npz"), **arrays)
+    tmp = os.path.join(path, "manifest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(tmp, os.path.join(path, "manifest.json"))  # atomic commit
+    return path
+
+
+def load_checkpoint(path: str, params_like, opt_like=None, shardings=None):
+    """Restore into the structure of ``params_like`` (a tree of arrays or
+    ShapeDtypeStructs). ``shardings`` (same structure) re-shards on load —
+    this is the elastic-restart path: a checkpoint written on one mesh
+    restores onto another."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    def restore(name, like, shard_tree):
+        data = np.load(os.path.join(path, f"{name}.npz"))
+        flat_like = _flatten_with_paths(like)
+        flat_shard = (_flatten_with_paths(shard_tree)
+                      if shard_tree is not None else {})
+        out = {}
+        for k, leaf in flat_like.items():
+            arr = data[k]
+            if manifest["arrays"][f"{name}/{k}"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            if flat_shard:
+                arr = jax.device_put(arr, flat_shard[k])
+            out[k] = jnp.asarray(arr)
+        # unflatten back into the original structure
+        leaves_sorted = [out[k] for k in flat_like]
+        treedef = jax.tree_util.tree_structure(like)
+        return jax.tree_util.tree_unflatten(treedef, leaves_sorted)
+
+    params = restore("params", params_like,
+                     shardings.get("params") if shardings else None)
+    opt = None
+    if opt_like is not None:
+        opt = restore("opt", opt_like,
+                      shardings.get("opt") if shardings else None)
+    return manifest["step"], params, opt

@@ -1,0 +1,5 @@
+from repro.configs.base import (ARCH_IDS, SHAPES, Shape, applicable_shapes,
+                                batch_logical_axes, get_config, input_specs)
+
+__all__ = ["ARCH_IDS", "SHAPES", "Shape", "applicable_shapes",
+           "batch_logical_axes", "get_config", "input_specs"]

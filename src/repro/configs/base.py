@@ -1,0 +1,97 @@
+"""Config registry: assigned architectures × input shapes.
+
+Each ``configs/<arch>.py`` exports ``CONFIG`` (full, literature-exact) and
+``reduced()`` (small same-family variant for CPU smoke tests). Shapes are
+defined here; ``input_specs`` builds the ShapeDtypeStruct stand-ins the
+dry-run lowers (no allocation).
+"""
+
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig
+
+ARCH_IDS = [
+    "smollm_360m", "h2o_danube_1_8b", "command_r_plus_104b", "gemma3_12b",
+    "mamba2_2_7b", "jamba_1_5_large_398b", "internvl2_76b",
+    "deepseek_v2_lite_16b", "qwen2_moe_a2_7b", "musicgen_medium",
+]
+
+
+@dataclass(frozen=True)
+class Shape:
+    name: str
+    kind: str          # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": Shape("train_4k", "train", 4096, 256),
+    "prefill_32k": Shape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": Shape("decode_32k", "decode", 32768, 128),
+    "long_500k": Shape("long_500k", "decode", 524288, 1),
+}
+
+
+def get_config(arch: str, reduced: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.reduced() if reduced else mod.CONFIG
+
+
+def applicable_shapes(cfg: ModelConfig) -> list[str]:
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.long_context_ok:
+        out.append("long_500k")
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """ShapeDtypeStruct stand-ins for the step function's batch argument."""
+    B, S = shape.batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind in ("train",):
+        if cfg.frontend == "embeds":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   cfg.dtype),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.frontend == "codebooks":
+            return {"tokens": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "embeds":
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   cfg.dtype)}
+        if cfg.frontend == "codebooks":
+            return {"tokens": jax.ShapeDtypeStruct((B, S, cfg.n_codebooks), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of length S
+    if cfg.frontend == "embeds":
+        tok = {"embed": jax.ShapeDtypeStruct((B, cfg.d_model), cfg.dtype)}
+    elif cfg.frontend == "codebooks":
+        tok = {"token": jax.ShapeDtypeStruct((B, cfg.n_codebooks), i32)}
+    else:
+        tok = {"token": jax.ShapeDtypeStruct((B,), i32)}
+    return tok | {"cur_len": jax.ShapeDtypeStruct((), i32)}
+
+
+def batch_logical_axes(cfg: ModelConfig, shape: Shape) -> dict:
+    """Logical axes for each batch input (for in_shardings)."""
+    if shape.kind in ("train", "prefill"):
+        ax = {"tokens": ("batch", "seq") if cfg.frontend != "codebooks"
+              else ("batch", "seq", None),
+              "embeds": ("batch", "seq", None),
+              "labels": ("batch", "seq") if cfg.frontend != "codebooks"
+              else ("batch", "seq", None)}
+        return ax
+    return {"token": ("batch",) if cfg.frontend != "codebooks"
+            else ("batch", None),
+            "embed": ("batch", None),
+            "cur_len": ()}

@@ -1,0 +1,74 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba+attention 1:7 interleave with MoE.
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16 experts
+top-2 on every other layer. [arXiv:2403.19887 / Jamba-1.5; hf]
+
+Period of 8: [attn, mamba×7]; FFN alternates dense/MoE (4 MoE + 4 dense
+per period → 36 MoE layers). The mixer uses the SSD (Mamba-2) chunked
+formulation for the Mamba layers — TPU-native chunk-task form of the
+original Mamba-1 recurrence (DESIGN.md §4, hardware-adaptation note).
+Hybrid (mamba-dominated) → long_500k runs. Largest assigned arch: FSDP +
+bf16 optimizer moments to fit 16 GB/chip (see EXPERIMENTS.md §Roofline)."""
+
+from dataclasses import replace
+
+from repro.models.attention import AttnCfg
+from repro.models.blocks import LayerCfg
+from repro.models.mamba2 import MambaCfg
+from repro.models.mlp import DenseFfnCfg
+from repro.models.moe import MoECfg
+from repro.models.model import ModelConfig
+
+_ATTN = AttnCfg(n_heads=64, n_kv_heads=8, head_dim=128, rope_theta=1e4)
+_MAMBA = MambaCfg(d_inner=16384, d_state=128, d_conv=4, head_dim=64,
+                  n_groups=8, chunk=128)
+_DENSE = DenseFfnCfg(d_ff=24576, kind="swiglu")
+_MOE = MoECfg(n_experts=16, top_k=2, d_ff=24576, capacity_factor=1.25,
+              group=2048, norm_topk=True)
+
+
+def _layer(i: int) -> LayerCfg:
+    mixer = "attn" if i == 0 else "mamba"
+    ffn_kind = "moe" if i % 2 == 1 else "dense"
+    return LayerCfg(
+        mixer=mixer,
+        attn=_ATTN if mixer == "attn" else None,
+        mamba=_MAMBA if mixer == "mamba" else None,
+        ffn_kind=ffn_kind,
+        dense=_DENSE if ffn_kind == "dense" else None,
+        moe=_MOE if ffn_kind == "moe" else None,
+    )
+
+
+CONFIG = ModelConfig(
+    name="jamba_1_5_large_398b",
+    d_model=8192,
+    vocab=65536,
+    prefix=(),
+    period=tuple(_layer(i) for i in range(8)),
+    n_periods=9,
+    tie_embeddings=False,
+    rules_name="fsdp",
+    long_context_ok=True,
+    notes="1 attn : 7 mamba, MoE every other layer; 398B total / ~94B active",
+)
+
+
+def reduced() -> ModelConfig:
+    attn = AttnCfg(n_heads=4, n_kv_heads=2, head_dim=16)
+    mamba = MambaCfg(d_inner=64, d_state=16, d_conv=4, head_dim=16,
+                     n_groups=2, chunk=16)
+    dense = DenseFfnCfg(d_ff=96, kind="swiglu")
+    moe = MoECfg(n_experts=4, top_k=2, d_ff=96, group=16)
+
+    def lay(i):
+        mixer = "attn" if i == 0 else "mamba"
+        fk = "moe" if i % 2 == 1 else "dense"
+        return LayerCfg(mixer=mixer, attn=attn if mixer == "attn" else None,
+                        mamba=mamba if mixer == "mamba" else None,
+                        ffn_kind=fk, dense=dense if fk == "dense" else None,
+                        moe=moe if fk == "moe" else None)
+
+    return replace(CONFIG, d_model=32, vocab=256,
+                   period=tuple(lay(i) for i in range(4)), n_periods=2,
+                   param_dtype="float32",
+                   q_chunk=32, kv_chunk=32, loss_chunk=64)

@@ -1,0 +1,20 @@
+"""ACAN / Tuple-Space fault-tolerant reconfigurable runtime — the paper's
+core contribution (Li et al., "Fault Tolerant Reconfigurable ML
+Multiprocessor", 2025)."""
+
+from repro.core.cloud import ACANCloud, CloudConfig, CloudResult, make_teacher_data
+from repro.core.faults import FaultPlan, MonitorDaemon
+from repro.core.gss import PouchController, TimeoutController, gss_chunk
+from repro.core.handler import Handler, SpeedBox
+from repro.core.ledger import Ledger
+from repro.core.manager import Manager, ManagerConfig
+from repro.core.tasks import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
+from repro.core.tuplespace import ANY, TSTimeout, TupleSpace, match
+
+__all__ = [
+    "ACANCloud", "CloudConfig", "CloudResult", "make_teacher_data",
+    "FaultPlan", "MonitorDaemon", "PouchController", "TimeoutController",
+    "gss_chunk", "Handler", "SpeedBox", "Ledger", "Manager", "ManagerConfig",
+    "LayerSpec", "TaskDesc", "TaskKind", "partition", "prototype_tasks",
+    "ANY", "TSTimeout", "TupleSpace", "match",
+]

@@ -1,0 +1,197 @@
+"""ACANCloud — wires TS + Manager + Handlers + MonitorDaemon into one
+runnable "custom ACAN cloud" (paper §4, §6) and runs a training job.
+
+This is the reproduction entry point for the paper's three experiments::
+
+    cloud = ACANCloud(CloudConfig(...))
+    result = cloud.run()
+    result.loss_history      # [(step, mse)]          — Fig. 1 / Fig. 3
+    result.timeout_history   # [(t, timeout, power)]  — Fig. 2 / Fig. 4
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.faults import FaultPlan, MonitorDaemon
+from repro.core.handler import Handler, SpeedBox
+from repro.core.manager import Manager, ManagerConfig
+from repro.core.tasks import LayerSpec
+from repro.core.tuplespace import ANY, TupleSpace
+
+
+@dataclass
+class CloudConfig:
+    layers: list[LayerSpec] = field(default_factory=lambda: [
+        LayerSpec(256, 256), LayerSpec(256, 1)])   # paper §6: N=4^4
+    n_handlers: int = 4                            # paper §6
+    epochs: int = 2                                # paper §6.1
+    n_samples: int = 100                           # paper §6.1
+    task_cap: float = 256.0                        # 4^4
+    pouch_size: int = 100
+    lr: float = 0.02
+    time_scale: float = 2e-6
+    initial_timeout: float = 0.25
+    fault_plan: FaultPlan = field(default_factory=FaultPlan)
+    seed: int = 0
+    data_noise: float = 0.0
+    wall_limit: float = 600.0                      # hard safety limit (s)
+
+
+@dataclass
+class CloudResult:
+    loss_history: list          # [(step, loss)]
+    timeout_history: list       # [(wallclock, timeout, power)]
+    manager_revivals: int
+    handler_revivals: int
+    speed_changes: int
+    wallclock: float
+    ts_stats: dict
+    ledger_ok: bool
+    pouches: int
+
+
+def make_teacher_data(layers: list[LayerSpec], n_samples: int, seed: int,
+                      noise: float = 0.0):
+    """Synthetic regression data from a random teacher net of the same
+    architecture (paper §6.1: "randomly generate a set of parameters that
+    define a mapping … synthesize 100 data points")."""
+    rng = np.random.default_rng(seed + 1234)
+    Ws = []
+    for spec in layers:
+        Ws.append(rng.standard_normal((spec.n_out, spec.n_in)).astype(np.float32)
+                  / np.sqrt(spec.n_in))
+    X = rng.standard_normal((n_samples, layers[0].n_in)).astype(np.float32)
+    Y = []
+    for x in X:
+        h = x
+        for i, W in enumerate(Ws):
+            h = W @ h
+            if i < len(Ws) - 1:
+                h = np.tanh(h)
+        Y.append(h + noise * rng.standard_normal(h.shape).astype(np.float32))
+    return X, np.stack(Y)
+
+
+class ACANCloud:
+    def __init__(self, cfg: CloudConfig) -> None:
+        self.cfg = cfg
+        self.ts = TupleSpace()
+        self.stop_event = threading.Event()
+
+    # ----------------------------------------------------------- factories
+    def _make_manager(self, power_fn) -> tuple[Manager, threading.Thread]:
+        mgr = Manager(
+            ts=self.ts,
+            cfg=ManagerConfig(
+                layers=self.cfg.layers, epochs=self.cfg.epochs,
+                n_samples=self.cfg.n_samples, task_cap=self.cfg.task_cap,
+                pouch_size=self.cfg.pouch_size, lr=self.cfg.lr,
+                initial_timeout=self.cfg.initial_timeout, seed=self.cfg.seed),
+            power_fn=power_fn,
+            crash_event=self._manager_crash,
+            stop_event=self.stop_event,
+        )
+        mgr.controller.timeout = self.cfg.initial_timeout
+        th = threading.Thread(target=self._manager_body, args=(mgr,),
+                              name="acan-manager", daemon=True)
+        th.start()
+        return mgr, th
+
+    def _manager_body(self, mgr: Manager) -> None:
+        try:
+            mgr.run()
+        except Exception:
+            # Crash (injected or real): thread dies; daemon revives a fresh
+            # Manager that resumes from the TS cursor.
+            return
+
+    def _make_handler(self, i: int) -> threading.Thread:
+        h = Handler(ts=self.ts, name=f"h{i}", speed=self._speed_boxes[i],
+                    capacity=self.cfg.task_cap, lr=self.cfg.lr,
+                    time_scale=self.cfg.time_scale,
+                    crash_event=self._handler_crashes[i],
+                    stop_event=self.stop_event)
+        self._handlers[i] = h
+        th = threading.Thread(target=self._handler_body, args=(h,),
+                              name=f"acan-{h.name}", daemon=True)
+        th.start()
+        return th
+
+    @staticmethod
+    def _handler_body(h: Handler) -> None:
+        try:
+            h.run()
+        except Exception:
+            return
+
+    # ----------------------------------------------------------------- run
+    def run(self) -> CloudResult:
+        cfg = self.cfg
+        self._manager_crash = threading.Event()
+        self._handler_crashes = [threading.Event() for _ in range(cfg.n_handlers)]
+        self._speed_boxes = [SpeedBox(1.0) for _ in range(cfg.n_handlers)]
+        self._handlers: list[Handler | None] = [None] * cfg.n_handlers
+
+        # Load the dataset into TS — "the data required for the current
+        # stage" is retrieved from TS by content (paper §5.3).
+        X, Y = make_teacher_data(cfg.layers, cfg.n_samples, cfg.seed,
+                                 cfg.data_noise)
+        for i in range(cfg.n_samples):
+            self.ts.put(("x", i), X[i])
+            self.ts.put(("label", i), Y[i])
+
+        daemon = MonitorDaemon(
+            plan=cfg.fault_plan,
+            manager_crash=self._manager_crash,
+            handler_crashes=self._handler_crashes,
+            speed_boxes=self._speed_boxes,
+            make_manager_thread=lambda: self._make_manager(lambda: daemon.power())[1],
+            make_handler_thread=self._make_handler,
+            is_finished=lambda: self.ts.try_read(("mstate", "finished"))
+            is not None,
+            stop_event=self.stop_event,
+        )
+
+        t0 = time.monotonic()
+        _, mthread = self._make_manager(lambda: daemon.power())
+        hthreads = [self._make_handler(i) for i in range(cfg.n_handlers)]
+        daemon.attach(mthread, hthreads)
+        dthread = threading.Thread(target=daemon.run, name="acan-daemon",
+                                   daemon=True)
+        dthread.start()
+
+        # Wait for the Manager to publish the finished flag (revivals keep
+        # the job alive through crashes).
+        while self.ts.try_read(("mstate", "finished")) is None:
+            if time.monotonic() - t0 > cfg.wall_limit:
+                break
+            time.sleep(0.02)
+        self.stop_event.set()
+        dthread.join(timeout=2.0)
+        wall = time.monotonic() - t0
+
+        loss_hist = sorted(
+            (k[1], self.ts.try_read(k)[1])
+            for k in self.ts.keys(("losshist", ANY)))
+        thist = []
+        for k in self.ts.keys(("thist", ANY, ANY)):
+            v = self.ts.try_read(k)
+            if v is not None:
+                thist.append((k[1], v[1]["timeout"], v[1]["power"]))
+        thist.sort()
+        return CloudResult(
+            loss_history=loss_hist,
+            timeout_history=thist,
+            manager_revivals=daemon.manager_revivals,
+            handler_revivals=daemon.handler_revivals,
+            speed_changes=daemon.speed_changes,
+            wallclock=wall,
+            ts_stats=self.ts.stats(),
+            ledger_ok=self.ts.ledger.verify(),
+            pouches=len(thist),
+        )

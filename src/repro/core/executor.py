@@ -1,0 +1,157 @@
+"""Numerical execution of ACAN tasks against the Tuple Space.
+
+TS data-plane key conventions (all per training *sample*, since the paper
+uses SGD with batch size 1):
+
+==========================================  =================================
+key                                          value
+==========================================  =================================
+``("w", layer)`` / ``("b", layer)``          committed weights / bias
+``("wver", layer)``                          committed version (int)
+``("x", data_id)`` / ``("label", data_id)``  input / target vectors
+``("pre", l, data_id)``                      pre-activation (combined)
+``("act", l, data_id)``                      post-activation (combined)
+``("fpart", l, data_id, ol,oh, il,ih)``      forward partial: W[ol:oh,il:ih]·x
+``("actpart", l, data_id, lo, hi)``          activation slice
+``("losspart", data_id, lo, hi)``            loss over output slice
+``("dypart", l, data_id, lo, hi)``           dLoss/dpre slice (last layer)
+``("dy", l, data_id)``                       dLoss/dpre (combined)
+``("gw", l, data_id, ol,oh, il,ih)``         dW tile
+``("gb", l, data_id, ol,oh)``                db slice
+``("bpart", l, data_id, il,ih, ol,oh)``      dx partial (contribution of out
+                                              slice ``ol:oh`` to ``il:ih``)
+``("gW", l, data_id)`` / ``("gB", l, ...)``  combined gradients
+``("wnew", l, step, ol, oh)``                updated W rows (+"bnew" bias)
+``("done", task_id)``                        completion mark
+==========================================  =================================
+
+Every task's output is a *pure function of tuples it reads* — duplicate
+execution re-writes identical values, which is the paper's §5.4 idempotency
+argument for all kinds except ``update``; updates are keyed by ``step`` and
+committed exactly once by the Manager's sliding window (:mod:`conflict`).
+
+Hidden activation is ``tanh`` (regression setting, paper §5.1/§6.1); the
+last layer is linear.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.tasks import TaskDesc, TaskKind
+from repro.core.tuplespace import TupleSpace
+
+
+class PreconditionUnmet(Exception):
+    """Task inputs are not (yet) in TS — the task "fails upon timeout and is
+    discarded" from the handler's perspective (paper §5.1)."""
+
+
+def activation(z: np.ndarray) -> np.ndarray:
+    return np.tanh(z)
+
+
+def activation_deriv_from_act(a: np.ndarray) -> np.ndarray:
+    return 1.0 - a * a
+
+
+@dataclass
+class TaskExecutor:
+    """Executes a :class:`TaskDesc` against a :class:`TupleSpace`.
+
+    ``lr`` is the SGD learning rate used by UPDATE tasks. The executor is
+    stateless between tasks — all state lives in TS (device-agnostic by
+    construction, the paper's decoupling property).
+    """
+
+    ts: TupleSpace
+    lr: float = 0.01
+
+    # ------------------------------------------------------------------ I/O
+    def _input_vec(self, layer: int, data_id: int) -> np.ndarray:
+        if layer == 0:
+            hit = self.ts.try_read(("x", data_id))
+        else:
+            hit = self.ts.try_read(("act", layer - 1, data_id))
+        if hit is None:
+            raise PreconditionUnmet(f"input of layer {layer} for sample {data_id}")
+        return hit[1]
+
+    def _require(self, key: tuple) -> np.ndarray:
+        hit = self.ts.try_read(key)
+        if hit is None:
+            raise PreconditionUnmet(str(key))
+        return hit[1]
+
+    # ------------------------------------------------------------- dispatch
+    def execute(self, task: TaskDesc) -> None:
+        if task.kind == TaskKind.FORWARD:
+            self._forward(task)
+        elif task.kind == TaskKind.ACTIVATION:
+            self._activation(task)
+        elif task.kind == TaskKind.LOSS:
+            self._loss(task)
+        elif task.kind == TaskKind.BACKWARD:
+            self._backward(task)
+        elif task.kind == TaskKind.UPDATE:
+            self._update(task)
+        else:  # pragma: no cover
+            raise ValueError(task.kind)
+
+    # -------------------------------------------------------------- kernels
+    def _forward(self, t: TaskDesc) -> None:
+        x = self._input_vec(t.layer, t.data_id)
+        W = self._require(("w", t.layer))
+        tile = W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+        part = tile @ x[t.in_lo:t.in_hi]
+        self.ts.put(("fpart", t.layer, t.data_id, t.out_lo, t.out_hi,
+                     t.in_lo, t.in_hi), part.astype(np.float32))
+
+    def _activation(self, t: TaskDesc) -> None:
+        pre = self._require(("pre", t.layer, t.data_id))
+        self.ts.put(("actpart", t.layer, t.data_id, t.out_lo, t.out_hi),
+                    activation(pre[t.out_lo:t.out_hi]).astype(np.float32))
+
+    def _loss(self, t: TaskDesc) -> None:
+        # Output of the net = pre-activation of the last layer (linear head).
+        y = self._require(("pre", t.layer, t.data_id))[t.out_lo:t.out_hi]
+        label = self._require(("label", t.data_id))[t.out_lo:t.out_hi]
+        n_total = self._require(("pre", t.layer, t.data_id)).shape[0]
+        diff = y - label
+        # MSE over the full output dim; slices contribute sum/ n_total.
+        self.ts.put(("losspart", t.data_id, t.out_lo, t.out_hi),
+                    np.float32(np.sum(diff * diff) / n_total))
+        self.ts.put(("dypart", t.layer, t.data_id, t.out_lo, t.out_hi),
+                    (2.0 * diff / n_total).astype(np.float32))
+
+    def _backward(self, t: TaskDesc) -> None:
+        dy = self._require(("dy", t.layer, t.data_id))[t.out_lo:t.out_hi]
+        x = self._input_vec(t.layer, t.data_id)[t.in_lo:t.in_hi]
+        W = self._require(("w", t.layer))
+        tile = W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+        # dW tile, dx partial; db only once per out-slice (attached to the
+        # tile whose in_lo is 0 so it is emitted exactly once).
+        self.ts.put(("gw", t.layer, t.data_id, t.out_lo, t.out_hi,
+                     t.in_lo, t.in_hi), np.outer(dy, x).astype(np.float32))
+        self.ts.put(("bpart", t.layer, t.data_id, t.in_lo, t.in_hi,
+                     t.out_lo, t.out_hi), (tile.T @ dy).astype(np.float32))
+        if t.in_lo == 0:
+            self.ts.put(("gb", t.layer, t.data_id, t.out_lo, t.out_hi),
+                        dy.astype(np.float32))
+
+    def _update(self, t: TaskDesc) -> None:
+        W = self._require(("w", t.layer))
+        b = self._require(("b", t.layer))
+        gW = self._require(("gW", t.layer, t.data_id))
+        gB = self._require(("gB", t.layer, t.data_id))
+        rows = slice(t.out_lo, t.out_hi)
+        w_new = W[rows] - self.lr * gW[rows]
+        b_new = b[rows] - self.lr * gB[rows]
+        # Keyed by step → duplicate executions overwrite with identical
+        # values; the Manager's commit window takes each (step, slice) once.
+        self.ts.put(("wnew", t.layer, t.step, t.out_lo, t.out_hi),
+                    w_new.astype(np.float32))
+        self.ts.put(("bnew", t.layer, t.step, t.out_lo, t.out_hi),
+                    b_new.astype(np.float32))

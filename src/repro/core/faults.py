@@ -1,0 +1,115 @@
+"""Fault injection + the monitor daemon (paper §6).
+
+The paper's simulation has "one Manager thread and four Handler threads, all
+of which may crash during execution. The daemon thread continuously monitors
+the system and revives failed Manager thread using the latest checkpoint
+[TS cursor]… in our simulation we still recreate crashed Handler threads…
+to emulate fluctuating computational resources, we dynamically vary the
+processing speed of Handler threads during runtime."
+
+:class:`FaultPlan` describes *when* faults fire (every ``interval`` seconds,
+each with a probability — the paper's experiments use probability 1.0);
+:class:`MonitorDaemon` applies them and revives dead threads.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class FaultPlan:
+    interval: float = 5.0                 # paper: every 5 s (we compress)
+    speed_levels: tuple = (1.0, 5.0, 10.0)  # paper: ratios 1:5:10
+    p_speed_change: float = 0.0           # exp2/exp3: 1.0
+    p_handler_crash: float = 0.0          # exp3: 1.0
+    p_manager_crash: float = 0.0          # exp3: 1.0
+    seed: int = 0
+
+
+@dataclass
+class MonitorDaemon:
+    """Fires the fault plan and revives dead threads.
+
+    ``make_manager_thread`` / ``make_handler_thread(i)`` must return fresh,
+    *started* threads resuming from TS state. Revival is unconditional —
+    the daemon notices death by ``Thread.is_alive()`` polling (it cannot
+    reliably detect *failure*, only absence — consistent with the paper's
+    stance that reliable failure detection is impossible)."""
+
+    plan: FaultPlan
+    manager_crash: threading.Event
+    handler_crashes: list[threading.Event]
+    speed_boxes: list
+    make_manager_thread: Callable[[], threading.Thread]
+    make_handler_thread: Callable[[int], threading.Thread]
+    is_finished: Callable[[], bool] = lambda: False
+    stop_event: threading.Event = field(default_factory=threading.Event)
+    manager_revivals: int = 0
+    handler_revivals: int = 0
+    speed_changes: int = 0
+    power_log: list = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self._rng = np.random.default_rng(self.plan.seed)
+        self._mthread: threading.Thread | None = None
+        self._hthreads: list[threading.Thread | None] = [None] * len(self.speed_boxes)
+
+    # ------------------------------------------------------------- helpers
+    def power(self) -> float:
+        """Aggregate compute power = sum of speeds of live handlers."""
+        total = 0.0
+        for box, th in zip(self.speed_boxes, self._hthreads):
+            if th is not None and th.is_alive():
+                total += box.get()
+        return total
+
+    def attach(self, mthread: threading.Thread,
+               hthreads: list[threading.Thread]) -> None:
+        self._mthread = mthread
+        self._hthreads = list(hthreads)
+
+    # ----------------------------------------------------------------- run
+    def _fire_faults(self) -> None:
+        rng = self._rng
+        if rng.random() < self.plan.p_speed_change:
+            for box in self.speed_boxes:
+                box.set(float(rng.choice(self.plan.speed_levels)))
+            self.speed_changes += 1
+        if rng.random() < self.plan.p_manager_crash:
+            self.manager_crash.set()
+        if rng.random() < self.plan.p_handler_crash:
+            for ev in self.handler_crashes:
+                ev.set()
+
+    def _revive(self) -> None:
+        if (self._mthread is not None and not self._mthread.is_alive()
+                and not self.is_finished()):
+            # A dead Manager that did NOT publish the finished flag is a
+            # crash — revive it from the TS cursor (paper §6: "revives
+            # failed Manager thread using the latest checkpoint").
+            self._mthread = self.make_manager_thread()
+            self.manager_revivals += 1
+        for i, th in enumerate(self._hthreads):
+            if th is not None and not th.is_alive():
+                self._hthreads[i] = self.make_handler_thread(i)
+                self.handler_revivals += 1
+
+    def manager_alive(self) -> bool:
+        return self._mthread is not None and self._mthread.is_alive()
+
+    def run(self) -> None:
+        last_fault = time.monotonic()
+        while not self.stop_event.is_set():
+            time.sleep(min(self.plan.interval / 5.0, 0.05))
+            now = time.monotonic()
+            if now - last_fault >= self.plan.interval:
+                self._fire_faults()
+                last_fault = now
+            self._revive()
+            self.power_log.append((time.time(), self.power()))

@@ -1,0 +1,67 @@
+"""Guided-Self-Scheduling-style adaptive controllers (paper §2 "Guided
+Self-Scheduling" + §5.3 adaptive timeout).
+
+Two controllers:
+
+- :class:`TimeoutController` — the Manager's pouch timeout. After each round
+  it observes (all-done?, elapsed, completion fraction) and moves the
+  timeout toward ``elapsed × slack`` on success or grows it multiplicatively
+  on failure. This produces the paper's Fig. 2/4 behaviour: timeout is
+  inversely proportional to aggregate handler power.
+- :func:`gss_chunk` — classic GSS ``ceil(remaining / P)`` chunk sizing, used
+  by the host-side data pipeline (pouch sizing for microbatch dispatch).
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TimeoutController:
+    timeout: float = 0.5
+    min_timeout: float = 1e-3
+    max_timeout: float = 30.0
+    slack: float = 1.3          # target = completion_time × slack
+    grow: float = 1.6           # on an incomplete round
+    ema: float = 0.5            # blend toward target on success
+    history: list[float] = field(default_factory=list)
+
+    def update(self, all_done: bool, elapsed: float, fraction_done: float) -> float:
+        if all_done:
+            target = max(elapsed * self.slack, self.min_timeout)
+            self.timeout = (1 - self.ema) * self.timeout + self.ema * target
+        else:
+            # Partial completion: scale in proportion to how far we got —
+            # a nearly-done round grows only slightly.
+            shortfall = max(1.0 - fraction_done, 0.1)
+            self.timeout *= 1.0 + (self.grow - 1.0) * shortfall
+        self.timeout = min(max(self.timeout, self.min_timeout), self.max_timeout)
+        self.history.append(self.timeout)
+        return self.timeout
+
+
+@dataclass
+class PouchController:
+    """Adaptive pouch size (paper §4 lists pouch size as a tunable; the
+    training experiments keep it fixed — so does our reproduction — but the
+    framework exposes adaptation for the host data pipeline)."""
+
+    pouch: int = 100
+    min_pouch: int = 8
+    max_pouch: int = 4096
+
+    def update(self, all_done: bool, utilization: float) -> int:
+        if all_done and utilization > 0.9:
+            self.pouch = min(int(self.pouch * 1.25) + 1, self.max_pouch)
+        elif not all_done:
+            self.pouch = max(int(self.pouch * 0.8), self.min_pouch)
+        return self.pouch
+
+
+def gss_chunk(remaining: int, workers: int) -> int:
+    """Guided self-scheduling chunk: ceil(remaining / workers), ≥ 1."""
+    if remaining <= 0:
+        return 0
+    return max(1, math.ceil(remaining / max(workers, 1)))

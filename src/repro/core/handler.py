@@ -1,0 +1,106 @@
+"""The ACAN Handler (paper §4).
+
+A Handler continuously ``get()``\\ s task tuples from TS, checks that the
+task matches its **capability** (maximum task size — a too-big task is
+*stored* back for another handler, the paper's "process or store" choice),
+checks execution **preconditions** (inputs present in TS — otherwise the
+task is discarded; the Manager's timeout will re-issue it), executes, writes
+results, and marks completion.
+
+Heterogeneity is emulated by a per-handler **speed** (paper §6: ratios
+1:5:10, re-drawn at runtime): after computing a task the handler sleeps
+``cost / speed × time_scale``. Crashes are injected via an event checked
+*inside* the sleep, so a crash genuinely interrupts in-flight work (the
+taken task tuple is lost with the handler — exactly the failure the
+timeout/retransmission discipline must cover).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from repro.core.executor import PreconditionUnmet, TaskExecutor
+from repro.core.manager import content_key
+from repro.core.tasks import TaskDesc
+from repro.core.tuplespace import ANY, TSTimeout, TupleSpace
+
+
+class HandlerCrash(Exception):
+    pass
+
+
+@dataclass
+class SpeedBox:
+    """Thread-safe mutable speed shared with the fault daemon."""
+    speed: float = 1.0
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def get(self) -> float:
+        with self._lock:
+            return self.speed
+
+    def set(self, v: float) -> None:
+        with self._lock:
+            self.speed = v
+
+
+@dataclass
+class Handler:
+    ts: TupleSpace
+    name: str
+    speed: SpeedBox
+    capacity: float = 256.0           # max task size it can handle (4^4)
+    lr: float = 0.01
+    time_scale: float = 2e-6          # seconds of sleep per unit cost at speed 1
+    crash_event: threading.Event = field(default_factory=threading.Event)
+    stop_event: threading.Event = field(default_factory=threading.Event)
+    tasks_done: int = 0
+    tasks_discarded: int = 0
+    tasks_stored: int = 0
+
+    def _maybe_crash(self) -> None:
+        if self.crash_event.is_set():
+            self.crash_event.clear()
+            raise HandlerCrash(self.name)
+
+    def _throttled_sleep(self, seconds: float) -> None:
+        """Sleep in small slices so crash/stop events interrupt work."""
+        deadline = time.monotonic() + seconds
+        while True:
+            self._maybe_crash()
+            if self.stop_event.is_set():
+                return
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                return
+            time.sleep(min(remaining, 0.01))
+
+    def run(self) -> None:
+        executor = TaskExecutor(self.ts, lr=self.lr)
+        while not self.stop_event.is_set():
+            self._maybe_crash()
+            try:
+                key, wire = self.ts.get(("task", ANY), timeout=0.05)
+            except TSTimeout:
+                continue
+            task = TaskDesc.from_wire(wire)
+            if task.cost() > self.capacity:
+                # "store": put it back for a more capable handler.
+                self.ts.put(key, wire)
+                self.tasks_stored += 1
+                time.sleep(0.001)
+                continue
+            # Emulated compute time — proportional to task cost, inversely
+            # to current speed (paper §6.2).
+            self._throttled_sleep(task.cost() * self.time_scale
+                                  / max(self.speed.get(), 1e-6))
+            try:
+                executor.execute(task)
+            except PreconditionUnmet:
+                # Inputs not in TS yet: discard; Manager re-issues (§5.1).
+                self.tasks_discarded += 1
+                continue
+            self.ts.put(("done",) + content_key(task), self.name)
+            self.tasks_done += 1

@@ -1,0 +1,290 @@
+"""The ACAN Manager (paper §4, §5.3).
+
+The Manager:
+
+1. derives prototype tasks for the current sample/stage, partitions them to
+   the uniform task-size cap, and publishes **pouches** (≤ ``pouch_size``
+   task descriptions) into TS with a **timeout**;
+2. upon timeout (or early completion), evaluates completion marks, adapts
+   the timeout (:class:`~repro.core.gss.TimeoutController`), sweeps untaken
+   task tuples, and re-issues unfinished tasks — the timeout/retransmission
+   discipline;
+3. combines stage results (partial sums → full vectors) and commits
+   parameter updates through the §5.4 sliding window;
+4. checkpoints its cursor into TS after every stage, so a crashed Manager
+   can be revived by the daemon and *continue from TS state alone* — the
+   paper's checkpoint-free recovery ("the Manager restart can be programmed
+   to read the tuple space state and continue").
+
+Completion marks are keyed by task *content* (not attempt), so a slow
+handler finishing attempt k still satisfies attempt k+1 — redundant
+execution is harmless by construction.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core.conflict import CommitWindow, tiles_cover
+from repro.core.executor import activation, activation_deriv_from_act
+from repro.core.gss import TimeoutController
+from repro.core.tasks import (LayerSpec, TaskDesc, TaskKind, partition,
+                              prototype_tasks, stage_order)
+from repro.core.tuplespace import ANY, TupleSpace
+
+
+class ManagerCrash(Exception):
+    """Injected fault — the Manager thread dies here."""
+
+
+def content_key(t: TaskDesc) -> tuple:
+    return (t.kind.value, t.layer, t.data_id, t.step,
+            t.in_lo, t.in_hi, t.out_lo, t.out_hi)
+
+
+@dataclass
+class ManagerConfig:
+    layers: list[LayerSpec]
+    epochs: int = 2
+    n_samples: int = 100
+    task_cap: float = 256.0          # 4^4, paper §6
+    pouch_size: int = 100            # paper §6
+    lr: float = 0.01
+    initial_timeout: float = 0.25
+    poll_quantum: float = 0.004
+    strict_timeout: bool = False     # True = always wait the full timeout
+    seed: int = 0
+
+
+@dataclass
+class Manager:
+    ts: TupleSpace
+    cfg: ManagerConfig
+    power_fn: Callable[[], float] = lambda: 0.0
+    crash_event: threading.Event = field(default_factory=threading.Event)
+    stop_event: threading.Event = field(default_factory=threading.Event)
+    controller: TimeoutController = field(default_factory=TimeoutController)
+    window: CommitWindow = field(default_factory=CommitWindow)
+    rounds: int = 0
+    _task_seq: int = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def init_params(self) -> None:
+        """Publish initial weights into TS (fresh start only)."""
+        rng = np.random.default_rng(self.cfg.seed)
+        for l, spec in enumerate(self.cfg.layers):
+            if self.ts.try_read(("w", l)) is None:
+                scale = 1.0 / np.sqrt(spec.n_in)
+                self.ts.put(("w", l), (rng.standard_normal(
+                    (spec.n_out, spec.n_in)) * scale).astype(np.float32))
+                self.ts.put(("b", l), np.zeros(spec.n_out, dtype=np.float32))
+                self.ts.put(("wver", l), 0)
+
+    def _checkpoint_cursor(self, epoch: int, sample: int, stage_idx: int) -> None:
+        self.ts.delete(("mstate", "cursor"))
+        self.ts.put(("mstate", "cursor"), {
+            "epoch": epoch, "sample": sample, "stage_idx": stage_idx,
+            "timeout": self.controller.timeout,
+            "window": self.window.to_state(),
+        })
+
+    def _load_cursor(self) -> tuple[int, int, int]:
+        hit = self.ts.try_read(("mstate", "cursor"))
+        if hit is None:
+            return 0, 0, 0
+        st = hit[1]
+        self.controller.timeout = st.get("timeout", self.controller.timeout)
+        self.window = CommitWindow.from_state(st.get("window", {}))
+        return st["epoch"], st["sample"], st["stage_idx"]
+
+    def _maybe_crash(self) -> None:
+        if self.crash_event.is_set():
+            self.crash_event.clear()
+            raise ManagerCrash()
+
+    # ------------------------------------------------------------- dispatch
+    def _issue(self, tasks: list[TaskDesc]) -> None:
+        items = []
+        for t in tasks:
+            self._task_seq += 1
+            tid = f"t{self._task_seq}-{time.monotonic_ns() & 0xFFFFFF:x}"
+            items.append((("task", tid), t.to_wire()))
+        self.ts.put_many(iter(items))
+
+    def _sweep_untaken(self) -> int:
+        return self.ts.delete(("task", ANY))
+
+    def _pending(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
+        return [t for t in tasks
+                if self.ts.try_read(("done",) + content_key(t)) is None]
+
+    def _run_stage(self, tasks: list[TaskDesc]) -> None:
+        """Pouch-dispatch until every task in the stage has a done mark."""
+        while not self.stop_event.is_set():
+            self._maybe_crash()
+            pending = self._pending(tasks)
+            if not pending:
+                return
+            pouch = pending[: self.cfg.pouch_size]
+            self._issue(pouch)
+            timeout = self.controller.timeout
+            t0 = time.monotonic()
+            while True:
+                self._maybe_crash()
+                time.sleep(self.cfg.poll_quantum)
+                elapsed = time.monotonic() - t0
+                still = self._pending(pouch)
+                if not still and not self.cfg.strict_timeout:
+                    break
+                if elapsed >= timeout:
+                    break
+            elapsed = time.monotonic() - t0
+            still = self._pending(pouch)
+            done_frac = 1.0 - len(still) / max(len(pouch), 1)
+            self.controller.update(not still, elapsed, done_frac)
+            self.rounds += 1
+            self.ts.put(("thist", time.time(), self.rounds),
+                        {"timeout": self.controller.timeout,
+                         "power": self.power_fn(),
+                         "elapsed": elapsed,
+                         "done_frac": done_frac})
+            # Sweep task tuples nobody took before re-issuing stragglers.
+            self._sweep_untaken()
+
+    # ------------------------------------------------------------- combines
+    # Key iteration is SORTED everywhere: fp32 accumulation order must not
+    # depend on handler completion order, or re-executed/raced tasks could
+    # perturb training numerics (determinism is the §5.4 idempotency
+    # guarantee, and it must hold bitwise).
+    def _combine_forward(self, l: int, data_id: int, spec: LayerSpec) -> None:
+        if self.ts.try_read(("pre", l, data_id)) is not None:
+            return
+        keys = sorted(self.ts.keys(("fpart", l, data_id, ANY, ANY, ANY, ANY)))
+        pre = np.array(self.ts.try_read(("b", l))[1], copy=True)
+        for k in keys:
+            ol, oh = k[3], k[4]
+            pre[ol:oh] += self.ts.try_read(k)[1]
+        self.ts.put(("pre", l, data_id), pre.astype(np.float32))
+
+    def _combine_activation(self, l: int, data_id: int, spec: LayerSpec) -> None:
+        if self.ts.try_read(("act", l, data_id)) is not None:
+            return
+        out = np.zeros(spec.n_out, dtype=np.float32)
+        for k in sorted(self.ts.keys(("actpart", l, data_id, ANY, ANY))):
+            out[k[3]:k[4]] = self.ts.try_read(k)[1]
+        self.ts.put(("act", l, data_id), out)
+
+    def _combine_loss(self, data_id: int, step: int) -> None:
+        L = len(self.cfg.layers) - 1
+        if self.ts.try_read(("dy", L, data_id)) is not None:
+            return
+        n_out = self.cfg.layers[-1].n_out
+        loss = 0.0
+        dy = np.zeros(n_out, dtype=np.float32)
+        for k in sorted(self.ts.keys(("losspart", data_id, ANY, ANY))):
+            loss += float(self.ts.try_read(k)[1])
+        for k in sorted(self.ts.keys(("dypart", L, data_id, ANY, ANY))):
+            dy[k[3]:k[4]] = self.ts.try_read(k)[1]
+        self.ts.put(("loss", data_id, step), np.float32(loss))
+        self.ts.put(("losshist", step), float(loss))
+        self.ts.put(("dy", L, data_id), dy)
+
+    def _combine_backward(self, l: int, data_id: int, spec: LayerSpec) -> None:
+        if self.ts.try_read(("gW", l, data_id)) is not None:
+            return
+        gW = np.zeros((spec.n_out, spec.n_in), dtype=np.float32)
+        for k in sorted(self.ts.keys(("gw", l, data_id, ANY, ANY, ANY, ANY))):
+            gW[k[3]:k[4], k[5]:k[6]] = self.ts.try_read(k)[1]
+        gB = np.zeros(spec.n_out, dtype=np.float32)
+        for k in sorted(self.ts.keys(("gb", l, data_id, ANY, ANY))):
+            gB[k[3]:k[4]] = self.ts.try_read(k)[1]
+        self.ts.put(("gW", l, data_id), gW)
+        self.ts.put(("gB", l, data_id), gB)
+        if l > 0:
+            dx = np.zeros(spec.n_in, dtype=np.float32)
+            for k in sorted(self.ts.keys(("bpart", l, data_id, ANY, ANY, ANY, ANY))):
+                dx[k[3]:k[4]] += self.ts.try_read(k)[1]
+            a_prev = self.ts.try_read(("act", l - 1, data_id))[1]
+            self.ts.put(("dy", l - 1, data_id),
+                        (dx * activation_deriv_from_act(a_prev)).astype(np.float32))
+
+    def _commit_update(self, l: int, data_id: int, step: int,
+                       spec: LayerSpec) -> None:
+        """§5.4: overwrite W only when all row tiles are present, exactly
+        once per (layer, step)."""
+        if not self.window.can_commit(l, step):
+            return
+        keys = self.ts.keys(("wnew", l, step, ANY, ANY))
+        if not tiles_cover([(k[3], k[4]) for k in keys], 0, spec.n_out):
+            return
+        W = np.array(self.ts.try_read(("w", l))[1], copy=True)
+        b = np.array(self.ts.try_read(("b", l))[1], copy=True)
+        for k in keys:
+            W[k[3]:k[4]] = self.ts.try_read(k)[1]
+        for k in self.ts.keys(("bnew", l, step, ANY, ANY)):
+            b[k[3]:k[4]] = self.ts.try_read(k)[1]
+        if self.window.commit(l, step):
+            self.ts.delete(("w", l)); self.ts.put(("w", l), W)
+            self.ts.delete(("b", l)); self.ts.put(("b", l), b)
+            ver = self.ts.try_read(("wver", l))
+            self.ts.delete(("wver", l))
+            self.ts.put(("wver", l), (ver[1] if ver else 0) + 1)
+        self.ts.delete(("wnew", l, step, ANY, ANY))
+        self.ts.delete(("bnew", l, step, ANY, ANY))
+
+    def _cleanup_sample(self, data_id: int) -> None:
+        for pat in [("fpart", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("actpart", ANY, data_id, ANY, ANY),
+                    ("losspart", data_id, ANY, ANY),
+                    ("dypart", ANY, data_id, ANY, ANY),
+                    ("gw", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("gb", ANY, data_id, ANY, ANY),
+                    ("bpart", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("gW", ANY, data_id), ("gB", ANY, data_id),
+                    ("pre", ANY, data_id), ("act", ANY, data_id),
+                    ("dy", ANY, data_id)]:
+            self.ts.delete(pat)
+        self.ts.delete(("done", ANY, ANY, data_id, ANY, ANY, ANY, ANY, ANY))
+
+    # ------------------------------------------------------------------ run
+    def run(self) -> None:
+        self.init_params()
+        order = stage_order(len(self.cfg.layers))
+        epoch0, sample0, stage0 = self._load_cursor()
+        n_layers = len(self.cfg.layers)
+        for epoch in range(epoch0, self.cfg.epochs):
+            s0 = sample0 if epoch == epoch0 else 0
+            for sample in range(s0, self.cfg.n_samples):
+                if self.stop_event.is_set():
+                    return
+                step = epoch * self.cfg.n_samples + sample
+                stages = prototype_tasks(self.cfg.layers, sample, step)
+                st0 = stage0 if (epoch == epoch0 and sample == s0) else 0
+                for stage_idx in range(st0, len(order)):
+                    name = order[stage_idx]
+                    self._checkpoint_cursor(epoch, sample, stage_idx)
+                    tasks = []
+                    for proto in stages[name]:
+                        tasks.extend(partition(proto, self.cfg.task_cap))
+                    self._run_stage(tasks)
+                    # Stage-boundary combine ("the Manager updates the
+                    # relevant TS entries as a checkpoint", §5.3).
+                    kind, _, l = name.partition("_")
+                    if kind == "fwd":
+                        self._combine_forward(int(l), sample, self.cfg.layers[int(l)])
+                    elif kind == "act":
+                        self._combine_activation(int(l), sample, self.cfg.layers[int(l)])
+                    elif name == "loss":
+                        self._combine_loss(sample, step)
+                    elif kind == "bwd":
+                        self._combine_backward(int(l), sample, self.cfg.layers[int(l)])
+                    elif kind == "upd":
+                        self._commit_update(int(l), sample, step, self.cfg.layers[int(l)])
+                self._cleanup_sample(sample)
+                self._checkpoint_cursor(epoch, sample + 1, 0)
+        self.ts.put(("mstate", "finished"), True)

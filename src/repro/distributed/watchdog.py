@@ -1,0 +1,75 @@
+"""Step-level timeout/retransmission — the paper's discipline at the pjit
+layer (DESIGN.md §2).
+
+A training/serving step is a *pure* function of (params, batch, rng), so
+re-execution after a timeout is semantically identical to the paper's task
+re-issue: redundant execution is harmless, and the watchdog needs no
+failure detector — only the timeout (Fekete et al.'s impossibility argument
+is the paper's §1 justification; we inherit it).
+
+The adaptive timeout reuses the same GSS controller as the ACAN Manager:
+healthy steps shrink the timeout toward observed latency × slack; a
+straggling step triggers re-execution (on real pods: on the re-formed
+mesh — see elastic.py)."""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Callable
+
+from repro.core.gss import TimeoutController
+
+
+class StepTimeout(Exception):
+    pass
+
+
+class StepFailed(Exception):
+    pass
+
+
+@dataclass
+class StepWatchdog:
+    controller: TimeoutController = field(
+        default_factory=lambda: TimeoutController(timeout=60.0,
+                                                  max_timeout=3600.0))
+    max_retries: int = 3
+    timeouts_fired: int = 0
+    retries_used: int = 0
+
+    def run(self, step_fn: Callable, *args, **kwargs):
+        """Execute ``step_fn`` under the adaptive timeout; re-issue on
+        timeout or failure, up to ``max_retries``."""
+        import time
+        last_exc: Exception | None = None
+        for attempt in range(self.max_retries + 1):
+            result: list = []
+            exc: list = []
+
+            def body() -> None:
+                try:
+                    result.append(step_fn(*args, **kwargs))
+                except Exception as e:          # noqa: BLE001
+                    exc.append(e)
+
+            t0 = time.monotonic()
+            th = threading.Thread(target=body, daemon=True)
+            th.start()
+            th.join(self.controller.timeout)
+            elapsed = time.monotonic() - t0
+            if result:
+                self.controller.update(True, elapsed, 1.0)
+                return result[0]
+            if th.is_alive():
+                # Timeout — the thread may still finish (we cannot kill a
+                # computation, same as a lost handler); we simply re-issue.
+                self.timeouts_fired += 1
+                self.controller.update(False, elapsed, 0.0)
+                last_exc = StepTimeout(
+                    f"step exceeded {self.controller.timeout:.2f}s "
+                    f"(attempt {attempt})")
+            else:
+                last_exc = exc[0] if exc else StepFailed("no result")
+            self.retries_used += 1
+        raise last_exc

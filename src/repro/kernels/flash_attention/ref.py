@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash_attention: naive (materialised-score)
+attention with causal/window/softcap masking."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, q_offset: int = 0):
+    """q: (BH, G, Tq, D); k, v: (BH, Tkv, D)."""
+    BH, G, Tq, D = q.shape
+    Tkv = k.shape[1]
+    s = jnp.einsum("bgqd,bkd->bgqk", q, k,
+                   preferred_element_type=jnp.float32) / (D ** 0.5)
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    q_pos = q_offset + jnp.arange(Tq)[:, None]
+    kv_pos = jnp.arange(Tkv)[None, :]
+    mask = jnp.ones((Tq, Tkv), dtype=bool)
+    if causal:
+        mask &= kv_pos <= q_pos
+    if window > 0:
+        mask &= kv_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bgqk,bkd->bgqd", p.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32).astype(q.dtype)

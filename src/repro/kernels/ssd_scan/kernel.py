@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunked scan.
+
+The sequence is partitioned into uniform chunks — the paper's fixed-size
+task discipline applied along time (DESIGN.md §4). Grid is
+``(B·H, T/Q)`` with the chunk dimension innermost ("arbitrary"): the
+running SSM state ``(N, P)`` lives in VMEM scratch and is carried across
+chunk steps; each chunk step does the intra-chunk quadratic part (three
+small MXU matmuls) plus the state hand-off.
+
+Inputs are pre-expanded to per-head B/C (the ops wrapper repeats groups)
+so the kernel body is a clean per-(batch, head) program."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, s_final_ref,
+            state_ref, *, Q: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q,)
+    a = a_ref[0].astype(jnp.float32)        # scalar (per head)
+    b = b_ref[0].astype(jnp.float32)        # (Q, N)
+    c = c_ref[0].astype(jnp.float32)        # (Q, N)
+    d = d_ref[0].astype(jnp.float32)        # scalar
+
+    dA = dt * a                             # (Q,) ≤ 0
+    cum = jnp.cumsum(dA)                    # (Q,)
+    # Intra-chunk: y_diag[i] = Σ_{j≤i} (c_i·b_j) exp(cum_i - cum_j) dt_j x_j
+    seg = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)                    # (Q, Q)
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+    # Inter-chunk: y_off[i] = exp(cum_i) · c_i @ state   (state: (N, P))
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        c, state_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    # State update: S' = exp(cum_Q) S + Σ_j exp(cum_Q - cum_j) dt_j b_j ⊗ x_j
+    total = cum[-1]
+    w = jnp.exp(total - cum) * dt                                  # (Q,)
+    s_new = jax.lax.dot_general(b * w[:, None], x, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = jnp.exp(total) * state_ref[...] + s_new
+
+    y_ref[0] = (y + d * x).astype(y_ref.dtype)
+
+    @pl.when(ic == pl.num_programs(1) - 1)
+    def _final():
+        s_final_ref[0] = state_ref[...].astype(s_final_ref.dtype)
+
+
+def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
+             interpret: bool = False):
+    """x: (BH, T, P); dt: (BH, T); a, d: (BH,); b, c: (BH, T, N).
+
+    Returns (y: (BH, T, P), final_state: (BH, N, P))."""
+    BH, T, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+
+    kern = functools.partial(_kernel, Q=Q)
+    return pl.pallas_call(
+        kern,
+        grid=(BH, T // Q),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, Q), lambda bh, ic: (bh, ic)),
+            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+            pl.BlockSpec((1, Q, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ic: (bh, ic, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, ic: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, T, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a, b, c, d)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for ssd_scan: the naive per-timestep SSM recurrence
+(sequential over T) — deliberately a *different* algorithm from the
+chunked kernel, so the allclose test validates the chunked math."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, a, b, c, d):
+    """x: (BH, T, P); dt: (BH, T); a, d: (BH,); b, c: (BH, T, N).
+
+    h_t = exp(dt_t a) h_{t-1} + dt_t b_t ⊗ x_t;  y_t = c_t @ h_t + d x_t
+    Returns (y (BH, T, P), final_state (BH, N, P))."""
+    BH, T, P = x.shape
+    N = b.shape[-1]
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp            # (BH,P), (BH,), (BH,N), (BH,N)
+        decay = jnp.exp(dt_t * a)            # (BH,)
+        h = decay[:, None, None] * h + (dt_t[:, None] * b_t)[..., None] \
+            * x_t[:, None, :]                # (BH, N, P)
+        y = jnp.einsum("bnp,bn->bp", h, c_t) + d[:, None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2),
+          dt.astype(jnp.float32).transpose(1, 0),
+          b.astype(jnp.float32).transpose(1, 0, 2),
+          c.astype(jnp.float32).transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

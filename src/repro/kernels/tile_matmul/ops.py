@@ -1,0 +1,37 @@
+"""Jitted public wrapper for tile_matmul: picks MXU-aligned block sizes,
+interpret mode off-TPU, and falls back to the jnp oracle for shapes the
+kernel's divisibility contract rejects."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.tile_matmul.kernel import tile_matmul
+from repro.kernels.tile_matmul.ref import tile_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pick(dim: int, target: int) -> int:
+    b = min(target, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+@partial(jax.jit, static_argnames=("activation", "bm", "bn", "bk"))
+def matmul(x, w, b=None, *, activation: str = "none", bm: int = 256,
+           bn: int = 256, bk: int = 512):
+    """ACAN task-grid GEMM with fused bias+activation epilogue."""
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn, bk = _pick(M, bm), _pick(N, bn), _pick(K, bk)
+    # VREG/MXU alignment: fall back to the oracle for degenerate tiles.
+    if min(bm, bn, bk) < 8:
+        return tile_matmul_ref(x, w, b, activation=activation)
+    return tile_matmul(x, w, b, activation=activation, bm=bm, bn=bn, bk=bk,
+                       interpret=not _on_tpu())

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for tile_matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_ACTS = {
+    "none": lambda x: x,
+    "tanh": jnp.tanh,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+}
+
+
+def tile_matmul_ref(x, w, b=None, *, activation: str = "none",
+                    out_dtype=None):
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    out = _ACTS[activation](out)
+    return out.astype(out_dtype or x.dtype)

@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+the production mesh, extract memory/cost/collective analyses, derive the
+three roofline terms, and persist one JSON per cell.
+
+MUST be the first jax-touching import in the process (device count locks
+at first init) — hence the XLA_FLAGS lines above everything else.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch jamba_1_5_large_398b \
+        --shape train_4k --mesh single --force
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, ARCH_IDS, applicable_shapes, get_config, input_specs
+from repro.distributed import sharding as shd
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.models import model as M
+from repro.optim.optimizer import OptConfig
+
+# TPU v5e hardware model (per chip) — roofline denominators.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+OUT_DIR = "experiments/dryrun"
+
+
+def opt_config_for(arch: str) -> OptConfig:
+    # jamba-398B: fp32 moments don't fit 16 GB/chip → bf16 moments
+    # (DESIGN.md §5; validated in §Roofline).
+    if arch == "jamba_1_5_large_398b":
+        return OptConfig(moment_dtype="bfloat16")
+    return OptConfig()
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             rules_override: dict | None = None,
+             opt_cfg: OptConfig | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    shd.FALLBACK_LOG.clear()
+
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh, opt_cfg or opt_config_for(arch),
+                      rules_override=rules_override)
+    lowered = lower_cell(cell)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    hlo = analyze_hlo(compiled.as_text(), total_devices=n_dev)
+
+    # Loop-corrected per-device numbers from the HLO census (XLA's own
+    # cost_analysis counts while bodies once — see hlo_analysis.py).
+    flops = hlo.flops
+    bytes_accessed = hlo.hbm_bytes
+    coll_bytes = hlo.collective_bytes
+
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    n_active = M.active_param_count(cfg)
+    tokens = shape.batch * (shape.seq if shape.kind == "train" else
+                            shape.seq if shape.kind == "prefill" else 1)
+    if shape.kind == "train":
+        model_flops = 6.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * tokens
+    model_flops_per_dev = model_flops / n_dev
+    useful = model_flops_per_dev / flops if flops else 0.0
+
+    mem = {}
+    if ma is not None:
+        for a in ("temp_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "peak_memory_in_bytes",
+                  "alias_size_in_bytes"):
+            mem[a] = int(getattr(ma, a, 0))
+
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "kind": shape.kind, "devices": n_dev,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops_per_dev": flops, "bytes_per_dev": bytes_accessed,
+        "collective_bytes_per_dev": coll_bytes,
+        "collective_by_kind": hlo.collective_bytes_by_kind,
+        "collective_ops": len(hlo.collectives),
+        "memory": mem,
+        "terms": terms, "dominant": dominant,
+        "params_total": M.param_count(cfg),
+        "params_active": n_active,
+        "model_flops_per_dev": model_flops_per_dev,
+        "useful_flops_ratio": useful,
+        "sharding_fallbacks": list(dict.fromkeys(shd.FALLBACK_LOG))[:40],
+    }
+
+
+def cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> None:
+    global OUT_DIR
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    OUT_DIR = args.out
+    os.makedirs(OUT_DIR, exist_ok=True)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    n_dev = len(jax.devices())
+    assert n_dev == 512, f"dry-run needs 512 host devices, got {n_dev}"
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (applicable_shapes(cfg) if args.shape == "all"
+                  else args.shape.split(","))
+        for shape_name in shapes:
+            for mesh_kind in meshes:
+                path = cell_path(arch, shape_name, mesh_kind)
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {arch} {shape_name} {mesh_kind}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh_kind)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                    t = rec["terms"]
+                    print(f"[ok] {arch} {shape_name} {mesh_kind} "
+                          f"compile={rec['compile_s']}s "
+                          f"comp={t['compute_s']:.2e}s mem={t['memory_s']:.2e}s "
+                          f"coll={t['collective_s']:.2e}s dom={rec['dominant']} "
+                          f"peak={rec['memory'].get('peak_memory_in_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                except Exception as e:
+                    failures.append((arch, shape_name, mesh_kind, repr(e)))
+                    print(f"[FAIL] {arch} {shape_name} {mesh_kind}: {e}",
+                          flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

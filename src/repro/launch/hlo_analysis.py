@@ -1,0 +1,285 @@
+"""Static analysis of compiled (post-SPMD) HLO text.
+
+Why not just ``compiled.cost_analysis()``? Two reasons measured in this
+repo (see EXPERIMENTS.md §Dry-run):
+
+1. XLA's cost analysis counts a ``while`` body **once** — our layer stack
+   is a scan, so flops/bytes would be undercounted by ~n_layers ×.
+2. It does not report collective bytes at all.
+
+So we parse ``compiled.as_text()`` ourselves:
+
+- reconstruct the computation graph (entry → while bodies/conds →
+  conditional branches), read each while's trip count from the constant
+  in its condition computation, and propagate **multipliers**;
+- census per-op: dot/convolution FLOPs (from shapes + contracting dims),
+  an HBM-traffic proxy (operand + result bytes of top-level ops — the
+  same perfect-fusion assumption XLA's own analysis makes), and
+  collectives with ring-model effective bytes;
+- fusion-called computations are *excluded* from the census (their
+  internals are on-chip); only entry/while/conditional computations count.
+
+Everything is per-device: post-SPMD HLO is the per-device program.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}]+))\s*"
+    r"([\w\-]+)\(")
+_ARGS_RE = re.compile(r"%([\w\.\-]+)")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_RE = re.compile(r"(?:true_computation|false_computation)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"%?([\w\.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_CMP_RE = re.compile(
+    r"compare\(\s*%?([\w\.\-]+),\s*%?([\w\.\-]+)\s*\),\s*direction=(LT|LE|GT|GE)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_WINDOW_RE = re.compile(r"window=\{size=([\dx]+)")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "iota", "after-all", "partition-id", "replica-id",
+             "while", "conditional", "custom-call", "opt-barrier"}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def shape_info(type_str: str):
+    """Returns (bytes, elems, dims of the first array in the type)."""
+    total_bytes = 0
+    first_dims = None
+    elems = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total_bytes += n * _DTYPE_BYTES[dt]
+        if first_dims is None:
+            first_dims = [int(d) for d in dims.split(",") if d] if dims else []
+            elems = n
+    return total_bytes, elems, first_dims or []
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    computation: str
+    multiplier: float = 1.0
+
+    def effective_bytes(self) -> float:
+        n = max(self.group_size, 1)
+        ring = (n - 1) / n if n > 1 else 0.0
+        b = self.result_bytes
+        if self.kind == "all-gather":
+            return b * ring
+        if self.kind == "all-reduce":
+            return 2.0 * b * ring
+        if self.kind == "reduce-scatter":
+            return float(b * (n - 1))     # result is the shard; full = b·n
+        if self.kind == "all-to-all":
+            return b * ring
+        return float(b)                   # collective-permute
+
+
+@dataclass
+class HloCensus:
+    total_devices: int
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: list = field(default_factory=list)
+    trip_counts: dict = field(default_factory=dict)
+    dot_flops_by_comp: dict = field(default_factory=dict)
+
+    @property
+    def collective_bytes_by_kind(self) -> dict:
+        out: dict = defaultdict(float)
+        for op in self.collectives:
+            out[op.kind] += op.effective_bytes() * op.multiplier
+        return dict(out)
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(self.collective_bytes_by_kind.values())
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _infer_trip(cond_lines: list[str]) -> float:
+    body = "\n".join(cond_lines)
+    consts = {m.group(1): int(m.group(2))
+              for m in (_CONST_RE.search(ln) for ln in cond_lines) if m}
+    m = _CMP_RE.search(body)
+    if m:
+        a, b, direction = m.groups()
+        val = consts.get(b, consts.get(a))
+        if val is not None:
+            return float(val) if direction in ("LT", "GT") else float(val + 1)
+    # Post-opt HLO wraps the compare in a kLoop fusion; the loop bound is
+    # still an s32[] constant in the condition computation. lax.scan/fori
+    # conditions are `i < N` — take the largest constant as N.
+    if consts:
+        val = max(consts.values())
+        if val >= 1:
+            # `/le` in the fused compare's metadata means trip = N+1
+            return float(val + 1) if re.search(r"cond/le\b", body) else float(val)
+    return 1.0
+
+
+def analyze_hlo(text: str, total_devices: int) -> HloCensus:
+    comps = _split_computations(text)
+
+    # --- call graph: entry / while / conditional edges only --------------
+    edges: list[tuple[str, str, float]] = []
+    included: set[str] = set()
+    trip_counts: dict[str, float] = {}
+    for name, lines in comps.items():
+        body = "\n".join(lines)
+        for cond, bod in _WHILE_RE.findall(body):
+            trip = _infer_trip(comps.get(cond, []))
+            trip_counts[bod] = trip
+            edges.append((name, bod, trip))
+            edges.append((name, cond, trip + 1))
+        for m in _BRANCH_RE.findall(body):
+            for callee in re.findall(r"%?([\w\.\-]+)", m):
+                if callee in comps:
+                    edges.append((name, callee, 1.0))
+        for callee in _TF_RE.findall(body):
+            if callee in comps:
+                edges.append((name, callee, 1.0))
+
+    called = {c for _, c, _ in edges}
+    roots = [n for n in comps
+             if n not in called and ("main" in n or "ENTRY" in n)]
+    if not roots:
+        roots = [n for n in comps if n not in called][:1]
+    mult: dict[str, float] = defaultdict(float)
+    for r in roots:
+        mult[r] = 1.0
+        included.add(r)
+    for _ in range(len(comps) + 1):
+        changed = False
+        for caller, callee, k in edges:
+            if caller not in included:
+                continue
+            new = mult[caller] * k
+            included.add(callee)
+            if new > mult[callee]:
+                mult[callee] = new
+                changed = True
+        if not changed:
+            break
+
+    census = HloCensus(total_devices=total_devices, trip_counts=trip_counts)
+
+    for name in included:
+        m = max(mult.get(name, 1.0), 1.0)
+        lines = comps[name]
+        # symbol table: op name -> (bytes, elems, dims)
+        symtab: dict[str, tuple] = {}
+        for ln in lines:
+            om = _OP_RE.match(ln)
+            if om:
+                symtab[om.group(1)] = shape_info(om.group(2))
+        comp_flops = 0.0
+        for ln in lines:
+            om = _OP_RE.match(ln)
+            if om is None:
+                continue
+            res_name, res_type, opcode = om.groups()
+            if opcode in _SKIP_OPS:
+                continue
+            res_bytes, res_elems, res_dims = shape_info(res_type)
+            # operand bytes (first arg list segment up to matching paren is
+            # approximated by all %refs on the line before attribute section)
+            arg_str = ln.split("(", 1)[1]
+            arg_str = arg_str.split("),", 1)[0]
+            op_bytes = res_bytes
+            for ref in _ARGS_RE.findall(arg_str):
+                if ref in symtab and ref != res_name:
+                    op_bytes += symtab[ref][0]
+            is_coll = opcode.replace("-start", "") in _COLLECTIVES
+            if is_coll:
+                kind = opcode.replace("-start", "")
+                b = res_bytes // 2 if opcode.endswith("-start") else res_bytes
+                g = total_devices
+                gi = _GROUPS_IOTA.search(ln)
+                gl = _GROUPS_LIST.search(ln)
+                if gi:
+                    g = int(gi.group(2))
+                elif gl:
+                    g = len([x for x in gl.group(1).split(",") if x.strip()])
+                census.collectives.append(CollectiveOp(
+                    kind=kind, result_bytes=b, group_size=g,
+                    computation=name, multiplier=m))
+                continue
+            if opcode.endswith("-done"):
+                continue
+            # Dynamic-update-slice (and fusions rooted in one) is in-place:
+            # the result aliases operand 0, and only the updated slice
+            # moves. Counting result+operands at full size inflated scan
+            # accumulators by the buffer/slice ratio (measured 8× on the
+            # flash p-buffers). Keep the non-aliased operand bytes only.
+            if (opcode == "dynamic-update-slice"
+                    or (opcode == "fusion"
+                        and "dynamic-update-slice" in res_name)):
+                op_bytes = max(op_bytes - 2 * res_bytes, 0)
+            census.hbm_bytes += op_bytes * m
+            if opcode in ("dot", "dot-general"):
+                flops = 2.0 * res_elems
+                cm = _LHS_CONTRACT.search(ln)
+                refs = _ARGS_RE.findall(arg_str)
+                if cm is not None and refs and refs[0] in symtab:
+                    lhs_dims = symtab[refs[0]][2]
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(lhs_dims):
+                            flops *= lhs_dims[int(ci)]
+                comp_flops += flops
+                census.flops += flops * m
+            elif opcode == "convolution":
+                wm = _WINDOW_RE.search(ln)
+                k = 1
+                if wm:
+                    for d in wm.group(1).split("x"):
+                        k *= int(d)
+                census.flops += 2.0 * res_elems * k * m
+        if comp_flops:
+            census.dot_flops_by_comp[name] = comp_flops
+    return census

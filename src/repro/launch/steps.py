@@ -1,0 +1,136 @@
+"""Step functions (train / prefill / decode) + their sharding trees.
+
+``build_cell`` assembles everything the dry-run and the real runners need
+for one (arch × shape × mesh): abstract inputs, NamedShardings, and the
+jittable step — single source of truth so the dry-run compiles exactly
+what the trainer runs."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+from repro.configs.base import Shape, batch_logical_axes, input_specs
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.models.common import tree_abstract
+from repro.optim.optimizer import (OptConfig, abstract_opt_state,
+                                   adamw_update, init_opt_state,
+                                   opt_shardings)
+
+
+def rules_for(cfg: M.ModelConfig, shape: Shape) -> dict:
+    table = {"fsdp": shd.FSDP_RULES, "dp_attn": shd.DP_ATTN_RULES,
+             "tp": shd.DEFAULT_RULES}
+    rules = dict(table[cfg.rules_name])
+    if shape.kind == "decode" and shape.batch == 1:
+        # batch=1 long-context: shard the cache sequence over both axes
+        rules["kv_seq"] = ("data", "model")
+    return rules
+
+
+def _sds(tree_specs):
+    return tree_abstract(tree_specs)
+
+
+def _batch_shardings(cfg, shape, rules, mesh):
+    axes = batch_logical_axes(cfg, shape)
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, sds in specs.items():
+        la = axes.get(k, ())
+        ps = shd.resolve_pspec(sds.shape, la, rules, mesh)
+        out[k] = NamedSharding(mesh, ps)
+    return out
+
+
+@dataclass
+class Cell:
+    kind: str
+    step: Callable
+    args_abstract: tuple
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple
+    rules: dict
+    mesh: Mesh
+
+
+def make_train_step(cfg: M.ModelConfig, opt_cfg: OptConfig):
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return M.train_loss(p, cfg, batch)
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+    return train_step
+
+
+def make_prefill_step(cfg: M.ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch)
+    return prefill_step
+
+
+def make_decode_step(cfg: M.ModelConfig):
+    def decode_step(params, cache, batch):
+        return M.decode_step(params, cfg, cache, batch)
+    return decode_step
+
+
+def build_cell(cfg: M.ModelConfig, shape: Shape, mesh: Mesh,
+               opt_cfg: OptConfig | None = None,
+               rules_override: dict | None = None) -> Cell:
+    rules = rules_override or rules_for(cfg, shape)
+    pspecs = M.param_specs(cfg)
+    params_abs = _sds(pspecs)
+    params_sh = shd.tree_shardings(pspecs, rules, mesh)
+    batch_abs = input_specs(cfg, shape)
+    batch_sh = _batch_shardings(cfg, shape, rules, mesh)
+    repl = NamedSharding(mesh, PartitionSpec())
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or OptConfig()
+        opt_abs = abstract_opt_state(params_abs, opt_cfg)
+        opt_sh = opt_shardings(params_sh, repl, opt_cfg)
+        step = make_train_step(cfg, opt_cfg)
+        return Cell("train", step,
+                    (params_abs, opt_abs, batch_abs),
+                    (params_sh, opt_sh, batch_sh),
+                    (params_sh, opt_sh, None),
+                    (0, 1), rules, mesh)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        cache_specs = M.cache_spec_tree(cfg, shape.batch, shape.seq)
+        cache_sh = shd.tree_shardings(cache_specs, rules, mesh)
+        return Cell("prefill", step,
+                    (params_abs, batch_abs),
+                    (params_sh, batch_sh),
+                    (cache_sh, None),
+                    (), rules, mesh)
+
+    # decode
+    cache_specs = M.cache_spec_tree(cfg, shape.batch, shape.seq)
+    cache_abs = _sds(cache_specs)
+    cache_sh = shd.tree_shardings(cache_specs, rules, mesh)
+    step = make_decode_step(cfg)
+    return Cell("decode", step,
+                (params_abs, cache_abs, batch_abs),
+                (params_sh, cache_sh, batch_sh),
+                (None, cache_sh),
+                (1,), rules, mesh)
+
+
+def lower_cell(cell: Cell):
+    with shd.use_rules(cell.rules, cell.mesh):
+        jitted = jax.jit(cell.step,
+                         in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings,
+                         donate_argnums=cell.donate_argnums)
+        return jitted.lower(*cell.args_abstract)

@@ -1,0 +1,222 @@
+"""Attention math: flash-style chunked attention (train/prefill) and dense
+decode attention over a (possibly ring-buffered) KV cache.
+
+Memory discipline: train/prefill attention never materialises the full
+``(Tq, Tkv)`` score matrix — it runs an online-softmax over KV chunks inside
+a ``lax.scan``, with an outer ``lax.map`` over Q chunks. This is the same
+algorithm as the Pallas ``flash_attention`` kernel (``kernels/flash_attention``)
+— the jnp version here is both the oracle for the kernel and the path the
+multi-pod dry-run lowers (Pallas does not lower on the host platform).
+
+Decode attention is written densely on purpose: with the cache sequence
+axis sharded over mesh axes, GSPMD turns the softmax + PV contraction into
+the flash-decoding split-K pattern (partial softmax, two small all-reduces)
+automatically — see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard_act
+from repro.models.common import soft_cap
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class AttnCfg:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    window: int = 0            # 0 = full attention; >0 = sliding window
+    rope_theta: float = 1e4
+    qk_norm: bool = False
+    softcap: float = 0.0
+    bias: bool = False         # qkv projection bias (qwen-style)
+    # MLA (DeepSeek-V2); when kv_lora_rank > 0 the MLA path is used.
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    @property
+    def is_mla(self) -> bool:
+        return self.kv_lora_rank > 0
+
+    @property
+    def q_group(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+# ---------------------------------------------------------------------------
+# Flash-style chunked attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, q_offset: int = 0,
+                      q_chunk: int = 512, kv_chunk: int = 512,
+                      remat_qblock: bool = True):
+    """Online-softmax attention in FLAT-head layout.
+
+    q: (B, Tq, H, Dk); k: (B, Tkv, H, Dk); v: (B, Tkv, H, Dv)
+    returns (B, Tq, H, Dv)
+
+    GQA callers repeat KV heads to H *before* this function (see
+    :func:`gqa_attention`): a grouped (B, T, Hkv, G, D) layout splits the
+    head dimension into two factors neither of which divides a 16-way
+    model axis — measured on danube-1.8b, GSPMD then shards Hkv×G as 8×2
+    and emits full-replication all-gathers of score-sized tensors inside
+    the backward scan (EXPERIMENTS.md §Perf iterations 1-2). Flat heads
+    shard cleanly; the Pallas kernel keeps the grouped layout internally
+    where it belongs (per-KV-head HBM reuse on real hardware).
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0]
+    (chunked prefill / decode-prefill continuation support).
+    """
+    B, Tq, H, Dk = q.shape
+    Tkv = k.shape[1]
+    Dv = v.shape[-1]
+    q_chunk = min(q_chunk, Tq)
+    kv_chunk = min(kv_chunk, Tkv)
+    # Pad ragged tails to the chunk grid; padded KV is masked below and
+    # padded Q rows are sliced off at the end.
+    Tq_real, Tkv_real = Tq, Tkv
+    pad_q = (-Tq) % q_chunk
+    pad_kv = (-Tkv) % kv_chunk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        Tq += pad_q
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        Tkv += pad_kv
+    nq, nk = Tq // q_chunk, Tkv // kv_chunk
+    scale = 1.0 / (Dk ** 0.5)
+
+    k = shard_act(k, ("attn_batch", "seq", "heads", None))
+    v = shard_act(v, ("attn_batch", "seq", "heads", None))
+    kc = k.reshape(B, nk, kv_chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, kv_chunk, H, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_block(args):
+        qi, q_blk = args            # q_blk: (B, Cq, H, Dk)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kv):
+            m, l, acc = carry
+            kj, k_blk, v_blk = kv   # (B, Ck, H, D*)
+            kv_pos = kj * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bqhd,bkhd->bhqk", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap > 0:
+                s = soft_cap(s, softcap)
+            mask = (kv_pos[None, :] < Tkv_real)
+            if causal:
+                mask &= kv_pos[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kv_pos[None, :] > q_pos[:, None] - window
+            mask = jnp.broadcast_to(mask, (q_chunk, kv_chunk))
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B, Cq, H, Dv)
+
+    qb = q.reshape(B, nq, q_chunk, H, Dk).transpose(1, 0, 2, 3, 4)
+    # Checkpointing the q-block keeps the kv-scan residuals out of the
+    # fwd/bwd boundary (the backward recomputes the chunk forward locally)
+    # — §Perf iteration 1.
+    body = jax.checkpoint(q_block) if remat_qblock else q_block
+    out = jax.lax.map(body, (jnp.arange(nq), qb))             # (nq, B, Cq, ...)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Tq, H, Dv)
+    return out[:, :Tq_real]
+
+
+def gqa_attention(q, k, v, cfg: AttnCfg, *, q_offset: int = 0,
+                  q_chunk: int = 512, kv_chunk: int = 512):
+    """q: (B, T, Hq, Dk) → (B, T, Hq, Dv); k/v: (B, T, Hkv, D*).
+
+    KV heads are repeated to Hq (flat layout) — see chunked_attention's
+    docstring for why; the G× activation-memory cost is the price of a
+    clean head sharding on the jnp path (the Pallas kernel reuses KV
+    tiles natively instead)."""
+    B, T, Hq, Dk = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.window,
+                            softcap=cfg.softcap, q_offset=q_offset,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk)
+    return out.reshape(B, T, Hq, -1)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q, k_cache, v_cache, valid_len, cfg: AttnCfg):
+    """q: (B, Hq, Dk); caches: (B, S, Hkv, D*); valid_len: scalar int —
+    number of valid cache slots (ring caches pass the full capacity).
+
+    Dense on purpose: GSPMD splits the softmax over the sharded S axis
+    (flash-decoding split-K) with two small all-reduces.
+    """
+    B, S, Hkv, Dk = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, Dk)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) / (Dk ** 0.5)
+    if cfg.softcap > 0:
+        s = soft_cap(s, cfg.softcap)
+    valid = jnp.arange(S) < valid_len
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, -1).astype(q.dtype)
+
+
+def mla_decode_attention(q_nope, q_rope, c_cache, krope_cache, w_uk, w_uv,
+                         valid_len, cfg: AttnCfg):
+    """Absorbed MLA decode (DeepSeek-V2 §"low-rank KV joint compression").
+
+    q_nope: (B, H, Dn); q_rope: (B, H, Dr)
+    c_cache: (B, S, R);  krope_cache: (B, S, Dr)
+    w_uk: (R, H, Dn);    w_uv: (R, H, Dv)
+    Attention runs entirely in the compressed latent space — the cache is
+    R + Dr per token instead of 2·H·D (the paper-assigned arch's memory
+    feature; see DESIGN.md §4).
+    """
+    B, S, R = c_cache.shape
+    scale = 1.0 / ((cfg.qk_nope_dim + cfg.qk_rope_dim) ** 0.5)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)          # (B, H, R)
+    s = (jnp.einsum("bhr,bsr->bhs", q_lat, c_cache,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhd,bsd->bhs", q_rope, krope_cache,
+                      preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(S) < valid_len
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out_lat = jnp.einsum("bhs,bsr->bhr", p.astype(c_cache.dtype), c_cache,
+                         preferred_element_type=jnp.float32)
+    return jnp.einsum("bhr,rhv->bhv", out_lat.astype(q_nope.dtype), w_uv)

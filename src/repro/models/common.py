@@ -1,0 +1,157 @@
+"""Shared model plumbing: parameter specs (single source of truth for shape,
+dtype AND logical sharding axes), norms, rotary embeddings.
+
+Every parameter is declared once as a :class:`ParamSpec`; the same tree
+serves three consumers:
+
+- ``abstract(tree)``   → ShapeDtypeStruct tree (dry-run lowering, no alloc)
+- ``initialize(tree)`` → concrete random init (smoke tests / examples)
+- ``axes(tree)``       → logical-axis tree consumed by
+  :mod:`repro.distributed.sharding` to build NamedShardings with
+  divisibility fallback.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary (mapped to mesh axes by distributed/sharding.py)
+# ---------------------------------------------------------------------------
+# "embed"   : d_model          — FSDP candidate ("data")
+# "mlp"     : d_ff             — tensor parallel ("model")
+# "heads"   : attention heads  — tensor parallel ("model")
+# "kv_heads": kv heads         — tensor parallel when divisible
+# "vocab"   : vocabulary       — tensor parallel ("model")
+# "experts" : MoE experts      — expert parallel ("model")
+# "stack"   : scan/period axis — never sharded
+# None      : replicated
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"      # normal | zeros | ones | small
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_abstract(tree, dtype_override=None):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype_override or s.dtype),
+        tree, is_leaf=is_spec)
+
+
+def tree_axes(tree):
+    return jax.tree.map(lambda s: s.axes, tree, is_leaf=is_spec)
+
+
+def tree_initialize(tree, key, dtype_override=None):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for s, k in zip(leaves, keys):
+        dt = dtype_override or s.dtype
+        if s.init == "zeros":
+            out.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            out.append(jnp.ones(s.shape, dt))
+        else:
+            sc = s.scale if s.init == "normal" else 0.006
+            out.append((jax.random.normal(k, s.shape, jnp.float32) * sc).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def stack_specs(spec_tree, n: int):
+    """Stacked (scan) variant of a spec tree: leading "stack" axis."""
+    return jax.tree.map(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=("stack",) + s.axes),
+        spec_tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def rms_norm(x, scale, eps: float = 1e-6):
+    return _rms_norm_fwd(x, scale, eps)[0]
+
+
+def _rms_norm_impl(x, scale, eps):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(jnp.square(x32), axis=-1, keepdims=True) + eps)
+    return (x32 * r * scale.astype(jnp.float32)).astype(dt), r
+
+
+def _rms_norm_fwd(x, scale, eps):
+    y, r = _rms_norm_impl(x, scale, eps)
+    return y, (x, scale, r)
+
+
+def _rms_norm_bwd(res, g):
+    """Activation grad returned in x.dtype (fp32 math internally).
+
+    Without this, the fp32 upcast inside the norm leaks into the backward
+    graph and the per-layer tensor-parallel all-reduces of the residual
+    gradient run in fp32 — 2× the collective bytes (measured on
+    danube-1.8b train, EXPERIMENTS.md §Perf iteration 5). Param grads stay
+    fp32."""
+    x, scale, r = res
+    d = x.shape[-1]
+    x32 = x.astype(jnp.float32)
+    g32 = g.astype(jnp.float32)
+    gs = g32 * scale.astype(jnp.float32)
+    dot = jnp.sum(gs * x32, axis=-1, keepdims=True)
+    dx = (gs - x32 * (r * r) * dot / d) * r
+    dscale = jnp.sum(g32 * x32 * r,
+                     axis=tuple(range(x.ndim - 1))).astype(jnp.float32)
+    return dx.astype(x.dtype), dscale.astype(scale.dtype), None
+
+
+rms_norm.defvjp(_rms_norm_fwd, _rms_norm_bwd)
+
+
+def norm_spec(dim: int, dtype=jnp.float32) -> ParamSpec:
+    return ParamSpec((dim,), (None,), dtype, init="ones")
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x, positions, theta: float = 1e4):
+    """x: (..., T, H, D) with positions (..., T). Rotates pairs (i, i+D/2)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(d, theta))          # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., T, D/2)
+    cos = jnp.cos(angles)[..., :, None, :]                   # (..., T, 1, D/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def soft_cap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

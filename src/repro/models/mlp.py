@@ -1,0 +1,39 @@
+"""Dense feed-forward variants: SwiGLU (llama family) and GELU (musicgen)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamSpec
+
+
+@dataclass(frozen=True)
+class DenseFfnCfg:
+    d_ff: int
+    kind: str = "swiglu"       # swiglu | gelu
+
+
+def dense_ffn_specs(d_model: int, cfg: DenseFfnCfg, dtype) -> dict:
+    if cfg.kind == "swiglu":
+        return {
+            "w_gate": ParamSpec((d_model, cfg.d_ff), ("embed", "mlp"), dtype),
+            "w_up": ParamSpec((d_model, cfg.d_ff), ("embed", "mlp"), dtype),
+            "w_down": ParamSpec((cfg.d_ff, d_model), ("mlp", "embed"), dtype),
+        }
+    return {
+        "w_up": ParamSpec((d_model, cfg.d_ff), ("embed", "mlp"), dtype),
+        "b_up": ParamSpec((cfg.d_ff,), ("mlp",), dtype, init="zeros"),
+        "w_down": ParamSpec((cfg.d_ff, d_model), ("mlp", "embed"), dtype),
+        "b_down": ParamSpec((d_model,), (None,), dtype, init="zeros"),
+    }
+
+
+def dense_ffn(x, p, cfg: DenseFfnCfg):
+    if cfg.kind == "swiglu":
+        gate = jax.nn.silu(x @ p["w_gate"])
+        return (gate * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]

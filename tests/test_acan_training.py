@@ -1,0 +1,85 @@
+"""The paper's three experiments, scaled for CI (§6): feasibility,
+adaptability, robustness — plus the §5.4 conflict-resolution window."""
+
+import numpy as np
+import pytest
+
+from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec
+from repro.core.conflict import CommitWindow, tiles_cover
+
+
+def _small_cfg(**kw):
+    base = dict(layers=[LayerSpec(32, 32), LayerSpec(32, 1)],
+                n_handlers=4, epochs=2, n_samples=10, task_cap=64.0,
+                pouch_size=50, lr=0.02, time_scale=1e-6,
+                initial_timeout=0.1, wall_limit=120.0, seed=0)
+    base.update(kw)
+    return CloudConfig(**base)
+
+
+def test_exp1_feasibility_loss_decreases():
+    res = ACANCloud(_small_cfg(fault_plan=FaultPlan(interval=1e9))).run()
+    losses = [l for _, l in res.loss_history]
+    assert len(losses) == 20          # 2 epochs × 10 samples
+    epoch1, epoch2 = np.mean(losses[:10]), np.mean(losses[10:])
+    assert epoch2 < epoch1, (epoch1, epoch2)
+    assert res.ledger_ok
+    assert res.manager_revivals == 0
+
+
+def test_exp2_adaptability_inverse_timeout_power():
+    res = ACANCloud(_small_cfg(
+        epochs=1,
+        fault_plan=FaultPlan(interval=0.15, speed_levels=(1.0, 5.0, 10.0),
+                             p_speed_change=1.0, seed=3))).run()
+    th = res.timeout_history
+    t = np.array([x[1] for x in th])
+    p = np.array([x[2] for x in th])
+    mask = p > 0
+    assert mask.sum() > 10
+    r = np.corrcoef(t[mask], p[mask])[0, 1]
+    assert r < 0, f"timeout should fall as power rises (r={r:.3f})"
+    assert res.speed_changes >= 2
+
+
+def test_exp3_robustness_crashes_everywhere():
+    res = ACANCloud(_small_cfg(
+        fault_plan=FaultPlan(interval=0.25, speed_levels=(1.0, 5.0, 10.0),
+                             p_speed_change=1.0, p_handler_crash=1.0,
+                             p_manager_crash=1.0, seed=1))).run()
+    losses = [l for _, l in res.loss_history]
+    # Training completed despite 100%-probability crashes of everything
+    assert len(losses) == 20
+    assert np.mean(losses[10:]) < np.mean(losses[:10])
+    assert res.manager_revivals >= 1
+    assert res.handler_revivals >= 1
+    assert res.ledger_ok
+
+
+def test_commit_window_dedup():
+    w = CommitWindow()
+    assert w.commit(0, 0)
+    assert not w.commit(0, 0)         # duplicate update rejected (§5.4)
+    assert w.duplicates_rejected == 1
+    assert not w.commit(0, -1)        # stale rejected
+    assert w.commit(0, 1)
+    assert w.commit(1, 0)             # per-layer windows independent
+
+
+def test_tiles_cover():
+    assert tiles_cover([(0, 4), (4, 8)], 0, 8)
+    assert not tiles_cover([(0, 4), (5, 8)], 0, 8)     # gap
+    assert tiles_cover([(0, 5), (3, 8)], 0, 8)         # overlap is fine
+    assert not tiles_cover([], 0, 8)
+
+
+def test_manager_restart_mid_training_continues():
+    """Kill the manager once, mid-run, without handler faults — resumes
+    from the TS cursor and completes every sample exactly once."""
+    res = ACANCloud(_small_cfg(
+        epochs=1,
+        fault_plan=FaultPlan(interval=0.4, p_manager_crash=1.0,
+                             seed=2))).run()
+    steps = [s for s, _ in res.loss_history]
+    assert sorted(set(steps)) == list(range(10))
+    assert res.manager_revivals >= 1

@@ -1,0 +1,127 @@
+"""Per-arch smoke tests (assignment requirement): every assigned
+architecture instantiates a REDUCED same-family config and runs a forward
+/ train step on CPU — output shapes + no NaNs. Plus the strongest
+integration check we have: prefill→decode continuity equals full prefill
+logits (same math through two different code paths and cache layouts)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.serve import serve
+from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _train_batch(cfg, B=2, T=32, seed=0):
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "embeds":
+        return {"embeds": jnp.asarray(rng.standard_normal(
+                    (B, T, cfg.d_model)).astype(np.float32)),
+                "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, T))
+                                      .astype(np.int32))}
+    if cfg.frontend == "codebooks":
+        toks = rng.integers(0, cfg.vocab, (B, T, cfg.n_codebooks))
+        return {"tokens": jnp.asarray(toks.astype(np.int32)),
+                "labels": jnp.asarray(np.roll(toks, -1, 1).astype(np.int32))}
+    toks = rng.integers(0, cfg.vocab, (B, T))
+    return {"tokens": jnp.asarray(toks.astype(np.int32)),
+            "labels": jnp.asarray(np.roll(toks, -1, 1).astype(np.int32))}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, KEY)
+    batch = _train_batch(cfg)
+
+    def loss_fn(p):
+        return M.train_loss(p, cfg, batch)
+
+    (loss, metrics), grads = jax.jit(
+        jax.value_and_grad(loss_fn, has_aux=True))(params)
+    assert jnp.isfinite(loss), arch
+    assert float(loss) > 0
+    for leaf in jax.tree.leaves(grads):
+        assert jnp.all(jnp.isfinite(leaf)), arch
+    # at least one gradient is non-zero
+    gn = sum(float(jnp.sum(jnp.abs(g))) for g in jax.tree.leaves(grads))
+    assert gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_continuity(arch):
+    """decode(prefill(t[:P]), t[P:]) final logits ≡ prefill(t) last logits."""
+    cfg = get_config(arch, reduced=True)
+    params = M.init_params(cfg, KEY)
+    B, P, GEN = 2, 32, 16
+    T = P + GEN
+    rng = np.random.default_rng(1)
+
+    if cfg.frontend == "embeds":
+        full = rng.standard_normal((B, T, cfg.d_model)).astype(np.float32)
+        mk = lambda lo, hi: {"embeds": jnp.asarray(full[:, lo:hi])}
+        tok_at = lambda i: {"embed": jnp.asarray(full[:, i])}
+    elif cfg.frontend == "codebooks":
+        full = rng.integers(0, cfg.vocab, (B, T, cfg.n_codebooks)).astype(np.int32)
+        mk = lambda lo, hi: {"tokens": jnp.asarray(full[:, lo:hi])}
+        tok_at = lambda i: {"token": jnp.asarray(full[:, i])}
+    else:
+        full = rng.integers(0, cfg.vocab, (B, T)).astype(np.int32)
+        mk = lambda lo, hi: {"tokens": jnp.asarray(full[:, lo:hi])}
+        tok_at = lambda i: {"token": jnp.asarray(full[:, i])}
+
+    prefill = jax.jit(make_prefill_step(cfg))
+    decode = jax.jit(make_decode_step(cfg))
+
+    _, logits_full = prefill(params, mk(0, T))
+
+    small, logits = prefill(params, mk(0, P))
+
+    def rehome(big, sm):
+        sm = sm.astype(big.dtype)
+        if big.shape == sm.shape:
+            return sm
+        diff = [i for i, (a, b) in enumerate(zip(big.shape, sm.shape))
+                if a != b]
+        assert len(diff) == 1
+        return jax.lax.dynamic_update_slice_in_dim(big, sm, 0, diff[0])
+
+    cache = jax.tree.map(rehome, M.init_cache(cfg, B, T), small)
+    for i in range(P, T):
+        step_in = tok_at(i)
+        step_in["cur_len"] = jnp.asarray(i, jnp.int32)
+        logits, cache = decode(params, cache, step_in)
+
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32).reshape(B, -1),
+        np.asarray(logits_full, np.float32).reshape(B, -1),
+        rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("arch", ["smollm_360m", "mamba2_2_7b",
+                                  "musicgen_medium"])
+def test_serve_runner(arch):
+    out = serve(arch, reduced=True, batch=2, prompt_len=32, gen=4,
+                cache_len=64, log=lambda *a: None)
+    assert out["tokens"].shape[:2] == (2, 4)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_param_budget(arch):
+    """The FULL configs must match the assigned parameter budgets
+    (±15% — embedding/head conventions differ across sources)."""
+    expected = {
+        "smollm_360m": 360e6, "h2o_danube_1_8b": 1.8e9,
+        "command_r_plus_104b": 104e9, "gemma3_12b": 12e9,
+        "mamba2_2_7b": 2.7e9, "jamba_1_5_large_398b": 398e9,
+        "internvl2_76b": 70e9,      # backbone only; ViT-6B is stubbed
+        "deepseek_v2_lite_16b": 15.7e9, "qwen2_moe_a2_7b": 14.3e9,
+        "musicgen_medium": 1.5e9,
+    }[arch]
+    n = M.param_count(get_config(arch))
+    assert 0.85 * expected < n < 1.18 * expected, (arch, n, expected)

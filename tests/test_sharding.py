@@ -1,0 +1,102 @@
+"""Sharding resolution: divisibility fallback, single-use axes, param
+tree shardings, and end-to-end lowering on the host mesh."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import ParamSpec
+
+
+@pytest.fixture
+def mesh():
+    n = len(jax.devices())
+    if n < 2:
+        pytest.skip("needs >1 device (run under dryrun env for full check)")
+    return make_host_mesh(model=2)
+
+
+def test_resolve_basic():
+    mesh = make_host_mesh(model=1)      # (n,1) works even with 1 device
+    rules = {"batch": ("data",), "mlp": ("model",)}
+    ps = shd.resolve_pspec((8, 16), ("batch", "mlp"), rules, mesh)
+    assert isinstance(ps, P)
+
+
+def test_divisibility_fallback():
+    # fake mesh shape via host mesh: data=1, model=1 on single device; use
+    # a synthetic mesh-like object instead for pure logic testing
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    shd.FALLBACK_LOG.clear()
+    rules = {"heads": ("model",), "batch": ("data",)}
+    # 15 heads do not divide 16 → dropped (smollm case)
+    ps = shd.resolve_pspec((256, 15), ("batch", "heads"), rules, FakeMesh())
+    assert ps == P(("data",), None)
+    assert any("heads" in f for f in shd.FALLBACK_LOG)
+
+
+def test_single_use_axis():
+    class FakeMesh:
+        shape = {"data": 4, "model": 4}
+    rules = {"batch": ("data",), "embed": ("data",)}
+    ps = shd.resolve_pspec((8, 8), ("batch", "embed"), rules, FakeMesh())
+    # "data" used by batch; embed must NOT reuse it
+    assert ps == P(("data",), None)
+
+
+def test_multi_axis_dim():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    rules = {"batch": ("pod", "data")}
+    ps = shd.resolve_pspec((256, 64), ("batch", None), rules, FakeMesh())
+    assert ps == P(("pod", "data"), None)
+    # batch=8: pod(2) fits, data(16) doesn't divide 8/2 → only pod
+    ps = shd.resolve_pspec((8, 64), ("batch", None), rules, FakeMesh())
+    assert ps == P(("pod",), None)
+
+
+def test_skip_nondividing_axis_but_take_later():
+    class FakeMesh:
+        shape = {"data": 3, "model": 4}
+    rules = {"batch": ("data", "model")}
+    ps = shd.resolve_pspec((8,), ("batch",), rules, FakeMesh())
+    # data=3 doesn't divide 8; model=4 does
+    assert ps == P(("model",),)
+
+
+def test_tree_shardings_on_paramspecs():
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+
+        def __eq__(self, o):
+            return True
+    tree = {"w": ParamSpec((64, 32), ("embed", "mlp")),
+            "b": ParamSpec((32,), ("mlp",))}
+    rules = dict(shd.FSDP_RULES)
+    ps_w = shd.resolve_pspec((64, 32), ("embed", "mlp"), rules, FakeMesh())
+    assert ps_w == P(("data",), ("model",))
+
+
+def test_shard_act_noop_without_context():
+    x = jnp.ones((4, 4))
+    assert shd.shard_act(x, ("batch", None)) is x
+
+
+def test_lowering_with_rules_host_mesh():
+    """End-to-end: reduced arch lowers under rules on the host mesh."""
+    from repro.configs import get_config
+    from repro.configs.base import SHAPES, Shape
+    from repro.launch.steps import build_cell, lower_cell
+    from repro.optim.optimizer import OptConfig
+    from dataclasses import replace
+    mesh = make_host_mesh(model=1)
+    cfg = get_config("smollm_360m", reduced=True)
+    shape = replace(SHAPES["train_4k"], seq=64, batch=4)
+    cell = build_cell(cfg, shape, mesh, OptConfig())
+    lowered = lower_cell(cell)
+    assert "dot" in lowered.as_text() or "dot_general" in lowered.as_text()

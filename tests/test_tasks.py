@@ -1,0 +1,90 @@
+"""Task partitioning invariants (paper §5.2) — property-based.
+
+The partition must (a) respect the size cap, (b) exactly tile the original
+task's (input × output) rectangle with disjoint pieces, (c) follow the
+4-way / 2-way split rules, (d) round-trip the declarative wire format."""
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
+from repro.core.tasks import stage_order
+
+dims = st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128, 256])
+caps = st.sampled_from([16.0, 64.0, 256.0, 1024.0])
+
+
+@given(dims, dims, caps)
+@settings(max_examples=200, deadline=None)
+def test_forward_partition_tiles_exactly(m, n, cap):
+    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, m, 0, n)
+    pieces = partition(t, cap)
+    # size cap respected whenever splitting is possible
+    for p in pieces:
+        assert p.cost() <= cap or (p.m <= 1 and p.n <= 1)
+    # exact disjoint cover of the m×n rectangle
+    cells = set()
+    for p in pieces:
+        for i in range(p.in_lo, p.in_hi):
+            for j in range(p.out_lo, p.out_hi):
+                assert (i, j) not in cells, "overlap"
+                cells.add((i, j))
+    assert len(cells) == m * n
+
+
+@given(dims, caps)
+@settings(max_examples=100, deadline=None)
+def test_1d_partition_covers(n, cap):
+    t = TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, 0, n)
+    pieces = partition(t, cap)
+    covered = sorted((p.out_lo, p.out_hi) for p in pieces)
+    cur = 0
+    for lo, hi in covered:
+        assert lo == cur
+        cur = hi
+    assert cur == n
+
+
+def test_forward_splits_four_way():
+    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 8, 0, 8)
+    kids = t.split()
+    assert len(kids) == 4        # paper: "split into FOUR smaller tasks"
+    assert {(k.in_lo, k.in_hi, k.out_lo, k.out_hi) for k in kids} == {
+        (0, 4, 0, 4), (0, 4, 4, 8), (4, 8, 0, 4), (4, 8, 4, 8)}
+
+
+def test_update_splits_two_way():
+    t = TaskDesc(TaskKind.UPDATE, 0, 0, 0, 0, 8, 0, 8)
+    kids = t.split()
+    assert len(kids) == 2        # "each updating m/2 parameters"
+
+
+def test_loss_costs_more_per_element():
+    loss = TaskDesc(TaskKind.LOSS, 0, 0, 0, 0, 0, 0, 16)
+    act = TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, 0, 16)
+    assert loss.cost() > act.cost()   # §5.2 "proportionally larger size"
+
+
+@given(st.sampled_from(list(TaskKind)), dims, dims)
+@settings(max_examples=50, deadline=None)
+def test_wire_roundtrip(kind, m, n):
+    t = TaskDesc(kind, 3, 7, 11, 0, m, 0, n, task_id="x1")
+    assert TaskDesc.from_wire(t.to_wire()) == t
+
+
+def test_paper_model_task_census():
+    """Paper §6: N=4⁴ model, cap=4⁴ — layer-1 forward must partition into
+    256 tasks of 16×16."""
+    stages = prototype_tasks([LayerSpec(256, 256), LayerSpec(256, 1)], 0, 0)
+    fwd0 = partition(stages["fwd_0"][0], 256.0)
+    assert len(fwd0) == 256
+    assert all(p.m == 16 and p.n == 16 for p in fwd0)
+    fwd1 = partition(stages["fwd_1"][0], 256.0)
+    assert len(fwd1) == 1        # 256×1 is exactly at cap
+
+
+def test_stage_order_dependencies():
+    order = stage_order(3)
+    assert order.index("fwd_0") < order.index("act_0") < order.index("fwd_1")
+    assert order.index("loss") < order.index("bwd_2") < order.index("bwd_0")
+    assert order.index("bwd_0") < order.index("upd_0")

@@ -1,0 +1,136 @@
+"""Tuple Space semantics (paper §3): put / blocking read / destructive get,
+pattern matching, FIFO fairness, ledger integrity, thread safety."""
+
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ANY, Ledger, TSTimeout, TupleSpace, match
+
+
+def test_put_read_get():
+    ts = TupleSpace()
+    ts.put(("act", 0, 1), [1, 2, 3])
+    k, v = ts.read(("act", ANY, ANY))
+    assert k == ("act", 0, 1) and v == [1, 2, 3]
+    # read is non-destructive
+    assert ts.count(("act", ANY, ANY)) == 1
+    k, v = ts.get(("act", 0, ANY))
+    assert v == [1, 2, 3]
+    # get is destructive — "other handlers will no longer see it" (§4)
+    assert ts.count(("act", ANY, ANY)) == 0
+
+
+def test_get_blocks_until_put():
+    ts = TupleSpace()
+    got = []
+
+    def consumer():
+        got.append(ts.get(("task", ANY), timeout=5.0))
+
+    th = threading.Thread(target=consumer)
+    th.start()
+    time.sleep(0.05)
+    assert not got               # consumer is blocked
+    ts.put(("task", "t1"), "work")
+    th.join(timeout=5.0)
+    assert got and got[0][0] == ("task", "t1")
+
+
+def test_get_timeout_is_failure_signal():
+    ts = TupleSpace()
+    with pytest.raises(TSTimeout):
+        ts.get(("task", ANY), timeout=0.05)
+
+
+def test_predicate_pattern():
+    ts = TupleSpace()
+    for i in range(5):
+        ts.put(("x", i), i)
+    k, _ = ts.read(("x", lambda i: i >= 3))
+    assert k[1] >= 3
+
+
+def test_fifo_among_matches():
+    ts = TupleSpace()
+    for i in range(4):
+        ts.put(("task", f"t{i}"), i)
+    order = [ts.get(("task", ANY))[1] for _ in range(4)]
+    assert order == [0, 1, 2, 3]
+
+
+def test_delete_and_snapshot():
+    ts = TupleSpace()
+    for i in range(6):
+        ts.put(("a", i), i)
+        ts.put(("b", i), i)
+    assert ts.delete(("a", lambda i: i % 2 == 0)) == 3
+    snap = ts.snapshot()
+    assert len(snap) == 9
+    assert ts.count(("a", ANY)) == 3
+
+
+def test_concurrent_producers_consumers():
+    ts = TupleSpace()
+    N = 200
+    results = []
+    lock = threading.Lock()
+
+    def producer(base):
+        for i in range(N // 2):
+            ts.put(("w", base + i), base + i)
+
+    def consumer():
+        while True:
+            try:
+                _, v = ts.get(("w", ANY), timeout=0.3)
+            except TSTimeout:
+                return
+            with lock:
+                results.append(v)
+
+    thrs = [threading.Thread(target=producer, args=(0,)),
+            threading.Thread(target=producer, args=(1000,))] + \
+           [threading.Thread(target=consumer) for _ in range(4)]
+    for t in thrs:
+        t.start()
+    for t in thrs:
+        t.join()
+    assert sorted(results) == sorted(list(range(N // 2))
+                                     + list(range(1000, 1000 + N // 2)))
+
+
+def test_ledger_chain_and_tamper():
+    led = Ledger()
+    for i in range(20):
+        led.append("put", ("k", i))
+    assert led.verify()
+    # tamper
+    import dataclasses
+    led.entries[10] = dataclasses.replace(led.entries[10], key=("evil", 0))
+    assert not led.verify()
+
+
+@given(st.lists(st.tuples(st.sampled_from(["a", "b"]), st.integers(0, 5)),
+                min_size=1, max_size=30))
+@settings(max_examples=50, deadline=None)
+def test_count_matches_matching_keys(keys):
+    ts = TupleSpace()
+    for i, k in enumerate(keys):
+        ts.put(k + (i,), i)     # make keys unique by arity-3 suffix
+    for subj in ("a", "b"):
+        want = sum(1 for k in keys if k[0] == subj)
+        assert ts.count((subj, ANY, ANY)) == want
+
+
+@given(st.lists(st.integers(0, 3), min_size=1, max_size=4),
+       st.lists(st.integers(0, 3), min_size=1, max_size=4))
+@settings(max_examples=100, deadline=None)
+def test_match_properties(key, pat_positions):
+    key = tuple(key)
+    assert match(key, key)                       # exact match
+    assert match((ANY,) * len(key), key)         # full wildcard
+    assert not match(key + (0,), key)            # arity must agree
