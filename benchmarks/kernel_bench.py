@@ -79,16 +79,24 @@ def bench_ssd() -> list[tuple[str, float, str]]:
 
 
 def bench_tuplespace() -> list[tuple[str, float, str]]:
-    from repro.core import TupleSpace, ANY
-    ts = TupleSpace()
-    t0 = time.perf_counter()
+    # Single-thread facade rates per space backend; the full multi-threaded
+    # comparison (contention, blocking, pattern matching) lives in
+    # benchmarks/ts_bench.py.
+    from repro.core import TupleSpace
+    rows = []
     N = 20000
-    for i in range(N):
-        ts.put(("k", i), i)
-    put_us = (time.perf_counter() - t0) / N * 1e6
-    t0 = time.perf_counter()
-    for i in range(N):
-        ts.get(("k", i))
-    get_us = (time.perf_counter() - t0) / N * 1e6
-    return [("tuplespace_put", put_us, f"{1e6 / put_us:.0f}ops/s"),
-            ("tuplespace_get_exact", get_us, f"{1e6 / get_us:.0f}ops/s")]
+    for spec in ("local", "sharded"):
+        ts = TupleSpace(backend=spec)
+        t0 = time.perf_counter()
+        for i in range(N):
+            ts.put(("k", i), i)
+        put_us = (time.perf_counter() - t0) / N * 1e6
+        t0 = time.perf_counter()
+        for i in range(N):
+            ts.get(("k", i))
+        get_us = (time.perf_counter() - t0) / N * 1e6
+        rows.append((f"tuplespace_put_{spec}", put_us,
+                     f"{1e6 / put_us:.0f}ops/s"))
+        rows.append((f"tuplespace_get_exact_{spec}", get_us,
+                     f"{1e6 / get_us:.0f}ops/s"))
+    return rows

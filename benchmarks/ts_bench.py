@@ -1,0 +1,165 @@
+"""Tuple-space backend benchmark — put/get/pattern-match throughput per
+:mod:`repro.core.space` backend.
+
+    PYTHONPATH=src python benchmarks/ts_bench.py [--threads N] [--ops N]
+
+Phases (each reports ops/s per backend and the sharded/local speedup):
+
+- ``contended put+get``: N threads, each a producer+consumer on its own
+  subject — the Manager/Handler hot path under load. This is the
+  acceptance phase: ShardedBackend must be >= 2x LocalBackend.
+- ``blocking pipeline``: N/2 producer threads feeding N/2 blocking
+  consumers (``get`` with timeout) — measures condvar wakeup efficiency
+  (the local backend's single condition wakes every waiter on every put).
+- ``done-mark polling``: fully-concrete ``try_read`` against a store with
+  many live completion marks — the Manager ``_pending`` scan; the
+  (subject, arity) index + concrete-pattern fast path make this O(1) on
+  the sharded backend.
+- ``single-thread put/get``: uncontended baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import threading
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core.space import TSTimeout, make_backend  # noqa: E402
+
+BACKENDS = ["local", "sharded", "sharded:16"]
+
+
+def _run_threads(workers) -> float:
+    threads = [threading.Thread(target=w) for w in workers]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return time.perf_counter() - t0
+
+
+def bench_contended_putget(spec: str, n_threads: int, ops: int) -> float:
+    """Each thread puts then takes on its own subject; ops/s over all ops."""
+    ts = make_backend(spec)
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid: int):
+        subject = f"s{tid}"
+        barrier.wait()
+        for i in range(ops):
+            ts.put((subject, i), i)
+            ts.try_get((subject, i))
+
+    elapsed = _run_threads([lambda tid=t: worker(tid)
+                            for t in range(n_threads)])
+    return 2 * ops * n_threads / elapsed
+
+
+def bench_blocking_pipeline(spec: str, n_threads: int, ops: int) -> float:
+    """Producer threads feed blocking consumers; ops/s of *delivered*
+    tuples (a consumer that starves into its timeout only counts what it
+    actually took, and the shortfall is reported)."""
+    ts = make_backend(spec)
+    n_pairs = max(n_threads // 2, 1)
+    barrier = threading.Barrier(2 * n_pairs)
+    delivered = [0] * n_pairs
+
+    def producer(tid: int):
+        barrier.wait()
+        for i in range(ops):
+            ts.put((f"q{tid}", i), i)
+
+    def consumer(tid: int):
+        barrier.wait()
+        while delivered[tid] < ops:
+            try:
+                ts.get((f"q{tid}",
+                        lambda _i: True), timeout=5.0)
+                delivered[tid] += 1
+            except TSTimeout:
+                return
+
+    workers = [lambda tid=t: producer(tid) for t in range(n_pairs)]
+    workers += [lambda tid=t: consumer(tid) for t in range(n_pairs)]
+    elapsed = _run_threads(workers)
+    total = sum(delivered)
+    if total < ops * n_pairs:
+        print(f"WARNING: {spec} blocking pipeline starved: "
+              f"{total}/{ops * n_pairs} delivered", file=sys.stderr)
+    return total / elapsed
+
+
+def bench_done_polling(spec: str, live: int, polls: int) -> float:
+    """Concrete-pattern try_read with `live` completion marks resident."""
+    ts = make_backend(spec)
+    ts.put_many(iter([(("done", "fwd", i, 0, 0, 64, 0, 64), f"h{i % 4}")
+                      for i in range(live)]))
+    t0 = time.perf_counter()
+    for i in range(polls):
+        ts.try_read(("done", "fwd", i % live, 0, 0, 64, 0, 64))
+    return polls / (time.perf_counter() - t0)
+
+
+def bench_single_thread(spec: str, ops: int) -> tuple[float, float]:
+    ts = make_backend(spec)
+    t0 = time.perf_counter()
+    for i in range(ops):
+        ts.put(("k", i), i)
+    put_rate = ops / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    for i in range(ops):
+        ts.get(("k", i))
+    get_rate = ops / (time.perf_counter() - t0)
+    return put_rate, get_rate
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--threads", type=int, default=8)
+    ap.add_argument("--ops", type=int, default=20_000,
+                    help="ops per thread in contended phases")
+    args = ap.parse_args()
+
+    results: dict[str, dict[str, float]] = {b: {} for b in BACKENDS}
+    for spec in BACKENDS:
+        put_rate, get_rate = bench_single_thread(spec, args.ops)
+        results[spec]["1thread_put"] = put_rate
+        results[spec]["1thread_get"] = get_rate
+        results[spec][f"contended_putget_{args.threads}t"] = \
+            bench_contended_putget(spec, args.threads, args.ops)
+        results[spec][f"blocking_pipeline_{args.threads}t"] = \
+            bench_blocking_pipeline(spec, args.threads, args.ops // 2)
+        results[spec]["done_poll_5k_live"] = \
+            bench_done_polling(spec, live=5_000, polls=20_000)
+
+    phases = list(results[BACKENDS[0]])
+    width = max(len(p) for p in phases) + 2
+    header = "phase".ljust(width) + "".join(b.rjust(16) for b in BACKENDS) \
+        + "sharded/local".rjust(16)
+    print(header)
+    print("-" * len(header))
+    for phase in phases:
+        row = phase.ljust(width)
+        for b in BACKENDS:
+            row += f"{results[b][phase]:>14,.0f}/s"
+        ratio = results["sharded"][phase] / results["local"][phase]
+        row += f"{ratio:>15.2f}x"
+        print(row)
+
+    key = f"contended_putget_{args.threads}t"
+    speedup = results["sharded"][key] / results["local"][key]
+    ok = speedup >= 2.0
+    print(f"\nacceptance: sharded vs local contended put/get "
+          f"({args.threads} threads): {speedup:.2f}x "
+          f"({'PASS' if ok else 'FAIL'}, target >= 2.0x)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

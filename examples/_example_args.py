@@ -1,0 +1,15 @@
+"""Shared CLI helpers for the example scripts."""
+
+import sys
+
+
+def ts_backend_arg(argv: list[str] | None = None) -> str | None:
+    """Value of ``--ts-backend`` if present (None -> $REPRO_TS_BACKEND)."""
+    argv = sys.argv if argv is None else argv
+    if "--ts-backend" not in argv:
+        return None
+    idx = argv.index("--ts-backend") + 1
+    if idx >= len(argv):
+        sys.exit("--ts-backend requires a value "
+                 "(local | sharded[:n] | instrumented[:spec])")
+    return argv[idx]

@@ -4,22 +4,31 @@ the Tuple Space with timeout/re-issue, handlers crash mid-task at 25%
 probability, and the §5.4 sliding window commits each param version
 exactly once.
 
-    PYTHONPATH=src python examples/acan_jax_train.py
+    PYTHONPATH=src python examples/acan_jax_train.py [--ts-backend spec]
+
+The coordination substrate is pluggable: pass ``--ts-backend sharded``
+(or set ``$REPRO_TS_BACKEND``) to run the gradient-task traffic over the
+sharded high-throughput tuple-space backend.
 """
 
+from _example_args import ts_backend_arg
 from repro.configs import get_config
 from repro.ts_exec.step_runner import ACANStepRunner, ACANTrainConfig
 
 
 def main() -> None:
+    ts_backend = ts_backend_arg()
     cfg = get_config("deepseek_v2_lite_16b", reduced=True)
     tcfg = ACANTrainConfig(n_handlers=4, n_micro=4, micro_batch=2, seq=32,
                            steps=8, lr=0.05, timeout=30.0,
-                           handler_crash_prob=0.25, seed=0)
+                           handler_crash_prob=0.25, seed=0,
+                           ts_backend=ts_backend)
+    runner = ACANStepRunner(cfg, tcfg)
     print(f"arch: {cfg.name} (reduced, MoE {cfg.period[0].moe.n_experts}e "
           f"top-{cfg.period[0].moe.top_k}); {tcfg.n_handlers} handlers, "
-          f"{tcfg.n_micro} grad tasks/step, 25% crash prob/task\n")
-    res = ACANStepRunner(cfg, tcfg).run()
+          f"{tcfg.n_micro} grad tasks/step, 25% crash prob/task, "
+          f"ts backend {type(runner.ts.backend).__name__}\n")
+    res = runner.run()
     for i, l in enumerate(res.losses):
         print(f"step {i}: loss {l:.4f}")
     print(f"\ncrashes: {res.crashes}  re-issues: {res.reissues}  "

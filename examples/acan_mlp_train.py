@@ -2,24 +2,30 @@
 tuple-space runtime with heterogeneous, crash-prone handlers — and watch
 the adaptive timeout track handler power inversely (Figures 1-4).
 
-    PYTHONPATH=src python examples/acan_mlp_train.py [--paper-scale]
+    PYTHONPATH=src python examples/acan_mlp_train.py \
+        [--paper-scale] [--ts-backend local|sharded[:n]|instrumented[:spec]]
 
 Default runs a compressed variant (N=64, shorter intervals) in ~30 s;
 ``--paper-scale`` runs the exact paper setup (N=256, 100 samples ×
-2 epochs, pouch 100, task cap 4⁴) — several minutes.
+2 epochs, pouch 100, task cap 4⁴) — several minutes. The tuple-space
+backend comes from ``--ts-backend`` (or ``$REPRO_TS_BACKEND``); try
+``sharded`` to run coordination over the high-throughput engine.
 """
 
 import sys
 
 import numpy as np
 
+from _example_args import ts_backend_arg
 from repro.configs import paper_mlp
 from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec
 
 
 def main() -> None:
+    ts_backend = ts_backend_arg()
     if "--paper-scale" in sys.argv:
         cfg = paper_mlp.robustness_config(interval=0.5, n_samples=20)
+        cfg.ts_backend = ts_backend
     else:
         cfg = CloudConfig(
             layers=[LayerSpec(64, 64), LayerSpec(64, 1)],
@@ -28,15 +34,17 @@ def main() -> None:
             fault_plan=FaultPlan(interval=0.3, speed_levels=(1.0, 5.0, 10.0),
                                  p_speed_change=1.0, p_handler_crash=1.0,
                                  p_manager_crash=1.0, seed=1),
-            wall_limit=240.0, seed=0)
+            wall_limit=240.0, seed=0, ts_backend=ts_backend)
 
+    cloud = ACANCloud(cfg)
     print(f"model: {[(s.n_in, s.n_out) for s in cfg.layers]}, "
           f"{cfg.n_handlers} handlers, task cap {cfg.task_cap:.0f}, "
-          f"pouch {cfg.pouch_size}")
+          f"pouch {cfg.pouch_size}, "
+          f"ts backend {type(cloud.ts.backend).__name__}")
     print("faults: speeds 1:5:10 re-drawn + Manager AND Handlers crash "
           f"every {cfg.fault_plan.interval}s (p=1.0)\n")
 
-    res = ACANCloud(cfg).run()
+    res = cloud.run()
 
     losses = [l for _, l in res.loss_history]
     n = len(losses) // 2

@@ -8,13 +8,16 @@ from repro.core.gss import PouchController, TimeoutController, gss_chunk
 from repro.core.handler import Handler, SpeedBox
 from repro.core.ledger import Ledger
 from repro.core.manager import Manager, ManagerConfig
+from repro.core.space import (ANY, InstrumentedBackend, LocalBackend,
+                              ShardedBackend, SpaceBackend, TSTimeout,
+                              TupleSpace, make_backend, match)
 from repro.core.tasks import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
-from repro.core.tuplespace import ANY, TSTimeout, TupleSpace, match
 
 __all__ = [
     "ACANCloud", "CloudConfig", "CloudResult", "make_teacher_data",
     "FaultPlan", "MonitorDaemon", "PouchController", "TimeoutController",
     "gss_chunk", "Handler", "SpeedBox", "Ledger", "Manager", "ManagerConfig",
     "LayerSpec", "TaskDesc", "TaskKind", "partition", "prototype_tasks",
-    "ANY", "TSTimeout", "TupleSpace", "match",
+    "ANY", "TSTimeout", "TupleSpace", "match", "make_backend",
+    "SpaceBackend", "LocalBackend", "ShardedBackend", "InstrumentedBackend",
 ]

@@ -21,7 +21,7 @@ from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.handler import Handler, SpeedBox
 from repro.core.manager import Manager, ManagerConfig
 from repro.core.tasks import LayerSpec
-from repro.core.tuplespace import ANY, TupleSpace
+from repro.core.space import ANY, TupleSpace
 
 
 @dataclass
@@ -40,6 +40,7 @@ class CloudConfig:
     seed: int = 0
     data_noise: float = 0.0
     wall_limit: float = 600.0                      # hard safety limit (s)
+    ts_backend: str | None = None                  # None -> $REPRO_TS_BACKEND
 
 
 @dataclass
@@ -80,7 +81,7 @@ def make_teacher_data(layers: list[LayerSpec], n_samples: int, seed: int,
 class ACANCloud:
     def __init__(self, cfg: CloudConfig) -> None:
         self.cfg = cfg
-        self.ts = TupleSpace()
+        self.ts = TupleSpace(backend=cfg.ts_backend)
         self.stop_event = threading.Event()
 
     # ----------------------------------------------------------- factories

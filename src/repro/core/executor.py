@@ -41,7 +41,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.tasks import TaskDesc, TaskKind
-from repro.core.tuplespace import TupleSpace
+from repro.core.space import TupleSpace
 
 
 class PreconditionUnmet(Exception):

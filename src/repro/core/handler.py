@@ -24,7 +24,7 @@ from dataclasses import dataclass, field
 from repro.core.executor import PreconditionUnmet, TaskExecutor
 from repro.core.manager import content_key
 from repro.core.tasks import TaskDesc
-from repro.core.tuplespace import ANY, TSTimeout, TupleSpace
+from repro.core.space import ANY, TSTimeout, TupleSpace
 
 
 class HandlerCrash(Exception):

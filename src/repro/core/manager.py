@@ -35,7 +35,7 @@ from repro.core.executor import activation, activation_deriv_from_act
 from repro.core.gss import TimeoutController
 from repro.core.tasks import (LayerSpec, TaskDesc, TaskKind, partition,
                               prototype_tasks, stage_order)
-from repro.core.tuplespace import ANY, TupleSpace
+from repro.core.space import ANY, TupleSpace
 
 
 class ManagerCrash(Exception):

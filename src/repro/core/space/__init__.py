@@ -1,0 +1,26 @@
+"""``repro.core.space`` — the pluggable ACAN tuple-space package.
+
+Public API:
+
+- data model: :data:`ANY`, :func:`match`, :class:`TSTimeout`
+- the :class:`SpaceBackend` protocol (:mod:`repro.core.space.api`)
+- backends: :class:`LocalBackend`, :class:`ShardedBackend`,
+  :class:`InstrumentedBackend`
+- selection: :func:`make_backend` / ``$REPRO_TS_BACKEND``
+- the :class:`TupleSpace` facade every ACAN component consumes
+"""
+
+from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
+                                  TSTimeout, is_concrete, match,
+                                  subject_is_fixed, validate_key)
+from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
+from repro.core.space.instrumented import InstrumentedBackend
+from repro.core.space.local import LocalBackend
+from repro.core.space.sharded import ShardedBackend
+
+__all__ = [
+    "ANY", "Journal", "Key", "Pattern", "SpaceBackend", "TSTimeout",
+    "match", "subject_is_fixed", "is_concrete", "validate_key",
+    "BACKEND_ENV", "TupleSpace", "make_backend",
+    "LocalBackend", "ShardedBackend", "InstrumentedBackend",
+]

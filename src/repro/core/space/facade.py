@@ -1,0 +1,134 @@
+"""The :class:`TupleSpace` facade — the ACAN coordination substrate
+(paper §3) over a pluggable :class:`~repro.core.space.api.SpaceBackend`.
+
+Every component (Manager, Handlers, the elastic runner, the ACAN-over-JAX
+step runner, examples) talks to this one class; the storage engine behind
+it is chosen per instance::
+
+    TupleSpace()                      # backend from $REPRO_TS_BACKEND
+    TupleSpace(backend="sharded")     # explicit by name
+    TupleSpace(backend="sharded:32")  # 32 shards
+    TupleSpace(backend=LocalBackend())  # bring your own instance
+
+``REPRO_TS_BACKEND`` accepts the same spec strings as
+:func:`make_backend`: ``local`` (default), ``sharded``,
+``sharded:<n_shards>``, and ``instrumented[:<inner spec>]``.
+
+The facade owns the hash-chained :class:`~repro.core.ledger.Ledger`
+(paper §4: "all updates can be logged in an immutable blockchain") and
+wires ``ledger.append`` into the backend's journal hook, so every
+mutation is recorded regardless of backend — the recovery trace Manager
+restarts rely on.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Iterable
+
+from repro.core.ledger import Ledger
+from repro.core.space.api import Key, Pattern, SpaceBackend
+from repro.core.space.instrumented import InstrumentedBackend
+from repro.core.space.local import LocalBackend
+from repro.core.space.sharded import ShardedBackend
+
+#: Environment variable consulted when no backend is passed explicitly.
+BACKEND_ENV = "REPRO_TS_BACKEND"
+
+
+def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
+    """Build a backend from a spec string (see module docstring).
+
+    ``None``/empty falls back to ``$REPRO_TS_BACKEND``, then ``local``.
+    """
+    if spec is None or spec == "":
+        spec = os.environ.get(BACKEND_ENV, "") or "local"
+    head, _, rest = spec.partition(":")
+    head = head.strip().lower()
+    if head == "local":
+        return LocalBackend(journal=journal)
+    if head == "sharded":
+        if rest:
+            return ShardedBackend(n_shards=int(rest), journal=journal)
+        return ShardedBackend(journal=journal)
+    if head == "instrumented":
+        return InstrumentedBackend(make_backend(rest or "local",
+                                                journal=journal))
+    raise ValueError(
+        f"unknown tuple-space backend {spec!r} "
+        f"(expected local | sharded[:n] | instrumented[:spec])")
+
+
+class TupleSpace:
+    """Thread-safe tuple space with blocking pattern-matched access.
+
+    A thin facade: all storage, matching, and blocking semantics live in
+    the backend (see :class:`~repro.core.space.api.SpaceBackend`). The
+    facade adds the ledger hook and backend selection.
+    """
+
+    def __init__(self, ledger: Ledger | None = None,
+                 backend: SpaceBackend | str | None = None) -> None:
+        self.ledger = ledger if ledger is not None else Ledger()
+        if backend is None or isinstance(backend, str):
+            backend = make_backend(backend, journal=self.ledger.append)
+        else:
+            # A pre-wired hook must keep firing, but this facade's ledger
+            # must record too — a silently dead ledger would still verify()
+            # as intact. Chain depth stays bounded under repeated wrapping:
+            # a hook installed here is tagged with the pre-facade hook it
+            # wraps, and a re-wrap chains from that original hook instead
+            # of stacking closures (the newest facade's ledger takes over
+            # recording; the original hook is preserved).
+            existing = getattr(backend, "journal", None)
+            base_hook = getattr(existing, "_ts_base_hook", existing)
+
+            def hook(op, key, _prev=base_hook, _append=self.ledger.append):
+                if _prev is not None:
+                    _prev(op, key)
+                _append(op, key)
+
+            hook._ts_base_hook = base_hook
+            backend.journal = hook
+        self.backend = backend
+
+    # ------------------------------------------------------------------ put
+    def put(self, key: Key, value: Any) -> None:
+        self.backend.put(key, value)
+
+    def put_many(self, items: Iterable[tuple[Key, Any]]) -> None:
+        self.backend.put_many(items)
+
+    # ------------------------------------------------------------ accessors
+    def read(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
+        """Blocking non-destructive match (paper's ``read(&pattern, &buffer)``)."""
+        return self.backend.read(pattern, timeout)
+
+    def get(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
+        """Blocking destructive match — once taken, other handlers no longer
+        see the tuple (paper §4)."""
+        return self.backend.get(pattern, timeout)
+
+    def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None:
+        return self.backend.try_read(pattern)
+
+    def try_get(self, pattern: Pattern) -> tuple[Key, Any] | None:
+        return self.backend.try_get(pattern)
+
+    # ---------------------------------------------------------------- misc
+    def count(self, pattern: Pattern) -> int:
+        return self.backend.count(pattern)
+
+    def keys(self, pattern: Pattern) -> list[Key]:
+        return self.backend.keys(pattern)
+
+    def delete(self, pattern: Pattern) -> int:
+        """Remove all tuples matching pattern; returns count removed."""
+        return self.backend.delete(pattern)
+
+    def stats(self) -> dict[str, int]:
+        return self.backend.stats()
+
+    def snapshot(self) -> dict[Key, Any]:
+        """A consistent copy of the full store (Manager restart support)."""
+        return self.backend.snapshot()

@@ -1,0 +1,139 @@
+"""``InstrumentedBackend`` — transparent wrapper adding latency and
+contention counters to any :class:`~repro.core.space.api.SpaceBackend`.
+
+Used by ``benchmarks/ts_bench.py`` to attribute time per operation and by
+tests to assert hot-path behaviour. Counters per operation name: calls,
+total/max latency (µs); plus blocking-specific counters (``timeouts``,
+``blocked`` = blocking calls that did not return immediately, and total
+blocked time). ``metrics()`` returns the full breakdown; ``stats()``
+returns the inner backend's stats augmented with aggregate counters.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Iterable
+
+from repro.core.space.api import Journal, Key, Pattern, TSTimeout
+
+#: A blocking call slower than this is counted as contended/blocked (µs).
+_BLOCKED_THRESHOLD_US = 500.0
+
+
+class _OpStat:
+    __slots__ = ("calls", "total_us", "max_us")
+
+    def __init__(self) -> None:
+        self.calls = 0
+        self.total_us = 0.0
+        self.max_us = 0.0
+
+    def record(self, us: float) -> None:
+        self.calls += 1
+        self.total_us += us
+        if us > self.max_us:
+            self.max_us = us
+
+
+class InstrumentedBackend:
+    """Delegates every protocol method to ``inner``, timing it."""
+
+    def __init__(self, inner) -> None:
+        self.inner = inner
+        self._lock = threading.Lock()
+        self._ops: dict[str, _OpStat] = {}
+        self.timeouts = 0
+        self.blocked = 0
+        self.blocked_us = 0.0
+
+    # journal passes straight through to the wrapped backend
+    @property
+    def journal(self) -> Journal | None:
+        return self.inner.journal
+
+    @journal.setter
+    def journal(self, hook: Journal | None) -> None:
+        self.inner.journal = hook
+
+    def _record(self, op: str, t0: float, blocking: bool = False,
+                timed_out: bool = False) -> None:
+        us = (time.perf_counter() - t0) * 1e6
+        with self._lock:
+            stat = self._ops.get(op)
+            if stat is None:
+                stat = self._ops[op] = _OpStat()
+            stat.record(us)
+            if timed_out:
+                self.timeouts += 1
+            if blocking and us > _BLOCKED_THRESHOLD_US:
+                self.blocked += 1
+                self.blocked_us += us
+
+    def _timed(self, op: str, fn, *args):
+        t0 = time.perf_counter()
+        try:
+            return fn(*args)
+        finally:
+            self._record(op, t0)
+
+    def _timed_blocking(self, op: str, fn, pattern: Pattern,
+                        timeout: float | None):
+        t0 = time.perf_counter()
+        try:
+            result = fn(pattern, timeout)
+        except TSTimeout:
+            self._record(op, t0, blocking=True, timed_out=True)
+            raise
+        self._record(op, t0, blocking=True)
+        return result
+
+    # ------------------------------------------------------- protocol ops
+    def put(self, key: Key, value: Any) -> None:
+        return self._timed("put", self.inner.put, key, value)
+
+    def put_many(self, items: Iterable[tuple[Key, Any]]) -> None:
+        return self._timed("put_many", self.inner.put_many, items)
+
+    def read(self, pattern: Pattern, timeout: float | None = None):
+        return self._timed_blocking("read", self.inner.read, pattern, timeout)
+
+    def get(self, pattern: Pattern, timeout: float | None = None):
+        return self._timed_blocking("get", self.inner.get, pattern, timeout)
+
+    def try_read(self, pattern: Pattern):
+        return self._timed("try_read", self.inner.try_read, pattern)
+
+    def try_get(self, pattern: Pattern):
+        return self._timed("try_get", self.inner.try_get, pattern)
+
+    def count(self, pattern: Pattern) -> int:
+        return self._timed("count", self.inner.count, pattern)
+
+    def keys(self, pattern: Pattern) -> list[Key]:
+        return self._timed("keys", self.inner.keys, pattern)
+
+    def delete(self, pattern: Pattern) -> int:
+        return self._timed("delete", self.inner.delete, pattern)
+
+    def snapshot(self) -> dict[Key, Any]:
+        return self._timed("snapshot", self.inner.snapshot)
+
+    # ----------------------------------------------------- introspection
+    def metrics(self) -> dict[str, dict[str, float]]:
+        """Per-op latency breakdown: {op: {calls, total_us, mean_us, max_us}}."""
+        with self._lock:
+            out = {}
+            for op, s in self._ops.items():
+                out[op] = {"calls": s.calls, "total_us": s.total_us,
+                           "mean_us": s.total_us / max(s.calls, 1),
+                           "max_us": s.max_us}
+            return out
+
+    def stats(self) -> dict[str, int]:
+        inner = self.inner.stats()
+        with self._lock:
+            inner["instr_ops"] = sum(s.calls for s in self._ops.values())
+            inner["instr_timeouts"] = self.timeouts
+            inner["instr_blocked"] = self.blocked
+        return inner

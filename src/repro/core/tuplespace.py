@@ -1,221 +1,17 @@
-"""Tuple Space — the ACAN coordination substrate (paper §3).
+"""Backward-compat shim — the tuple space moved to :mod:`repro.core.space`.
 
-The paper's ACAN departs from CAN/DHT by (1) representing networked data as
-``<key, value>`` (no bucket-ID binding → no single point of failure) and
-(2) exposing three access methods::
+The ACAN tuple space (paper §3) is now a pluggable-backend package:
+:class:`~repro.core.space.TupleSpace` is a thin facade over a
+:class:`~repro.core.space.api.SpaceBackend` chosen via the
+``REPRO_TS_BACKEND`` environment variable (``local`` | ``sharded[:n]`` |
+``instrumented[:spec]``) or the ``backend=`` constructor argument.
 
-    put(key, value)            # non-blocking publish
-    read(pattern) -> (k, v)    # BLOCKING, non-destructive match
-    get(pattern)  -> (k, v)    # BLOCKING, destructive match (take)
-
-Keys are tuples of hashable fields. A *pattern* is a tuple of the same arity
-where :data:`ANY` matches any field value; a callable field acts as a
-predicate. ``read``/``get`` block until a match appears (program-to-program
-synchronisation semantics), with an optional timeout — timeouts are the
-paper's *only* failure signal (§1: timeout/retransmission discipline).
-
-The store is thread-safe. Every mutation is recorded in a hash-chained
-:class:`~repro.core.ledger.Ledger` ("all updates can be logged in an
-immutable blockchain", paper §4), which doubles as the recovery journal for
-Manager restarts.
+Import from :mod:`repro.core.space` in new code; this module keeps the
+historical import path working.
 """
 
-from __future__ import annotations
+from repro.core.space import (ANY, Key, Pattern, TSTimeout, TupleSpace,
+                              make_backend, match)
 
-import threading
-import time
-from collections import defaultdict
-from typing import Any, Callable, Iterator
-
-from repro.core.ledger import Ledger
-
-
-class _Any:
-    """Wildcard sentinel for pattern fields."""
-
-    _instance = None
-
-    def __new__(cls):
-        if cls._instance is None:
-            cls._instance = super().__new__(cls)
-        return cls._instance
-
-    def __repr__(self) -> str:  # pragma: no cover - cosmetic
-        return "ANY"
-
-
-ANY = _Any()
-
-Key = tuple
-Pattern = tuple
-
-
-def _field_matches(pat_field: Any, key_field: Any) -> bool:
-    if pat_field is ANY:
-        return True
-    if callable(pat_field) and not isinstance(pat_field, type):
-        try:
-            return bool(pat_field(key_field))
-        except Exception:
-            return False
-    return pat_field == key_field
-
-
-def match(pattern: Pattern, key: Key) -> bool:
-    """True iff ``key`` matches ``pattern`` (same arity, fieldwise match)."""
-    if len(pattern) != len(key):
-        return False
-    return all(_field_matches(p, k) for p, k in zip(pattern, key))
-
-
-class TSTimeout(Exception):
-    """A blocking read/get expired — the ACAN failure signal."""
-
-
-class TupleSpace:
-    """Thread-safe tuple space with blocking pattern-matched access.
-
-    Storage is a dict keyed by the first key field (the "subject") for cheap
-    candidate narrowing — patterns almost always fix the subject (``"task"``,
-    ``"act"``, ``"grad"``, ...). Within a subject bucket, insertion order is
-    preserved so ``get`` is FIFO among matches (fair task pickup).
-    """
-
-    def __init__(self, ledger: Ledger | None = None) -> None:
-        self._lock = threading.Condition(threading.Lock())
-        self._store: dict[Any, dict[Key, Any]] = defaultdict(dict)
-        self.ledger = ledger if ledger is not None else Ledger()
-        self._puts = 0
-        self._takes = 0
-        self._reads = 0
-
-    # ------------------------------------------------------------------ put
-    def put(self, key: Key, value: Any) -> None:
-        if not isinstance(key, tuple) or not key:
-            raise TypeError(f"TS key must be a non-empty tuple, got {key!r}")
-        with self._lock:
-            self._store[key[0]][key] = value
-            self._puts += 1
-            self.ledger.append("put", key)
-            self._lock.notify_all()
-
-    def put_many(self, items: Iterator[tuple[Key, Any]]) -> None:
-        with self._lock:
-            for key, value in items:
-                self._store[key[0]][key] = value
-                self._puts += 1
-                self.ledger.append("put", key)
-            self._lock.notify_all()
-
-    # ----------------------------------------------------------- match core
-    def _find(self, pattern: Pattern) -> Key | None:
-        subject = pattern[0]
-        if subject is ANY or (callable(subject) and not isinstance(subject, type)):
-            buckets = list(self._store.values())
-        else:
-            buckets = [self._store.get(subject, {})]
-        for bucket in buckets:
-            for key in bucket:
-                if match(pattern, key):
-                    return key
-        return None
-
-    def _blocking(self, pattern: Pattern, timeout: float | None,
-                  destructive: bool) -> tuple[Key, Any]:
-        deadline = None if timeout is None else time.monotonic() + timeout
-        with self._lock:
-            while True:
-                key = self._find(pattern)
-                if key is not None:
-                    bucket = self._store[key[0]]
-                    value = bucket[key]
-                    if destructive:
-                        del bucket[key]
-                        self._takes += 1
-                        self.ledger.append("get", key)
-                    else:
-                        self._reads += 1
-                    return key, value
-                if deadline is not None:
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0:
-                        raise TSTimeout(f"pattern {pattern!r} timed out")
-                    self._lock.wait(remaining)
-                else:
-                    self._lock.wait()
-
-    # ------------------------------------------------------------ accessors
-    def read(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
-        """Blocking non-destructive match (paper's ``read(&pattern, &buffer)``)."""
-        return self._blocking(pattern, timeout, destructive=False)
-
-    def get(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
-        """Blocking destructive match — once taken, other handlers no longer
-        see the tuple (paper §4)."""
-        return self._blocking(pattern, timeout, destructive=True)
-
-    def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None:
-        with self._lock:
-            key = self._find(pattern)
-            if key is None:
-                return None
-            self._reads += 1
-            return key, self._store[key[0]][key]
-
-    def try_get(self, pattern: Pattern) -> tuple[Key, Any] | None:
-        with self._lock:
-            key = self._find(pattern)
-            if key is None:
-                return None
-            value = self._store[key[0]].pop(key)
-            self._takes += 1
-            self.ledger.append("get", key)
-            return key, value
-
-    # ---------------------------------------------------------------- misc
-    def count(self, pattern: Pattern) -> int:
-        with self._lock:
-            subject = pattern[0]
-            if subject is ANY:
-                keys = (k for b in self._store.values() for k in b)
-            else:
-                keys = iter(self._store.get(subject, {}))
-            return sum(1 for k in keys if match(pattern, k))
-
-    def keys(self, pattern: Pattern) -> list[Key]:
-        with self._lock:
-            subject = pattern[0]
-            if subject is ANY:
-                keys = [k for b in self._store.values() for k in b]
-            else:
-                keys = list(self._store.get(subject, {}))
-            return [k for k in keys if match(pattern, k)]
-
-    def delete(self, pattern: Pattern) -> int:
-        """Remove all tuples matching pattern; returns count removed."""
-        with self._lock:
-            removed = 0
-            subjects = list(self._store) if pattern[0] is ANY else [pattern[0]]
-            for s in subjects:
-                bucket = self._store.get(s, {})
-                for key in [k for k in bucket if match(pattern, k)]:
-                    del bucket[key]
-                    self.ledger.append("del", key)
-                    removed += 1
-            if removed:
-                self._lock.notify_all()
-            return removed
-
-    def stats(self) -> dict[str, int]:
-        with self._lock:
-            return {
-                "puts": self._puts,
-                "takes": self._takes,
-                "reads": self._reads,
-                "live": sum(len(b) for b in self._store.values()),
-            }
-
-    def snapshot(self) -> dict[Key, Any]:
-        """A consistent copy of the full store (Manager restart support)."""
-        with self._lock:
-            return {k: v for b in self._store.values() for k, v in b.items()}
+__all__ = ["ANY", "Key", "Pattern", "TSTimeout", "TupleSpace",
+           "make_backend", "match"]

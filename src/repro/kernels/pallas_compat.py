@@ -1,0 +1,10 @@
+"""Pallas API compatibility shims shared by all kernels.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` in
+0.5; alias whichever exists so every kernel uses one spelling on both.
+"""
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

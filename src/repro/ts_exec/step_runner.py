@@ -30,7 +30,7 @@ import numpy as np
 
 from repro.core.conflict import CommitWindow
 from repro.core.gss import TimeoutController
-from repro.core.tuplespace import ANY, TSTimeout, TupleSpace
+from repro.core.space import ANY, TSTimeout, TupleSpace
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import model as M
 
@@ -46,6 +46,7 @@ class ACANTrainConfig:
     timeout: float = 5.0
     handler_crash_prob: float = 0.0   # per task, before completing
     data_mode: str = "cyclic"         # learnable by default
+    ts_backend: str | None = None     # None -> $REPRO_TS_BACKEND
     seed: int = 0
 
 
@@ -61,7 +62,7 @@ class ACANStepRunner:
     def __init__(self, cfg: M.ModelConfig, tcfg: ACANTrainConfig) -> None:
         self.cfg = cfg
         self.tcfg = tcfg
-        self.ts = TupleSpace()
+        self.ts = TupleSpace(backend=tcfg.ts_backend)
         self.window = CommitWindow()
         self.controller = TimeoutController(timeout=tcfg.timeout,
                                             max_timeout=60.0)

@@ -4,8 +4,7 @@ The partition must (a) respect the size cap, (b) exactly tile the original
 task's (input × output) rectangle with disjoint pieces, (c) follow the
 4-way / 2-way split rules, (d) round-trip the declarative wire format."""
 
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
 from repro.core.tasks import stage_order
