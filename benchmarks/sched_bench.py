@@ -1,0 +1,128 @@
+"""Control-plane scheduling benchmark — event-driven vs polling (PR 2).
+
+    PYTHONPATH=src python benchmarks/sched_bench.py [--smoke] [--backend B]
+
+Runs the paper's §6.1 workload (2-layer MLP, 4 handlers) twice on the
+same tuple-space backend wrapped in ``InstrumentedBackend`` — once with
+``scheduling="poll"`` (the pre-PR-2 fixed-cadence control plane: 4 ms
+done-mark scans in the Manager, 50 ms single-``get`` loops in Handlers,
+20 ms finished-flag busy-wait in the Cloud) and once with
+``scheduling="event"`` (blocking ``wait_count`` pouch barriers, batched
+``take_batch`` task pickup, blocking finished ``read``) — and reports per
+mode:
+
+- **TS ops / pouch** — total instrumented tuple-space operations divided
+  by completed pouch rounds (the control-plane cost of one unit of
+  scheduling progress);
+- **idle wakeups** — ``try_read``/``try_get`` misses plus blocking-op
+  timeouts: wakeups that accomplished nothing;
+- wallclock and the mean loss of the final epoch (trajectories must
+  agree across modes — scheduling must not perturb training numerics).
+
+Acceptance (exit code): event mode must use **>= 5x fewer TS ops per
+completed pouch** than poll mode, with wallclock no worse (1.15x slack
+for timer noise) and matching loss trajectories (1e-3 rtol — the batched
+executor may reassociate float reductions).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec  # noqa: E402
+from repro.configs.paper_mlp import PAPER_LR  # noqa: E402
+
+#: ops-per-pouch improvement the event-driven control plane must deliver.
+OPS_RATIO_FLOOR = 5.0
+WALLCLOCK_SLACK = 1.15
+
+
+def run_mode(scheduling: str, backend: str, layers, epochs: int,
+             n_samples: int, seed: int) -> dict:
+    cfg = CloudConfig(
+        layers=layers, n_handlers=4, epochs=epochs, n_samples=n_samples,
+        task_cap=256.0, pouch_size=100, lr=PAPER_LR, time_scale=2e-6,
+        initial_timeout=0.25, fault_plan=FaultPlan(interval=1e9),
+        seed=seed, wall_limit=600.0, scheduling=scheduling,
+        ts_backend=f"instrumented:{backend}")
+    cloud = ACANCloud(cfg)
+    res = cloud.run()
+    metrics = cloud.ts.backend.metrics()
+    stats = cloud.ts.stats()
+    ops = stats["instr_ops"]
+    pouches = max(res.pouches, 1)
+    return {
+        "scheduling": scheduling,
+        "ops": ops,
+        "pouches": res.pouches,
+        "ops_per_pouch": ops / pouches,
+        "idle_wakeups": stats["instr_misses"] + stats["instr_timeouts"],
+        "wallclock": res.wallclock,
+        "losses": [l for _, l in res.loss_history],
+        "per_op": {op: int(m["calls"]) for op, m in sorted(metrics.items())},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default="sharded",
+                    help="inner tuple-space backend spec (default: sharded)")
+    ap.add_argument("--epochs", type=int, default=2)
+    ap.add_argument("--samples", type=int, default=100)
+    ap.add_argument("--dim", type=int, default=256,
+                    help="hidden width (paper §6.1: 256)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run: same 256-wide §6.1 geometry "
+                         "(pouches must span several poll ticks for the "
+                         "comparison to be representative), 1 epoch, "
+                         "8 samples")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.epochs, args.samples = 1, 8
+    layers = [LayerSpec(args.dim, args.dim), LayerSpec(args.dim, 1)]
+
+    results = {}
+    for scheduling in ("poll", "event"):
+        results[scheduling] = run_mode(scheduling, args.backend, layers,
+                                       args.epochs, args.samples, args.seed)
+
+    poll, event = results["poll"], results["event"]
+    width = 18
+    print(f"{'':<{width}}{'poll':>14}{'event':>14}{'poll/event':>12}")
+    print("-" * (width + 40))
+    for label, key in [("TS ops total", "ops"),
+                       ("pouches", "pouches"),
+                       ("TS ops / pouch", "ops_per_pouch"),
+                       ("idle wakeups", "idle_wakeups"),
+                       ("wallclock (s)", "wallclock")]:
+        p, e = poll[key], event[key]
+        ratio = p / e if e else float("inf")
+        print(f"{label:<{width}}{p:>14,.1f}{e:>14,.1f}{ratio:>11.1f}x")
+    print(f"\nper-op calls, poll : {poll['per_op']}")
+    print(f"per-op calls, event: {event['per_op']}")
+
+    ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
+    wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
+    loss_ok = (len(poll["losses"]) == len(event["losses"])
+               and np.allclose(poll["losses"], event["losses"],
+                               rtol=1e-3, atol=1e-5))
+    ok = ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
+    print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
+          f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
+          f"wallclock {'OK' if wall_ok else 'WORSE'}, "
+          f"loss trajectories {'match' if loss_ok else 'DIVERGE'} "
+          f"-> {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

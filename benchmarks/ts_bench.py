@@ -15,6 +15,8 @@ Phases (each reports ops/s per backend and the sharded/local speedup):
   many live completion marks — the Manager ``_pending`` scan; the
   (subject, arity) index + concrete-pattern fast path make this O(1) on
   the sharded backend.
+- ``take_batch``: drain a full queue 16-at-a-time — the Handler's
+  batched pickup (one lock acquisition per batch instead of per tuple).
 - ``single-thread put/get``: uncontended baseline.
 """
 
@@ -29,7 +31,7 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core.space import TSTimeout, make_backend  # noqa: E402
+from repro.core.space import ANY, TSTimeout, make_backend  # noqa: E402
 
 BACKENDS = ["local", "sharded", "sharded:16"]
 
@@ -106,6 +108,18 @@ def bench_done_polling(spec: str, live: int, polls: int) -> float:
     return polls / (time.perf_counter() - t0)
 
 
+def bench_take_batch(spec: str, ops: int, batch: int = 16) -> float:
+    """Drain a full queue via take_batch vs one-at-a-time get — the
+    Handler's batched pickup path (delivered tuples/s)."""
+    ts = make_backend(spec)
+    ts.put_many(iter([(("q", i), i) for i in range(ops)]))
+    taken = 0
+    t0 = time.perf_counter()
+    while taken < ops:
+        taken += len(ts.take_batch(("q", ANY), batch, timeout=1.0))
+    return ops / (time.perf_counter() - t0)
+
+
 def bench_single_thread(spec: str, ops: int) -> tuple[float, float]:
     ts = make_backend(spec)
     t0 = time.perf_counter()
@@ -124,7 +138,11 @@ def main() -> int:
     ap.add_argument("--threads", type=int, default=8)
     ap.add_argument("--ops", type=int, default=20_000,
                     help="ops per thread in contended phases")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI run (4 threads, 4k ops), same gate")
     args = ap.parse_args()
+    if args.smoke:
+        args.threads, args.ops = 4, 4_000
 
     results: dict[str, dict[str, float]] = {b: {} for b in BACKENDS}
     for spec in BACKENDS:
@@ -137,6 +155,8 @@ def main() -> int:
             bench_blocking_pipeline(spec, args.threads, args.ops // 2)
         results[spec]["done_poll_5k_live"] = \
             bench_done_polling(spec, live=5_000, polls=20_000)
+        results[spec]["take_batch_16"] = \
+            bench_take_batch(spec, args.ops, batch=16)
 
     phases = list(results[BACKENDS[0]])
     width = max(len(p) for p in phases) + 2

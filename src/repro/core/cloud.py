@@ -19,9 +19,9 @@ import numpy as np
 
 from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.handler import Handler, SpeedBox
-from repro.core.manager import Manager, ManagerConfig
+from repro.core.manager import Manager, ManagerConfig, validate_scheduling
 from repro.core.tasks import LayerSpec
-from repro.core.space import ANY, TupleSpace
+from repro.core.space import ANY, TSTimeout, TupleSpace
 
 
 @dataclass
@@ -41,6 +41,12 @@ class CloudConfig:
     data_noise: float = 0.0
     wall_limit: float = 600.0                      # hard safety limit (s)
     ts_backend: str | None = None                  # None -> $REPRO_TS_BACKEND
+    scheduling: str = "event"                      # "event" | "poll" baseline
+    handler_batch: int = 16                        # tasks per take_batch
+    history_limit: int = 10_000                    # thist/losshist cap
+
+    def __post_init__(self) -> None:
+        validate_scheduling(self.scheduling)
 
 
 @dataclass
@@ -92,7 +98,9 @@ class ACANCloud:
                 layers=self.cfg.layers, epochs=self.cfg.epochs,
                 n_samples=self.cfg.n_samples, task_cap=self.cfg.task_cap,
                 pouch_size=self.cfg.pouch_size, lr=self.cfg.lr,
-                initial_timeout=self.cfg.initial_timeout, seed=self.cfg.seed),
+                initial_timeout=self.cfg.initial_timeout,
+                scheduling=self.cfg.scheduling,
+                history_limit=self.cfg.history_limit, seed=self.cfg.seed),
             power_fn=power_fn,
             crash_event=self._manager_crash,
             stop_event=self.stop_event,
@@ -115,6 +123,8 @@ class ACANCloud:
         h = Handler(ts=self.ts, name=f"h{i}", speed=self._speed_boxes[i],
                     capacity=self.cfg.task_cap, lr=self.cfg.lr,
                     time_scale=self.cfg.time_scale,
+                    batch_size=self.cfg.handler_batch,
+                    scheduling=self.cfg.scheduling,
                     crash_event=self._handler_crashes[i],
                     stop_event=self.stop_event)
         self._handlers[i] = h
@@ -167,11 +177,19 @@ class ACANCloud:
         dthread.start()
 
         # Wait for the Manager to publish the finished flag (revivals keep
-        # the job alive through crashes).
-        while self.ts.try_read(("mstate", "finished")) is None:
-            if time.monotonic() - t0 > cfg.wall_limit:
-                break
-            time.sleep(0.02)
+        # the job alive through crashes): one blocking read with the wall
+        # limit as the deadline — the completion put wakes us directly.
+        # ("poll" scheduling keeps the busy-wait as the benchmark baseline.)
+        if cfg.scheduling == "poll":
+            while self.ts.try_read(("mstate", "finished")) is None:
+                if time.monotonic() - t0 > cfg.wall_limit:
+                    break
+                time.sleep(0.02)
+        else:
+            try:
+                self.ts.read(("mstate", "finished"), timeout=cfg.wall_limit)
+            except TSTimeout:
+                pass                    # wall limit hit — stop everything
         self.stop_event.set()
         dthread.join(timeout=2.0)
         wall = time.monotonic() - t0
@@ -179,12 +197,18 @@ class ACANCloud:
         loss_hist = sorted(
             (k[1], self.ts.try_read(k)[1])
             for k in self.ts.keys(("losshist", ANY)))
+        # timeout_history holds at most ManagerConfig.history_limit rounds
+        # (the newest); the pouch count comes from the per-round-
+        # checkpointed ("mstate", "rounds") counter instead, so neither
+        # the cap nor a revival can deflate it.
         thist = []
         for k in self.ts.keys(("thist", ANY, ANY)):
             v = self.ts.try_read(k)
             if v is not None:
                 thist.append((k[1], v[1]["timeout"], v[1]["power"]))
         thist.sort()
+        rounds_hit = self.ts.try_read(("mstate", "rounds"))
+        total_rounds = rounds_hit[1] if rounds_hit is not None else 0
         return CloudResult(
             loss_history=loss_hist,
             timeout_history=thist,
@@ -194,5 +218,5 @@ class ACANCloud:
             wallclock=wall,
             ts_stats=self.ts.stats(),
             ledger_ok=self.ts.ledger.verify(),
-            pouches=len(thist),
+            pouches=total_rounds,
         )

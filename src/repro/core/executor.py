@@ -22,13 +22,44 @@ key                                          value
                                               slice ``ol:oh`` to ``il:ih``)
 ``("gW", l, data_id)`` / ``("gB", l, ...)``  combined gradients
 ``("wnew", l, step, ol, oh)``                updated W rows (+"bnew" bias)
-``("done", task_id)``                        completion mark
 ==========================================  =================================
+
+Control-plane key conventions (Manager/Handler scheduling):
+
+===============================================  ===========================
+key                                              value
+===============================================  ===========================
+``("task", tid)``                                task wire string — or
+                                                 ``(wire, handler_name)``
+                                                 after a "store": the name
+                                                 tags which handler put it
+                                                 back so it can skip its
+                                                 own re-puts for one
+                                                 backoff cycle
+``("done", kind, l, data_id, step,``             completion mark, keyed by
+``  in_lo, in_hi, out_lo, out_hi)``              task *content*; all marks
+                                                 of one stage share (kind,
+                                                 l, data_id, step), so the
+                                                 Manager's pouch barrier is
+                                                 one ``wait_count`` over
+                                                 this pattern (the done
+                                                 counter)
+``("mstate", "cursor")`` / ``("mstate",``        Manager resume cursor /
+``  "rounds")`` / ``("mstate", "finished")``     per-round pouch counter
+                                                 (monotonic across
+                                                 revivals) / job-completion
+                                                 flag the Cloud blocks a
+                                                 ``read`` on
+===============================================  ===========================
 
 Every task's output is a *pure function of tuples it reads* — duplicate
 execution re-writes identical values, which is the paper's §5.4 idempotency
 argument for all kinds except ``update``; updates are keyed by ``step`` and
 committed exactly once by the Manager's sliding window (:mod:`conflict`).
+:meth:`TaskExecutor.execute_batch` exploits the same purity to run a
+*group* of compatible tasks (same kind/layer/data_id/step) vectorized —
+shared inputs read once, tiles stacked into one batched matmul, outputs
+written through a single ``put_many``.
 
 Hidden activation is ``tanh`` (regression setting, paper §5.1/§6.1); the
 last layer is linear.
@@ -36,6 +67,7 @@ last layer is linear.
 
 from __future__ import annotations
 
+from collections import defaultdict
 from dataclasses import dataclass
 
 import numpy as np
@@ -99,6 +131,128 @@ class TaskExecutor:
             self._update(task)
         else:  # pragma: no cover
             raise ValueError(task.kind)
+
+    def execute_batch(self, tasks: list[TaskDesc]) -> None:
+        """Execute a *group* of compatible tasks (same kind, layer,
+        data_id, step) vectorized: shared inputs are read from TS once,
+        uniform-shape tiles are stacked into one batched matmul, and all
+        outputs land through a single ``put_many``.
+
+        Raises :class:`PreconditionUnmet` before writing anything if the
+        group's inputs are missing — the whole group is discarded exactly
+        as each task would be individually. A heterogeneous list falls
+        back to sequential :meth:`execute`.
+        """
+        if not tasks:
+            return
+        t0 = tasks[0]
+        if len(tasks) == 1:
+            return self.execute(t0)
+        sig = (t0.kind, t0.layer, t0.data_id, t0.step)
+        if any((t.kind, t.layer, t.data_id, t.step) != sig
+               for t in tasks[1:]):
+            for t in tasks:
+                self.execute(t)
+            return
+        if t0.kind == TaskKind.FORWARD:
+            self.ts.put_many(self._forward_parts(tasks))
+        elif t0.kind == TaskKind.ACTIVATION:
+            self.ts.put_many(self._activation_parts(tasks))
+        elif t0.kind == TaskKind.LOSS:
+            self.ts.put_many(self._loss_parts(tasks))
+        elif t0.kind == TaskKind.BACKWARD:
+            self.ts.put_many(self._backward_parts(tasks))
+        elif t0.kind == TaskKind.UPDATE:
+            self.ts.put_many(self._update_parts(tasks))
+        else:  # pragma: no cover
+            raise ValueError(t0.kind)
+
+    @staticmethod
+    def _by_shape(tasks: list[TaskDesc]):
+        """Stacking needs uniform tile shapes; edge tiles may differ."""
+        groups: dict[tuple[int, int], list[TaskDesc]] = defaultdict(list)
+        for t in tasks:
+            groups[(t.m, t.n)].append(t)
+        return groups.values()
+
+    # ------------------------------------------------------ batched kernels
+    def _forward_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
+        t0 = tasks[0]
+        x = self._input_vec(t0.layer, t0.data_id)
+        W = self._require(("w", t0.layer))
+        items = []
+        for group in self._by_shape(tasks):
+            tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+                              for t in group])
+            xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
+            parts = np.matmul(tiles, xs[:, :, None])[:, :, 0]
+            items.extend(
+                ((("fpart", t.layer, t.data_id, t.out_lo, t.out_hi,
+                   t.in_lo, t.in_hi), part.astype(np.float32)))
+                for t, part in zip(group, parts))
+        return items
+
+    def _activation_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
+        t0 = tasks[0]
+        pre = self._require(("pre", t0.layer, t0.data_id))
+        act = activation(pre).astype(np.float32)
+        return [(("actpart", t.layer, t.data_id, t.out_lo, t.out_hi),
+                 act[t.out_lo:t.out_hi]) for t in tasks]
+
+    def _loss_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
+        t0 = tasks[0]
+        pre = self._require(("pre", t0.layer, t0.data_id))
+        label = self._require(("label", t0.data_id))
+        n_total = pre.shape[0]
+        items = []
+        for t in tasks:
+            diff = pre[t.out_lo:t.out_hi] - label[t.out_lo:t.out_hi]
+            items.append((("losspart", t.data_id, t.out_lo, t.out_hi),
+                          np.float32(np.sum(diff * diff) / n_total)))
+            items.append((("dypart", t.layer, t.data_id, t.out_lo, t.out_hi),
+                          (2.0 * diff / n_total).astype(np.float32)))
+        return items
+
+    def _backward_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
+        t0 = tasks[0]
+        dy = self._require(("dy", t0.layer, t0.data_id))
+        x = self._input_vec(t0.layer, t0.data_id)
+        W = self._require(("w", t0.layer))
+        items = []
+        for group in self._by_shape(tasks):
+            dys = np.stack([dy[t.out_lo:t.out_hi] for t in group])
+            xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
+            tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+                              for t in group])
+            # outer products and dx partials, batched over the group
+            gws = dys[:, :, None] * xs[:, None, :]
+            bparts = np.matmul(tiles.transpose(0, 2, 1),
+                               dys[:, :, None])[:, :, 0]
+            for t, gw, bp in zip(group, gws, bparts):
+                items.append((("gw", t.layer, t.data_id, t.out_lo, t.out_hi,
+                               t.in_lo, t.in_hi), gw.astype(np.float32)))
+                items.append((("bpart", t.layer, t.data_id, t.in_lo, t.in_hi,
+                               t.out_lo, t.out_hi), bp.astype(np.float32)))
+                if t.in_lo == 0:
+                    items.append((("gb", t.layer, t.data_id,
+                                   t.out_lo, t.out_hi),
+                                  dy[t.out_lo:t.out_hi].astype(np.float32)))
+        return items
+
+    def _update_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
+        t0 = tasks[0]
+        W = self._require(("w", t0.layer))
+        b = self._require(("b", t0.layer))
+        gW = self._require(("gW", t0.layer, t0.data_id))
+        gB = self._require(("gB", t0.layer, t0.data_id))
+        items = []
+        for t in tasks:
+            rows = slice(t.out_lo, t.out_hi)
+            items.append((("wnew", t.layer, t.step, t.out_lo, t.out_hi),
+                          (W[rows] - self.lr * gW[rows]).astype(np.float32)))
+            items.append((("bnew", t.layer, t.step, t.out_lo, t.out_hi),
+                          (b[rows] - self.lr * gB[rows]).astype(np.float32)))
+        return items
 
     # -------------------------------------------------------------- kernels
     def _forward(self, t: TaskDesc) -> None:

@@ -103,10 +103,22 @@ class MonitorDaemon:
     def manager_alive(self) -> bool:
         return self._mthread is not None and self._mthread.is_alive()
 
+    #: Liveness-check quantum — ``Thread.is_alive`` has no event to wait
+    #: on, so death detection is inherently periodic; this bounds revival
+    #: latency. Everything else (stop, fault deadline) is event-or-deadline.
+    LIVENESS_QUANTUM = 0.05
+
     def run(self) -> None:
         last_fault = time.monotonic()
         while not self.stop_event.is_set():
-            time.sleep(min(self.plan.interval / 5.0, 0.05))
+            now = time.monotonic()
+            next_fault = last_fault + self.plan.interval
+            # Event-or-deadline wait: wakes immediately on stop, otherwise
+            # sleeps until the next fault deadline (capped by the liveness
+            # quantum) instead of a fixed cadence.
+            if self.stop_event.wait(
+                    min(max(next_fault - now, 0.0), self.LIVENESS_QUANTUM)):
+                return
             now = time.monotonic()
             if now - last_fault >= self.plan.interval:
                 self._fire_faults()

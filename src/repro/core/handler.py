@@ -1,28 +1,43 @@
 """The ACAN Handler (paper §4).
 
-A Handler continuously ``get()``\\ s task tuples from TS, checks that the
-task matches its **capability** (maximum task size — a too-big task is
-*stored* back for another handler, the paper's "process or store" choice),
-checks execution **preconditions** (inputs present in TS — otherwise the
-task is discarded; the Manager's timeout will re-issue it), executes, writes
-results, and marks completion.
+A Handler ``take_batch()``\\ es task tuples from TS (blocking on arrival —
+no fixed-cadence polling), checks each against its **capability** (maximum
+task size — a too-big task is *stored* back for another handler, the
+paper's "process or store" choice), groups compatible tasks (same
+kind/layer/data_id/step), checks execution **preconditions** per group
+(inputs present in TS — otherwise the group is discarded; the Manager's
+timeout will re-issue it), executes each group vectorized through
+:meth:`~repro.core.executor.TaskExecutor.execute_batch`, writes results,
+and marks completion with one batched put.
+
+"Store" livelock guard: a stored task is re-put tagged with the storing
+handler's name (value becomes ``(wire, name)``). If the same handler
+drains its own fresh re-put it puts the task straight back and backs off
+for one ``store_backoff`` cycle instead of spinning take→store→take —
+with every handler under-capacity, the task circulates gently at backoff
+cadence until the Manager sweeps and re-partitions it, while small tasks
+keep flowing.
 
 Heterogeneity is emulated by a per-handler **speed** (paper §6: ratios
-1:5:10, re-drawn at runtime): after computing a task the handler sleeps
-``cost / speed × time_scale``. Crashes are injected via an event checked
-*inside* the sleep, so a crash genuinely interrupts in-flight work (the
-taken task tuple is lost with the handler — exactly the failure the
+1:5:10, re-drawn at runtime): a group costs one sleep of
+``sum(cost) / speed × time_scale``. Crashes are injected via an event
+checked *inside* the sleep, so a crash genuinely interrupts in-flight work
+(the taken task tuples are lost with the handler — exactly the failure the
 timeout/retransmission discipline must cover).
+
+``scheduling="poll"`` preserves the pre-PR-2 single-get/50 ms-timeout
+loop as the measured baseline for ``benchmarks/sched_bench.py``.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from collections import defaultdict
 from dataclasses import dataclass, field
 
 from repro.core.executor import PreconditionUnmet, TaskExecutor
-from repro.core.manager import content_key
+from repro.core.manager import content_key, validate_scheduling
 from repro.core.tasks import TaskDesc
 from repro.core.space import ANY, TSTimeout, TupleSpace
 
@@ -46,6 +61,14 @@ class SpeedBox:
             self.speed = v
 
 
+def _unpack_task(value) -> tuple[str, str | None]:
+    """Task tuple value -> (wire, stored_by). Fresh Manager issues carry
+    the bare wire string; handler "store" re-puts carry (wire, name)."""
+    if isinstance(value, tuple):
+        return value
+    return value, None
+
+
 @dataclass
 class Handler:
     ts: TupleSpace
@@ -54,11 +77,16 @@ class Handler:
     capacity: float = 256.0           # max task size it can handle (4^4)
     lr: float = 0.01
     time_scale: float = 2e-6          # seconds of sleep per unit cost at speed 1
+    batch_size: int = 16              # max tasks drained per take_batch
+    take_timeout: float = 0.2         # crash/stop responsiveness bound
+    store_backoff: float = 0.02       # own-tagged re-put skip window
+    scheduling: str = "event"         # "event" (batched) | "poll" (seed loop)
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     tasks_done: int = 0
     tasks_discarded: int = 0
     tasks_stored: int = 0
+    batches_taken: int = 0
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
@@ -78,28 +106,101 @@ class Handler:
             time.sleep(min(remaining, 0.01))
 
     def run(self) -> None:
+        validate_scheduling(self.scheduling)
         executor = TaskExecutor(self.ts, lr=self.lr)
+        if self.scheduling == "poll":
+            return self._run_poll(executor)
+        return self._run_event(executor)
+
+    # --------------------------------------------------------- event loop
+    def _run_event(self, executor: TaskExecutor) -> None:
+        # ("task", tid) -> monotonic time until which an own-tagged re-put
+        # is skipped (put straight back untouched).
+        skip_until: dict[tuple, float] = {}
         while not self.stop_event.is_set():
             self._maybe_crash()
             try:
-                key, wire = self.ts.get(("task", ANY), timeout=0.05)
+                batch = self.ts.take_batch(("task", ANY), self.batch_size,
+                                           timeout=self.take_timeout)
             except TSTimeout:
                 continue
+            self.batches_taken += 1
+            now = time.monotonic()
+            runnable: list[TaskDesc] = []
+            deferred = 0
+            for key, value in batch:
+                wire, stored_by = _unpack_task(value)
+                if stored_by == self.name and now < skip_until.get(key, 0.0):
+                    # Own fresh re-put: hand it back untouched and let
+                    # another handler reach it first.
+                    self.ts.put(key, value)
+                    deferred += 1
+                    continue
+                task = TaskDesc.from_wire(wire)
+                if task.cost() > self.capacity:
+                    # "store": put it back for a more capable handler,
+                    # tagged so we skip it for one backoff cycle.
+                    self.ts.put(key, (wire, self.name))
+                    skip_until[key] = now + self.store_backoff
+                    self.tasks_stored += 1
+                    deferred += 1
+                    continue
+                runnable.append(task)
+            if len(skip_until) > 4 * self.batch_size:   # prune stale tids
+                skip_until = {k: t for k, t in skip_until.items() if t > now}
+            for group in self._group(runnable):
+                # Emulated compute time for the whole group — proportional
+                # to summed cost, inversely to current speed (paper §6.2).
+                self._throttled_sleep(sum(t.cost() for t in group)
+                                      * self.time_scale
+                                      / max(self.speed.get(), 1e-6))
+                if self.stop_event.is_set():
+                    return
+                try:
+                    executor.execute_batch(group)
+                except PreconditionUnmet:
+                    # Inputs not in TS yet: discard the group; the
+                    # Manager's timeout re-issues it (§5.1).
+                    self.tasks_discarded += len(group)
+                    continue
+                self.ts.put_many(
+                    (("done",) + content_key(t), self.name) for t in group)
+                self.tasks_done += len(group)
+            if deferred and not runnable:
+                # Nothing but own/too-big tasks in the space: back off
+                # instead of spinning on our own re-puts.
+                self.stop_event.wait(self.store_backoff)
+
+    @staticmethod
+    def _group(tasks: list[TaskDesc]) -> list[list[TaskDesc]]:
+        """Group compatible tasks for vectorized execution."""
+        groups: dict[tuple, list[TaskDesc]] = defaultdict(list)
+        for t in tasks:
+            groups[(t.kind, t.layer, t.data_id, t.step)].append(t)
+        return list(groups.values())
+
+    # ---------------------------------------------------------- poll loop
+    def _run_poll(self, executor: TaskExecutor) -> None:
+        """The pre-PR-2 loop: one 50 ms-timeout get per task, untagged
+        stores — the measured baseline for ``benchmarks/sched_bench.py``."""
+        while not self.stop_event.is_set():
+            self._maybe_crash()
+            try:
+                key, value = self.ts.get(("task", ANY), timeout=0.05)
+            except TSTimeout:
+                continue
+            wire, _ = _unpack_task(value)
             task = TaskDesc.from_wire(wire)
             if task.cost() > self.capacity:
-                # "store": put it back for a more capable handler.
                 self.ts.put(key, wire)
                 self.tasks_stored += 1
                 time.sleep(0.001)
                 continue
-            # Emulated compute time — proportional to task cost, inversely
-            # to current speed (paper §6.2).
             self._throttled_sleep(task.cost() * self.time_scale
                                   / max(self.speed.get(), 1e-6))
             try:
                 executor.execute(task)
             except PreconditionUnmet:
-                # Inputs not in TS yet: discard; Manager re-issues (§5.1).
                 self.tasks_discarded += 1
                 continue
             self.ts.put(("done",) + content_key(task), self.name)

@@ -5,10 +5,14 @@ The Manager:
 1. derives prototype tasks for the current sample/stage, partitions them to
    the uniform task-size cap, and publishes **pouches** (≤ ``pouch_size``
    task descriptions) into TS with a **timeout**;
-2. upon timeout (or early completion), evaluates completion marks, adapts
-   the timeout (:class:`~repro.core.gss.TimeoutController`), sweeps untaken
-   task tuples, and re-issues unfinished tasks — the timeout/retransmission
-   discipline;
+2. waits on a **done-counter barrier** — a single blocking
+   :meth:`~repro.core.space.TupleSpace.wait_count` over the stage's
+   done-mark pattern with the GSS timeout as the *deadline* (the paper's
+   timeout discipline, minus the polling: the Manager wakes on each
+   completion event instead of re-scanning every done mark each tick);
+   upon deadline (or early completion) it evaluates completion marks,
+   adapts the timeout (:class:`~repro.core.gss.TimeoutController`), sweeps
+   untaken task tuples, and re-issues unfinished tasks;
 3. combines stage results (partial sums → full vectors) and commits
    parameter updates through the §5.4 sliding window;
 4. checkpoints its cursor into TS after every stage, so a crashed Manager
@@ -18,7 +22,21 @@ The Manager:
 
 Completion marks are keyed by task *content* (not attempt), so a slow
 handler finishing attempt k still satisfies attempt k+1 — redundant
-execution is harmless by construction.
+execution is harmless by construction. All tasks of one stage share
+``(kind, layer, data_id, step)``, so the stage's done marks form one
+pattern — which is what makes both the blocking barrier and the
+single-``keys()`` pending scan possible.
+
+Crash semantics under the blocking barrier: an injected crash set while
+the Manager is parked inside ``wait_count`` fires at the next wakeup
+(completion, arrival, or the GSS deadline — never later than the current
+timeout), the thread dies mid-pouch, and the daemon revives a fresh
+Manager that resumes from the TS cursor exactly as under the old poll
+loop (covered by ``tests/test_acan_training.py``).
+
+``scheduling="poll"`` preserves the pre-PR-2 fixed-cadence control plane
+— kept as the measured baseline for ``benchmarks/sched_bench.py``, not
+for production use.
 """
 
 from __future__ import annotations
@@ -35,11 +53,24 @@ from repro.core.executor import activation, activation_deriv_from_act
 from repro.core.gss import TimeoutController
 from repro.core.tasks import (LayerSpec, TaskDesc, TaskKind, partition,
                               prototype_tasks, stage_order)
-from repro.core.space import ANY, TupleSpace
+from repro.core.space import ANY, TSTimeout, TupleSpace
 
 
 class ManagerCrash(Exception):
     """Injected fault — the Manager thread dies here."""
+
+
+#: Valid control-plane modes; the single validator shared by CloudConfig,
+#: ManagerConfig and Handler (each branches on the value — a typo must not
+#: silently select event mode).
+SCHEDULING_MODES = ("event", "poll")
+
+
+def validate_scheduling(value: str) -> str:
+    if value not in SCHEDULING_MODES:
+        raise ValueError(
+            f"scheduling must be one of {SCHEDULING_MODES}, got {value!r}")
+    return value
 
 
 def content_key(t: TaskDesc) -> tuple:
@@ -56,9 +87,20 @@ class ManagerConfig:
     pouch_size: int = 100            # paper §6
     lr: float = 0.01
     initial_timeout: float = 0.25
-    poll_quantum: float = 0.004
+    poll_quantum: float = 0.004      # poll-mode only: done-scan cadence
     strict_timeout: bool = False     # True = always wait the full timeout
+    scheduling: str = "event"        # "event" (blocking barrier) | "poll"
+    #: Upper bound on one blocking slice of the pouch barrier. The barrier
+    #: is event-driven (completion arrivals end it immediately); this only
+    #: bounds how stale a pending crash/stop event can go unnoticed while
+    #: the Manager is parked — the GSS timeout can grow to tens of
+    #: seconds, and a crash must not wait that long to fire.
+    barrier_quantum: float = 0.05
+    history_limit: int = 10_000      # cap on ("thist",...)/("losshist",...)
     seed: int = 0
+
+    def __post_init__(self) -> None:
+        validate_scheduling(self.scheduling)
 
 
 @dataclass
@@ -100,6 +142,11 @@ class Manager:
         st = hit[1]
         self.controller.timeout = st.get("timeout", self.controller.timeout)
         self.window = CommitWindow.from_state(st.get("window", {}))
+        # Rounds are checkpointed per round (not per stage, which would
+        # lose straggler rounds of the crashed stage) so the count stays
+        # monotonic across revivals — CloudResult.pouches reads it.
+        rounds = self.ts.try_read(("mstate", "rounds"))
+        self.rounds = rounds[1] if rounds is not None else 0
         return st["epoch"], st["sample"], st["stage_idx"]
 
     def _maybe_crash(self) -> None:
@@ -119,15 +166,116 @@ class Manager:
     def _sweep_untaken(self) -> int:
         return self.ts.delete(("task", ANY))
 
+    @staticmethod
+    def _stage_done_pattern(t: TaskDesc) -> tuple:
+        """Done-mark pattern covering every task of ``t``'s stage — all
+        tasks in a stage share (kind, layer, data_id, step)."""
+        return ("done", t.kind.value, t.layer, t.data_id, t.step,
+                ANY, ANY, ANY, ANY)
+
     def _pending(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
+        """Tasks (all from ONE stage) without a done mark. One ``keys()``
+        scan over the stage pattern replaces the seed's N concrete
+        ``try_read`` calls per evaluation."""
+        if not tasks:
+            return []
+        done = set(self.ts.keys(self._stage_done_pattern(tasks[0])))
         return [t for t in tasks
-                if self.ts.try_read(("done",) + content_key(t)) is None]
+                if ("done",) + content_key(t) not in done]
+
+    def _finish_round(self, pouch: list[TaskDesc], still: list[TaskDesc],
+                      elapsed: float) -> None:
+        """Adapt the timeout, record history, sweep untaken task tuples."""
+        done_frac = 1.0 - len(still) / max(len(pouch), 1)
+        self.controller.update(not still, elapsed, done_frac)
+        self.rounds += 1
+        self.ts.delete(("mstate", "rounds"))
+        self.ts.put(("mstate", "rounds"), self.rounds)
+        self.ts.put(("thist", time.time(), self.rounds),
+                    {"timeout": self.controller.timeout,
+                     "power": self.power_fn(),
+                     "elapsed": elapsed,
+                     "done_frac": done_frac})
+        # Cap timeout history by live count, not round numbers — a crash
+        # landing between the increment and its checkpoint can re-number
+        # one round, so counting is the robust trim criterion.
+        limit = self.cfg.history_limit
+        if limit:
+            extra = self.ts.count(("thist", ANY, ANY)) - limit
+            if extra > 0:
+                for k in sorted(self.ts.keys(("thist", ANY, ANY)))[:extra]:
+                    self.ts.delete(k)
+        # Sweep task tuples nobody took before re-issuing stragglers.
+        self._sweep_untaken()
 
     def _run_stage(self, tasks: list[TaskDesc]) -> None:
-        """Pouch-dispatch until every task in the stage has a done mark."""
+        """Pouch-dispatch until every task in the stage has a done mark.
+
+        Event mode (default): one blocking ``wait_count`` on the stage's
+        done-mark count per pouch, with the GSS timeout as the deadline —
+        the Manager wakes on each completion arrival, not on a cadence.
+        """
+        if self.cfg.scheduling == "poll":
+            return self._run_stage_poll(tasks)
+        if not tasks:
+            return
+        done_pat = self._stage_done_pattern(tasks[0])
+        total = len(tasks)
         while not self.stop_event.is_set():
             self._maybe_crash()
             pending = self._pending(tasks)
+            if not pending:
+                return
+            pouch = pending[: self.cfg.pouch_size]
+            self._issue(pouch)
+            # Barrier target: stage done-marks already present + this
+            # pouch. In-flight stragglers from a previous round are always
+            # at the front of `pending` (order is preserved), hence inside
+            # this pouch — the stage count cannot overshoot the target.
+            target = (total - len(pending)) + len(pouch)
+            timeout = self.controller.timeout
+            t0 = time.monotonic()
+            deadline = t0 + timeout
+            # Blocking barrier, sliced at barrier_quantum: a completion
+            # arrival ends the wait immediately (event), while a crash
+            # injected mid-wait fires within one quantum instead of
+            # lingering until the (possibly tens-of-seconds) GSS deadline
+            # — that lingering would stall recovery, since lost in-flight
+            # tasks are only re-issued by a fresh round.
+            barrier_met = False
+            while not self.stop_event.is_set():
+                self._maybe_crash()
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break                 # deadline: evaluate what landed
+                try:
+                    self.ts.wait_count(
+                        done_pat, target,
+                        timeout=min(remaining, self.cfg.barrier_quantum))
+                    barrier_met = True
+                    break
+                except TSTimeout:
+                    continue
+            if self.cfg.strict_timeout:
+                rest = deadline - time.monotonic()
+                if rest > 0:
+                    self.stop_event.wait(rest)
+            # A crash that landed during the final slice fires here —
+            # mid-pouch, resumed from the cursor by the revived Manager.
+            self._maybe_crash()
+            elapsed = time.monotonic() - t0
+            # Barrier reached == stage count hit the target == every pouch
+            # task has its mark (the count cannot overshoot, see above) —
+            # no need to re-scan.
+            still = [] if barrier_met else self._pending(pouch)
+            self._finish_round(pouch, still, elapsed)
+
+    def _run_stage_poll(self, tasks: list[TaskDesc]) -> None:
+        """The pre-PR-2 fixed-cadence loop (``poll_quantum`` re-scans) —
+        the measured baseline for ``benchmarks/sched_bench.py``."""
+        while not self.stop_event.is_set():
+            self._maybe_crash()
+            pending = self._pending_polled(tasks)
             if not pending:
                 return
             pouch = pending[: self.cfg.pouch_size]
@@ -138,23 +286,18 @@ class Manager:
                 self._maybe_crash()
                 time.sleep(self.cfg.poll_quantum)
                 elapsed = time.monotonic() - t0
-                still = self._pending(pouch)
+                still = self._pending_polled(pouch)
                 if not still and not self.cfg.strict_timeout:
                     break
                 if elapsed >= timeout:
                     break
             elapsed = time.monotonic() - t0
-            still = self._pending(pouch)
-            done_frac = 1.0 - len(still) / max(len(pouch), 1)
-            self.controller.update(not still, elapsed, done_frac)
-            self.rounds += 1
-            self.ts.put(("thist", time.time(), self.rounds),
-                        {"timeout": self.controller.timeout,
-                         "power": self.power_fn(),
-                         "elapsed": elapsed,
-                         "done_frac": done_frac})
-            # Sweep task tuples nobody took before re-issuing stragglers.
-            self._sweep_untaken()
+            self._finish_round(pouch, self._pending_polled(pouch), elapsed)
+
+    def _pending_polled(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
+        """Seed-style pending scan: one concrete try_read per task."""
+        return [t for t in tasks
+                if self.ts.try_read(("done",) + content_key(t)) is None]
 
     # ------------------------------------------------------------- combines
     # Key iteration is SORTED everywhere: fp32 accumulation order must not
@@ -192,6 +335,12 @@ class Manager:
             dy[k[3]:k[4]] = self.ts.try_read(k)[1]
         self.ts.put(("loss", data_id, step), np.float32(loss))
         self.ts.put(("losshist", step), float(loss))
+        # Cap loss history (steps are monotonic across revivals, so a
+        # step-number cut is safe here, unlike rounds in _finish_round).
+        limit = self.cfg.history_limit
+        if limit and step >= limit:
+            cut = step - limit
+            self.ts.delete(("losshist", lambda s: s <= cut))
         self.ts.put(("dy", L, data_id), dy)
 
     def _combine_backward(self, l: int, data_id: int, spec: LayerSpec) -> None:
@@ -247,7 +396,11 @@ class Manager:
                     ("bpart", ANY, data_id, ANY, ANY, ANY, ANY),
                     ("gW", ANY, data_id), ("gB", ANY, data_id),
                     ("pre", ANY, data_id), ("act", ANY, data_id),
-                    ("dy", ANY, data_id)]:
+                    ("dy", ANY, data_id),
+                    # per-sample loss tuples: nothing reads them after the
+                    # combine (losshist carries the trajectory) — leaving
+                    # them was unbounded TS garbage, one per sample-step.
+                    ("loss", data_id, ANY)]:
             self.ts.delete(pat)
         self.ts.delete(("done", ANY, ANY, data_id, ANY, ANY, ANY, ANY, ANY))
 

@@ -29,6 +29,25 @@ Backends are selected through :func:`repro.core.space.make_backend`
 (driven by the ``REPRO_TS_BACKEND`` environment variable) and consumed
 through the :class:`repro.core.space.TupleSpace` facade.
 
+Beyond the paper's three primitives, the protocol exposes three *reactive*
+blocking operations that let the control plane wait for events instead of
+polling at a fixed cadence (PR 2):
+
+- ``take_batch(pattern, max_n, timeout)`` — block until at least one
+  match exists, then take up to ``max_n`` matches in FIFO (global put)
+  order. For a fixed-subject pattern the batch is drained atomically
+  under one lock acquisition, so a Handler amortises the taking cost
+  across many tasks; a subject-widened pattern spans shards and only
+  guarantees per-tuple atomicity (each tuple still goes to exactly one
+  taker) and FIFO order *within* the returned batch.
+- ``wait_count(pattern, n, timeout)`` — block until at least ``n`` live
+  tuples match, re-checking on each arrival; returns the observed count.
+  This is the Manager's pouch *done-counter barrier*: one blocked waiter
+  replaces thousands of per-tick ``try_read`` polls.
+- ``read(pattern, timeout)`` — the paper's blocking non-destructive
+  read, now also the Cloud's completion wait (block on
+  ``("mstate", "finished")`` with the wall limit as deadline).
+
 Shared semantic guarantees (the conformance suite in
 ``tests/test_tuplespace.py`` enforces these identically per backend):
 
@@ -36,6 +55,13 @@ Shared semantic guarantees (the conformance suite in
   across subjects/shards for widened (``ANY``/predicate-subject) patterns;
   re-putting a live key moves it to the back of the queue (its latest
   ``put`` defines its position);
+- ``take_batch`` returns between 1 and ``max_n`` tuples, FIFO-ordered in
+  global put order within the batch, and journals each removal like
+  ``get``; it raises :class:`TSTimeout` only when *zero* matches appeared
+  before the deadline;
+- ``wait_count`` is level-triggered: it returns immediately when the
+  count is already ≥ ``n`` (and always for ``n <= 0``) and never removes
+  anything;
 - ``read`` never removes; ``get``/``try_get`` remove atomically (no two
   takers receive the same tuple);
 - ``delete``/``count``/``keys`` honour ``ANY`` and predicate subjects
@@ -159,6 +185,10 @@ class SpaceBackend(Protocol):
              timeout: float | None = None) -> tuple[Key, Any]: ...
     def get(self, pattern: Pattern,
             timeout: float | None = None) -> tuple[Key, Any]: ...
+    def take_batch(self, pattern: Pattern, max_n: int,
+                   timeout: float | None = None) -> list[tuple[Key, Any]]: ...
+    def wait_count(self, pattern: Pattern, n: int,
+                   timeout: float | None = None) -> int: ...
 
     # non-blocking access -----------------------------------------------
     def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None: ...

@@ -109,6 +109,21 @@ class TupleSpace:
         see the tuple (paper §4)."""
         return self.backend.get(pattern, timeout)
 
+    def take_batch(self, pattern: Pattern, max_n: int,
+                   timeout: float | None = None) -> list[tuple[Key, Any]]:
+        """Block until ≥ 1 match, then destructively take up to ``max_n``,
+        FIFO-ordered in global put order — the Handler's batched task
+        pickup. Fixed-subject patterns drain under one lock acquisition;
+        widened patterns guarantee per-tuple atomicity only."""
+        return self.backend.take_batch(pattern, max_n, timeout)
+
+    def wait_count(self, pattern: Pattern, n: int,
+                   timeout: float | None = None) -> int:
+        """Block until ≥ ``n`` live tuples match (woken on each arrival);
+        returns the observed count — the Manager's pouch done-counter
+        barrier."""
+        return self.backend.wait_count(pattern, n, timeout)
+
     def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None:
         return self.backend.try_read(pattern)
 

@@ -1,12 +1,15 @@
 """``InstrumentedBackend`` — transparent wrapper adding latency and
 contention counters to any :class:`~repro.core.space.api.SpaceBackend`.
 
-Used by ``benchmarks/ts_bench.py`` to attribute time per operation and by
-tests to assert hot-path behaviour. Counters per operation name: calls,
-total/max latency (µs); plus blocking-specific counters (``timeouts``,
-``blocked`` = blocking calls that did not return immediately, and total
-blocked time). ``metrics()`` returns the full breakdown; ``stats()``
-returns the inner backend's stats augmented with aggregate counters.
+Used by ``benchmarks/ts_bench.py`` / ``benchmarks/sched_bench.py`` to
+attribute time per operation and by tests to assert hot-path behaviour.
+Counters per operation name: calls, total/max latency (µs), and misses
+(``try_read``/``try_get`` returning ``None`` — the idle-poll wakeups the
+event-driven control plane eliminates); plus blocking-specific counters
+(``timeouts``, ``blocked`` = blocking calls that did not return
+immediately, and total blocked time). ``metrics()`` returns the full
+breakdown; ``stats()`` returns the inner backend's stats augmented with
+aggregate counters.
 """
 
 from __future__ import annotations
@@ -22,18 +25,21 @@ _BLOCKED_THRESHOLD_US = 500.0
 
 
 class _OpStat:
-    __slots__ = ("calls", "total_us", "max_us")
+    __slots__ = ("calls", "total_us", "max_us", "misses")
 
     def __init__(self) -> None:
         self.calls = 0
         self.total_us = 0.0
         self.max_us = 0.0
+        self.misses = 0
 
-    def record(self, us: float) -> None:
+    def record(self, us: float, miss: bool = False) -> None:
         self.calls += 1
         self.total_us += us
         if us > self.max_us:
             self.max_us = us
+        if miss:
+            self.misses += 1
 
 
 class InstrumentedBackend:
@@ -57,13 +63,13 @@ class InstrumentedBackend:
         self.inner.journal = hook
 
     def _record(self, op: str, t0: float, blocking: bool = False,
-                timed_out: bool = False) -> None:
+                timed_out: bool = False, miss: bool = False) -> None:
         us = (time.perf_counter() - t0) * 1e6
         with self._lock:
             stat = self._ops.get(op)
             if stat is None:
                 stat = self._ops[op] = _OpStat()
-            stat.record(us)
+            stat.record(us, miss=miss)
             if timed_out:
                 self.timeouts += 1
             if blocking and us > _BLOCKED_THRESHOLD_US:
@@ -77,11 +83,16 @@ class InstrumentedBackend:
         finally:
             self._record(op, t0)
 
-    def _timed_blocking(self, op: str, fn, pattern: Pattern,
-                        timeout: float | None):
+    def _timed_try(self, op: str, fn, pattern: Pattern):
+        t0 = time.perf_counter()
+        result = fn(pattern)
+        self._record(op, t0, miss=result is None)
+        return result
+
+    def _timed_blocking(self, op: str, fn, *args):
         t0 = time.perf_counter()
         try:
-            result = fn(pattern, timeout)
+            result = fn(*args)
         except TSTimeout:
             self._record(op, t0, blocking=True, timed_out=True)
             raise
@@ -101,11 +112,21 @@ class InstrumentedBackend:
     def get(self, pattern: Pattern, timeout: float | None = None):
         return self._timed_blocking("get", self.inner.get, pattern, timeout)
 
+    def take_batch(self, pattern: Pattern, max_n: int,
+                   timeout: float | None = None):
+        return self._timed_blocking("take_batch", self.inner.take_batch,
+                                    pattern, max_n, timeout)
+
+    def wait_count(self, pattern: Pattern, n: int,
+                   timeout: float | None = None):
+        return self._timed_blocking("wait_count", self.inner.wait_count,
+                                    pattern, n, timeout)
+
     def try_read(self, pattern: Pattern):
-        return self._timed("try_read", self.inner.try_read, pattern)
+        return self._timed_try("try_read", self.inner.try_read, pattern)
 
     def try_get(self, pattern: Pattern):
-        return self._timed("try_get", self.inner.try_get, pattern)
+        return self._timed_try("try_get", self.inner.try_get, pattern)
 
     def count(self, pattern: Pattern) -> int:
         return self._timed("count", self.inner.count, pattern)
@@ -121,13 +142,14 @@ class InstrumentedBackend:
 
     # ----------------------------------------------------- introspection
     def metrics(self) -> dict[str, dict[str, float]]:
-        """Per-op latency breakdown: {op: {calls, total_us, mean_us, max_us}}."""
+        """Per-op latency breakdown:
+        {op: {calls, total_us, mean_us, max_us, misses}}."""
         with self._lock:
             out = {}
             for op, s in self._ops.items():
                 out[op] = {"calls": s.calls, "total_us": s.total_us,
                            "mean_us": s.total_us / max(s.calls, 1),
-                           "max_us": s.max_us}
+                           "max_us": s.max_us, "misses": s.misses}
             return out
 
     def stats(self) -> dict[str, int]:
@@ -136,4 +158,5 @@ class InstrumentedBackend:
             inner["instr_ops"] = sum(s.calls for s in self._ops.values())
             inner["instr_timeouts"] = self.timeouts
             inner["instr_blocked"] = self.blocked
+            inner["instr_misses"] = sum(s.misses for s in self._ops.values())
         return inner

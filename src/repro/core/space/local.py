@@ -24,6 +24,7 @@ from __future__ import annotations
 import threading
 import time
 from collections import defaultdict
+from itertools import islice
 from typing import Any, Iterable
 
 from repro.core.space.api import (ANY, Journal, Key, Pattern, TSTimeout,
@@ -92,6 +93,25 @@ class LocalBackend:
                     break
         return best_key
 
+    def _find_batch(self, pattern: Pattern, max_n: int) -> list[Key]:
+        """Up to ``max_n`` matching keys in global put (seq) order."""
+        if subject_is_fixed(pattern[0]):
+            # Single bucket, dict order == seq order (re-puts move to the
+            # back): islice stops at max_n — a full scan would make
+            # draining a long queue in batches quadratic.
+            bucket = self._store.get(pattern[0])
+            if bucket is None:
+                return []
+            return list(islice(
+                (k for k in bucket if match(pattern, k)), max_n))
+        hits: list[tuple[int, Key]] = []
+        for bucket in self._buckets(pattern):
+            for key, (seq, _) in bucket.items():
+                if match(pattern, key):
+                    hits.append((seq, key))
+        hits.sort()
+        return [k for _, k in hits[:max_n]]
+
     def _blocking(self, pattern: Pattern, timeout: float | None,
                   destructive: bool) -> tuple[Key, Any]:
         deadline = None if timeout is None else time.monotonic() + timeout
@@ -125,6 +145,56 @@ class LocalBackend:
 
     def get(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
         return self._blocking(pattern, timeout, destructive=True)
+
+    def take_batch(self, pattern: Pattern, max_n: int,
+                   timeout: float | None = None) -> list[tuple[Key, Any]]:
+        """Block until ≥ 1 match, then take up to ``max_n`` atomically
+        (one lock acquisition), FIFO in global put order."""
+        if max_n < 1:
+            raise ValueError(f"max_n must be >= 1, got {max_n}")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while True:
+                keys = self._find_batch(pattern, max_n)
+                if keys:
+                    out = []
+                    for key in keys:
+                        bucket = self._store[key[0]]
+                        out.append((key, bucket.pop(key)[1]))
+                        if not bucket:
+                            del self._store[key[0]]
+                        self._takes += 1
+                        if self.journal is not None:
+                            self.journal("get", key)
+                    return out
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TSTimeout(f"pattern {pattern!r} timed out")
+                    self._lock.wait(remaining)
+                else:
+                    self._lock.wait()
+
+    def wait_count(self, pattern: Pattern, n: int,
+                   timeout: float | None = None) -> int:
+        """Block until ≥ ``n`` tuples match (re-checked on each arrival);
+        returns the observed count. Non-destructive."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while True:
+                c = sum(1 for b in self._buckets(pattern)
+                        for k in b if match(pattern, k))
+                if c >= n:
+                    self._reads += 1
+                    return c
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TSTimeout(
+                            f"wait_count {pattern!r} >= {n} timed out at {c}")
+                    self._lock.wait(remaining)
+                else:
+                    self._lock.wait()
 
     def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None:
         with self._lock:

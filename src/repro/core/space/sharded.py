@@ -30,12 +30,19 @@ exists (checked with a GIL-atomic counter read), so the common put path
 never takes a global lock. The waiter increments the counter *before* its
 scan, which makes the wakeup race-free: any put that the scan missed must
 observe the already-incremented counter and bump the epoch.
+
+The reactive primitives (``take_batch``/``wait_count``, PR 2) ride the
+same two mechanisms: a fixed-subject batch drains its single (subject,
+arity) bucket under one shard-lock acquisition (bucket dict order is seq
+order, so the batch is FIFO for free), and widened batches/counts reuse
+the waiter-epoch protocol so puts stay cheap when nobody is waiting.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from itertools import islice
 from typing import Any, Iterable
 
 from repro.core.space.api import (Journal, Key, Pattern, TSTimeout,
@@ -231,6 +238,137 @@ class ShardedBackend:
                             if remaining <= 0:
                                 raise TSTimeout(
                                     f"pattern {pattern!r} timed out")
+                            self._gcond.wait(remaining)
+                        else:
+                            self._gcond.wait()
+                    epoch = self._events
+        finally:
+            with self._gcond:
+                self._any_waiters -= 1
+
+    # ------------------------------------------------- batched / counted
+    def _take_batch_fixed_locked(self, shard: _Shard, pattern: Pattern,
+                                 max_n: int) -> list[tuple[Key, Any]]:
+        """Up to ``max_n`` matches from the pattern's single (subject,
+        arity) bucket. Bucket dict order IS seq order (re-puts move to the
+        back), so iteration order is already FIFO."""
+        bucket = shard.store.get((pattern[0], len(pattern)))
+        if not bucket:
+            return []
+        # islice stops at max_n — a full-bucket scan would make draining a
+        # long queue in batches quadratic.
+        taken = list(islice((k for k in bucket if match(pattern, k)), max_n))
+        return [(k, self._remove_locked(shard, k)) for k in taken]
+
+    def _take_batch_widened(self, pattern: Pattern,
+                            max_n: int) -> list[tuple[Key, Any]]:
+        """One attempt at a cross-shard batch: collect every match with
+        its seq stamp, sort globally, then take the first ``max_n`` from
+        their shards (skipping keys raced away by concurrent takers)."""
+        arity = len(pattern)
+        found: list[tuple[int, Key]] = []
+        for shard in self._shards:
+            with shard.cond:
+                for (_, a), bucket in shard.store.items():
+                    if a != arity:
+                        continue
+                    found.extend((seq, key) for key, (seq, _) in bucket.items()
+                                 if match(pattern, key))
+        found.sort()
+        out: list[tuple[Key, Any]] = []
+        for _, key in found:
+            if len(out) >= max_n:
+                break
+            shard = self._shard_of(key[0])
+            with shard.cond:
+                bucket = shard.store.get((key[0], len(key)))
+                if bucket is None or key not in bucket:
+                    continue            # raced with another taker
+                out.append((key, self._remove_locked(shard, key)))
+        return out
+
+    def take_batch(self, pattern: Pattern, max_n: int,
+                   timeout: float | None = None) -> list[tuple[Key, Any]]:
+        if max_n < 1:
+            raise ValueError(f"max_n must be >= 1, got {max_n}")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        if subject_is_fixed(pattern[0]):
+            shard = self._shard_of(pattern[0])
+            with shard.cond:
+                while True:
+                    out = self._take_batch_fixed_locked(shard, pattern, max_n)
+                    if out:
+                        return out
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise TSTimeout(f"pattern {pattern!r} timed out")
+                        shard.cond.wait(remaining)
+                    else:
+                        shard.cond.wait()
+        # Widened: register as a global waiter BEFORE scanning (same
+        # race-free protocol as _blocking).
+        with self._gcond:
+            self._any_waiters += 1
+            epoch = self._events
+        try:
+            while True:
+                out = self._take_batch_widened(pattern, max_n)
+                if out:
+                    return out
+                with self._gcond:
+                    while self._events == epoch:
+                        if deadline is not None:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                raise TSTimeout(
+                                    f"pattern {pattern!r} timed out")
+                            self._gcond.wait(remaining)
+                        else:
+                            self._gcond.wait()
+                    epoch = self._events
+        finally:
+            with self._gcond:
+                self._any_waiters -= 1
+
+    def wait_count(self, pattern: Pattern, n: int,
+                   timeout: float | None = None) -> int:
+        deadline = None if timeout is None else time.monotonic() + timeout
+        if subject_is_fixed(pattern[0]):
+            shard = self._shard_of(pattern[0])
+            with shard.cond:
+                while True:
+                    c = sum(1 for b in self._buckets_locked(shard, pattern)
+                            for k in b if match(pattern, k))
+                    if c >= n:
+                        shard.reads += 1
+                        return c
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise TSTimeout(
+                                f"wait_count {pattern!r} >= {n} "
+                                f"timed out at {c}")
+                        shard.cond.wait(remaining)
+                    else:
+                        shard.cond.wait()
+        # Widened: count spans shards, so wake on the global epoch.
+        with self._gcond:
+            self._any_waiters += 1
+            epoch = self._events
+        try:
+            while True:
+                c = self.count(pattern)
+                if c >= n:
+                    return c
+                with self._gcond:
+                    while self._events == epoch:
+                        if deadline is not None:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                raise TSTimeout(
+                                    f"wait_count {pattern!r} >= {n} "
+                                    f"timed out at {c}")
                             self._gcond.wait(remaining)
                         else:
                             self._gcond.wait()

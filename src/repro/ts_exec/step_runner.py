@@ -4,7 +4,9 @@ Data-parallel SGD where every microbatch-gradient is an ACAN task flowing
 through the Tuple Space:
 
 - the Manager publishes ``("gtask", step, micro)`` descriptors (a pouch),
-  waits out the adaptive timeout, re-issues stragglers;
+  blocks on a ``wait_count`` done-counter barrier over the step's
+  ``("gdone", step, *)`` marks with the adaptive timeout as the deadline,
+  re-issues stragglers;
 - Handler threads ``get()`` tasks, compute ``grad(loss)`` with a jitted
   step on the *deterministic* microbatch ``batch_at(step·M + micro)`` and
   ``put`` the gradient tree back keyed by content — duplicate execution
@@ -85,7 +87,9 @@ class ACANStepRunner:
     def _handler(self, name: str) -> None:
         while not self.stop.is_set():
             try:
-                key, _ = self.ts.get(("gtask", ANY, ANY), timeout=0.05)
+                # Blocking take; the timeout only bounds stop-event
+                # responsiveness (gradient tasks are heavy, so batch=1).
+                key, _ = self.ts.get(("gtask", ANY, ANY), timeout=0.2)
             except TSTimeout:
                 continue
             _, step, micro = key
@@ -134,14 +138,18 @@ class ACANStepRunner:
             while pending:
                 for micro in sorted(pending):
                     self.ts.put(("gtask", step, micro), "issued")
+                # Done-counter barrier: block until every microbatch of
+                # this step has a gdone mark, with the adaptive timeout as
+                # the deadline (no 10 ms polling).
                 t0 = time.monotonic()
-                while time.monotonic() - t0 < self.controller.timeout:
-                    pending = {m for m in range(tcfg.n_micro)
-                               if self.ts.try_read(("gdone", step, m)) is None}
-                    if not pending:
-                        break
-                    time.sleep(0.01)
+                try:
+                    self.ts.wait_count(("gdone", step, ANY), tcfg.n_micro,
+                                       timeout=self.controller.timeout)
+                except TSTimeout:
+                    pass
                 elapsed = time.monotonic() - t0
+                done = {k[2] for k in self.ts.keys(("gdone", step, ANY))}
+                pending = set(range(tcfg.n_micro)) - done
                 done_frac = 1 - len(pending) / tcfg.n_micro
                 self.controller.update(not pending, elapsed, done_frac)
                 if pending:

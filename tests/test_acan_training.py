@@ -28,9 +28,12 @@ def test_exp1_feasibility_loss_decreases():
 
 
 def test_exp2_adaptability_inverse_timeout_power():
+    # Fault intervals are compressed vs the paper because the event-driven
+    # control plane (PR 2) finishes this workload in well under a second —
+    # the plan must still fire several times *during* the run.
     res = ACANCloud(_small_cfg(
-        epochs=1,
-        fault_plan=FaultPlan(interval=0.15, speed_levels=(1.0, 5.0, 10.0),
+        epochs=4, n_samples=20,
+        fault_plan=FaultPlan(interval=0.05, speed_levels=(1.0, 5.0, 10.0),
                              p_speed_change=1.0, seed=3))).run()
     th = res.timeout_history
     t = np.array([x[1] for x in th])
@@ -43,8 +46,11 @@ def test_exp2_adaptability_inverse_timeout_power():
 
 
 def test_exp3_robustness_crashes_everywhere():
+    # interval must stay above the daemon's revival quantum (0.05 s): at or
+    # below it, every revived thread meets an already-set crash event and
+    # dies before doing any work.
     res = ACANCloud(_small_cfg(
-        fault_plan=FaultPlan(interval=0.25, speed_levels=(1.0, 5.0, 10.0),
+        fault_plan=FaultPlan(interval=0.1, speed_levels=(1.0, 5.0, 10.0),
                              p_speed_change=1.0, p_handler_crash=1.0,
                              p_manager_crash=1.0, seed=1))).run()
     losses = [l for _, l in res.loss_history]
@@ -78,7 +84,7 @@ def test_manager_restart_mid_training_continues():
     from the TS cursor and completes every sample exactly once."""
     res = ACANCloud(_small_cfg(
         epochs=1,
-        fault_plan=FaultPlan(interval=0.4, p_manager_crash=1.0,
+        fault_plan=FaultPlan(interval=0.08, p_manager_crash=1.0,
                              seed=2))).run()
     steps = [s for s, _ in res.loss_history]
     assert sorted(set(steps)) == list(range(10))

@@ -186,6 +186,155 @@ def test_take_fairness_concurrent_takers(ts):
     assert sorted(taken) == list(range(N))
 
 
+# ------------------------------------------- blocking primitives (PR 2)
+def test_read_blocking_timeout(ts):
+    """read shares get's timeout semantics but never removes."""
+    with pytest.raises(TSTimeout):
+        ts.read(("missing", ANY), timeout=0.05)
+    with pytest.raises(TSTimeout):
+        ts.read((ANY, ANY), timeout=0.05)
+    ts.put(("k", 1), "v")
+    assert ts.read(("k", ANY), timeout=0.05) == (("k", 1), "v")
+    assert ts.count(("k", ANY)) == 1
+
+
+def test_take_batch_fifo_and_partial(ts):
+    """A batch is FIFO in global put order, capped at max_n, and a second
+    call drains the remainder (fewer than max_n is fine)."""
+    for i in range(5):
+        ts.put((f"s{i % 2}", i), i)
+    batch = ts.take_batch((ANY, ANY), 3)
+    assert [v for _, v in batch] == [0, 1, 2]
+    batch = ts.take_batch((ANY, ANY), 10)
+    assert [v for _, v in batch] == [3, 4]
+    assert ts.count((ANY, ANY)) == 0
+
+
+def test_take_batch_fixed_subject_fifo(ts):
+    ts.put_many([(("task", f"t{i}"), i) for i in range(8)])
+    batch = ts.take_batch(("task", ANY), 5)
+    assert [v for _, v in batch] == [0, 1, 2, 3, 4]
+
+
+def test_take_batch_timeout_and_bad_max_n(ts):
+    with pytest.raises(TSTimeout):
+        ts.take_batch(("missing", ANY), 4, timeout=0.05)
+    with pytest.raises(TSTimeout):
+        ts.take_batch((ANY, ANY), 4, timeout=0.05)   # widened times out too
+    with pytest.raises(ValueError):
+        ts.take_batch(("x", ANY), 0)
+
+
+def test_take_batch_blocks_until_put_cross_shard(ts):
+    """A blocked widened-pattern batch taker is woken by puts landing on
+    any shard and drains what arrived."""
+    got = []
+
+    def taker():
+        got.append(ts.take_batch((ANY, ANY), 8, timeout=5.0))
+
+    th = threading.Thread(target=taker)
+    th.start()
+    time.sleep(0.05)
+    assert not got
+    ts.put_many([((f"subj{i}", i), i) for i in range(4)])  # several shards
+    th.join(timeout=5.0)
+    # The taker may wake after any prefix of the puts landed; whatever it
+    # drained must be that prefix in global put order.
+    assert got and [v for _, v in got[0]] == list(range(len(got[0])))
+
+
+def test_take_batch_is_destructive_and_journaled(ts):
+    ts.put(("j", 1), "a")
+    ts.put(("j", 2), "b")
+    taken = ts.take_batch(("j", ANY), 2)
+    assert len(taken) == 2 and ts.count(("j", ANY)) == 0
+    ops = [(e.op, e.key) for e in ts.ledger.entries]
+    assert ops == [("put", ("j", 1)), ("put", ("j", 2)),
+                   ("get", ("j", 1)), ("get", ("j", 2))]
+
+
+def test_take_batch_concurrent_takers_no_duplicates(ts):
+    """Concurrent batch takers on one pattern partition the tuples —
+    nothing delivered twice, nothing lost."""
+    N, taken, lock = 64, [], threading.Lock()
+
+    def taker():
+        while True:
+            try:
+                batch = ts.take_batch(("job", ANY), 8, timeout=0.3)
+            except TSTimeout:
+                return
+            with lock:
+                taken.extend(v for _, v in batch)
+
+    threads = [threading.Thread(target=taker) for _ in range(4)]
+    for th in threads:
+        th.start()
+    ts.put_many(iter([(("job", i), i) for i in range(N)]))
+    for th in threads:
+        th.join(timeout=5.0)
+    assert sorted(taken) == list(range(N))
+
+
+def test_wait_count_immediate_and_nonpositive(ts):
+    for i in range(3):
+        ts.put(("done", i), i)
+    assert ts.wait_count(("done", ANY), 3) == 3
+    assert ts.wait_count(("done", ANY), 0) == 3
+    assert ts.wait_count(("done", ANY), -1) == 3
+    # non-destructive
+    assert ts.count(("done", ANY)) == 3
+
+
+def test_wait_count_wakes_on_arrivals(ts):
+    """A parked wait_count returns as soon as the n-th match arrives —
+    fixed-subject pattern, arrivals interleaved with unrelated puts."""
+    res = []
+
+    def waiter():
+        res.append(ts.wait_count(("done", ANY), 3, timeout=5.0))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    ts.put(("done", 0), 0)
+    ts.put(("other", 0), 0)            # unrelated subject: no early return
+    ts.put(("done", 1), 1)
+    time.sleep(0.05)
+    assert not res
+    ts.put(("done", 2), 2)
+    th.join(timeout=5.0)
+    assert res == [3]
+
+
+def test_wait_count_cross_shard_widened(ts):
+    """A widened (ANY-subject) wait_count counts across all shards and is
+    woken by puts landing on any of them."""
+    res = []
+
+    def waiter():
+        res.append(ts.wait_count((ANY, ANY, ANY), 3, timeout=5.0))
+
+    th = threading.Thread(target=waiter)
+    th.start()
+    time.sleep(0.05)
+    for i in range(3):                  # distinct subjects -> shards
+        ts.put((f"w{i}", i, i), i)
+    th.join(timeout=5.0)
+    assert res == [3]
+
+
+def test_wait_count_timeout_semantics(ts):
+    ts.put(("done", 0), 0)
+    with pytest.raises(TSTimeout):
+        ts.wait_count(("done", ANY), 2, timeout=0.05)
+    with pytest.raises(TSTimeout):
+        ts.wait_count((ANY, ANY), 2, timeout=0.05)   # widened
+    # the short-fall wait did not disturb the store
+    assert ts.count(("done", ANY)) == 1
+
+
 # ----------------------------------------------- delete / count / keys
 def test_delete_and_snapshot(ts):
     for i in range(6):
