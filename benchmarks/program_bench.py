@@ -1,0 +1,200 @@
+"""WorkloadProgram benchmark — three workloads, one control plane (PR 3).
+
+    PYTHONPATH=src python benchmarks/program_bench.py \
+        [--smoke] [--backend B] [--programs mlp,moe,moe_faults,jax]
+
+Runs each program through the *same* Manager/Handler plane and reports
+wallclock, TS traffic, pouch rounds, and the loss trajectory ends:
+
+- ``mlp``        — the paper's §6.1 workload (regular, 5 MLP ops);
+- ``moe``        — the non-regular MoE routing program: data-dependent
+                   per-expert task sizes (min/max cost spread reported);
+- ``moe_faults`` — the MoE program under an **exp3-style fault plan**
+                   (Manager AND all Handlers crash each interval with
+                   p=1.0, speeds 1:5:10 re-drawn) — the non-regular
+                   robustness gate;
+- ``jax``        — the JAX-SGD program (reduced smollm) with 25%
+                   per-task handler crashes.
+
+Acceptance (exit code): every selected program's loss must decrease,
+``moe`` must exhibit irregular (non-uniform) expert task costs, and
+``moe_faults`` must complete all rounds with ≥ 1 manager revival and
+≥ 1 handler revival.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import (ACANCloud, CloudConfig, FaultPlan, GLOBAL_OPS,  # noqa: E402
+                        LayerSpec, MoERoutingProgram)
+
+DEFAULT_PROGRAMS = "mlp,moe,moe_faults,jax"
+
+
+def _ts_ops(res) -> int:
+    s = res.ts_stats
+    return s.get("puts", 0) + s.get("takes", 0) + s.get("reads", 0)
+
+
+def run_mlp(smoke: bool, backend: str | None) -> dict:
+    # The exp1 CI geometry (SGD bs=1 is noisy — single epochs over few
+    # samples do not give a stable first/last comparison).
+    epochs, n_samples = (2, 16) if smoke else (2, 100)
+    cfg = CloudConfig(layers=[LayerSpec(64, 64), LayerSpec(64, 1)],
+                      n_handlers=4, epochs=epochs, n_samples=n_samples,
+                      task_cap=256.0, pouch_size=100, lr=0.01,
+                      time_scale=1e-6, initial_timeout=0.12,
+                      fault_plan=FaultPlan(interval=1e9), seed=0,
+                      wall_limit=240.0, ts_backend=backend)
+    res = ACANCloud(cfg).run()
+    losses = [l for _, l in res.loss_history]
+    half = len(losses) // 2
+    return {"name": "program_mlp", "wall": res.wallclock,
+            "ts_ops": _ts_ops(res), "pouches": res.pouches,
+            "first": float(np.mean(losses[:half])),
+            "last": float(np.mean(losses[half:])),
+            "completed": len(losses) == epochs * n_samples,
+            "ok": bool(np.mean(losses[half:]) < np.mean(losses[:half]))}
+
+
+def _moe_cost_spread(prog: MoERoutingProgram) -> tuple[float, float]:
+    """(min, max) expert task cost of one routing round — the measured
+    irregularity of the non-regular program."""
+    costs = [GLOBAL_OPS.cost(t) for t in prog.probe_expert_tasks()]
+    return (min(costs), max(costs)) if costs else (0.0, 0.0)
+
+
+def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
+    steps = (12 if smoke else 24) if faults else (8 if smoke else 16)
+    prog = MoERoutingProgram(steps=steps, seed=0)
+    plan = (FaultPlan(interval=0.1, speed_levels=(1.0, 5.0, 10.0),
+                      p_speed_change=1.0, p_handler_crash=1.0,
+                      p_manager_crash=1.0, seed=1)
+            if faults else FaultPlan(interval=1e9))
+    # The faults gate requires >= 1 manager AND handler revival, so the
+    # workload must outlive several plan ticks on a machine of any speed:
+    # scale the emulated per-task compute up for that leg instead of
+    # trusting wallclock luck.
+    time_scale = 2e-5 if faults else 1e-6
+    cfg = CloudConfig(n_handlers=4, task_cap=256.0, pouch_size=64,
+                      time_scale=time_scale, initial_timeout=0.1,
+                      fault_plan=plan, wall_limit=240.0, ts_backend=backend)
+    res = ACANCloud(cfg, program=prog).run()
+    losses = [l for _, l in res.loss_history]
+    lo, hi = _moe_cost_spread(prog)
+    completed = len(losses) == steps
+    decreased = bool(len(losses) >= 4
+                     and np.mean(losses[-3:]) < np.mean(losses[:3]))
+    out = {"name": "program_moe_faults" if faults else "program_moe",
+           "wall": res.wallclock, "ts_ops": _ts_ops(res),
+           "pouches": res.pouches, "first": float(np.mean(losses[:3])),
+           "last": float(np.mean(losses[-3:])), "completed": completed,
+           "cost_min": lo, "cost_max": hi,
+           "mgr_revive": res.manager_revivals,
+           "hdl_revive": res.handler_revivals}
+    if faults:
+        out["ok"] = (completed and decreased and res.manager_revivals >= 1
+                     and res.handler_revivals >= 1)
+    else:
+        out["ok"] = completed and decreased and hi > lo
+    return out
+
+
+def run_jax(smoke: bool, backend: str | None) -> dict:
+    from repro.configs import get_config
+    from repro.ts_exec.step_runner import ACANStepRunner, ACANTrainConfig
+    steps = 4 if smoke else 8
+    runner = ACANStepRunner(
+        get_config("smollm_360m", reduced=True),
+        ACANTrainConfig(n_handlers=3, n_micro=3, micro_batch=2, seq=32,
+                        steps=steps, lr=0.05, timeout=20.0,
+                        handler_crash_prob=0.25, seed=0, ts_backend=backend))
+    t0 = time.perf_counter()
+    res = runner.run()
+    wall = time.perf_counter() - t0
+    return {"name": "program_jax_sgd", "wall": wall, "ts_ops": 0,
+            "pouches": res.param_versions, "first": res.losses[0],
+            "last": res.losses[-1], "completed": len(res.losses) == steps,
+            "crashes": res.crashes, "reissues": res.reissues,
+            "ok": bool(len(res.losses) == steps
+                       and res.losses[-1] < res.losses[0])}
+
+
+def run_programs(programs: list[str], smoke: bool,
+                 backend: str | None) -> list[dict]:
+    out = []
+    for name in programs:
+        if name == "mlp":
+            out.append(run_mlp(smoke, backend))
+        elif name == "moe":
+            out.append(run_moe(smoke, backend, faults=False))
+        elif name == "moe_faults":
+            out.append(run_moe(smoke, backend, faults=True))
+        elif name == "jax":
+            out.append(run_jax(smoke, backend))
+        else:
+            raise SystemExit(f"unknown program {name!r}")
+    return out
+
+
+def bench_rows(smoke: bool = True, backend: str | None = None,
+               include_jax: bool = False) -> list[tuple[str, float, str]]:
+    """CSV rows for the benchmarks/run.py harness."""
+    programs = ["mlp", "moe", "moe_faults"] + (["jax"] if include_jax else [])
+    rows = []
+    for r in run_programs(programs, smoke, backend):
+        derived = (f"loss {r['first']:.3f}->{r['last']:.3f} "
+                   f"completed={r['completed']} pouches={r['pouches']} "
+                   f"ok={r['ok']}")
+        if "cost_max" in r:
+            derived += (f" cost_spread={r['cost_min']:.0f}"
+                        f"..{r['cost_max']:.0f}")
+        if "mgr_revive" in r and r["name"].endswith("faults"):
+            derived += (f" mgr_revive={r['mgr_revive']} "
+                        f"hdl_revive={r['hdl_revive']}")
+        rows.append((r["name"], r["wall"] * 1e6, derived))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--backend", default=None,
+                    help="tuple-space backend spec (default: "
+                         "$REPRO_TS_BACKEND or local)")
+    ap.add_argument("--programs", default=DEFAULT_PROGRAMS,
+                    help=f"comma list (default: {DEFAULT_PROGRAMS})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="short CI run: fewer rounds per program")
+    args = ap.parse_args()
+
+    results = run_programs([p.strip() for p in args.programs.split(",") if p],
+                           args.smoke, args.backend)
+    print(f"{'program':<22}{'wall(s)':>9}{'ts_ops':>10}{'pouches':>9}"
+          f"{'loss first->last':>20}{'ok':>5}")
+    print("-" * 75)
+    for r in results:
+        print(f"{r['name']:<22}{r['wall']:>9.2f}{r['ts_ops']:>10,}"
+              f"{r['pouches']:>9}"
+              f"{r['first']:>11.3f} ->{r['last']:>7.3f}{str(r['ok']):>5}")
+        extras = {k: r[k] for k in
+                  ("cost_min", "cost_max", "mgr_revive", "hdl_revive",
+                   "crashes", "reissues") if k in r}
+        if extras:
+            print(f"{'':<22}{extras}")
+    ok = all(r["ok"] for r in results)
+    print(f"\nacceptance: {'PASS' if ok else 'FAIL'} "
+          f"({sum(r['ok'] for r in results)}/{len(results)} programs)")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,6 +70,27 @@ def run_mode(scheduling: str, backend: str, layers, epochs: int,
     }
 
 
+def bench_rows(smoke: bool = True,
+               backend: str = "sharded") -> list[tuple[str, float, str]]:
+    """CSV rows for the benchmarks/run.py harness: one row per scheduling
+    mode plus the poll/event ops-per-pouch ratio row the 5x gate watches."""
+    epochs, samples = (1, 8) if smoke else (2, 100)
+    layers = [LayerSpec(256, 256), LayerSpec(256, 1)]
+    results = {s: run_mode(s, backend, layers, epochs, samples, 0)
+               for s in ("poll", "event")}
+    rows = [(f"sched_{s}_{backend}", r["wallclock"] * 1e6,
+             f"ts_ops={r['ops']} ops_per_pouch={r['ops_per_pouch']:.1f} "
+             f"idle_wakeups={r['idle_wakeups']} pouches={r['pouches']}")
+            for s, r in results.items()]
+    ratio = (results["poll"]["ops_per_pouch"]
+             / max(results["event"]["ops_per_pouch"], 1e-9))
+    rows.append((f"sched_poll_over_event_{backend}", 0.0,
+                 f"ops_per_pouch_ratio={ratio:.1f}x "
+                 f"gate>={OPS_RATIO_FLOOR:.0f}x "
+                 f"pass={ratio >= OPS_RATIO_FLOOR}"))
+    return rows
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--backend", default="sharded",

@@ -2,22 +2,44 @@
 core contribution (Li et al., "Fault Tolerant Reconfigurable ML
 Multiprocessor", 2025)."""
 
-from repro.core.cloud import ACANCloud, CloudConfig, CloudResult, make_teacher_data
+from repro.core.cloud import ACANCloud, CloudConfig, CloudResult
 from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.gss import PouchController, TimeoutController, gss_chunk
 from repro.core.handler import Handler, SpeedBox
 from repro.core.ledger import Ledger
 from repro.core.manager import Manager, ManagerConfig
+from repro.core.program import (GLOBAL_OPS, OpRegistry, OpSpec, UnknownOp,
+                                WorkloadProgram, partition)
 from repro.core.space import (ANY, InstrumentedBackend, LocalBackend,
                               ShardedBackend, SpaceBackend, TSTimeout,
                               TupleSpace, make_backend, match)
-from repro.core.tasks import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
+from repro.core.tasks import TaskDesc, content_key
+
+# Program symbols are re-exported lazily (PEP 562): repro.programs.*
+# modules import repro.core submodules, so a module-level import here
+# would make "import repro.programs.mlp" explode when it is the first
+# repro import (the package init would re-enter the partially
+# initialized mlp module).
+_MLP_EXPORTS = {"LayerSpec", "MLPProgram", "prototype_tasks",
+                "stage_order", "make_teacher_data"}
+
+
+def __getattr__(name: str):
+    if name in _MLP_EXPORTS:
+        from repro.programs import mlp
+        return getattr(mlp, name)
+    if name == "MoERoutingProgram":
+        from repro.programs.moe import MoERoutingProgram
+        return MoERoutingProgram
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "ACANCloud", "CloudConfig", "CloudResult", "make_teacher_data",
     "FaultPlan", "MonitorDaemon", "PouchController", "TimeoutController",
     "gss_chunk", "Handler", "SpeedBox", "Ledger", "Manager", "ManagerConfig",
-    "LayerSpec", "TaskDesc", "TaskKind", "partition", "prototype_tasks",
+    "GLOBAL_OPS", "OpRegistry", "OpSpec", "UnknownOp", "WorkloadProgram",
+    "partition", "LayerSpec", "MLPProgram", "MoERoutingProgram",
+    "prototype_tasks", "stage_order", "TaskDesc", "content_key",
     "ANY", "TSTimeout", "TupleSpace", "match", "make_backend",
     "SpaceBackend", "LocalBackend", "ShardedBackend", "InstrumentedBackend",
 ]

@@ -1,12 +1,20 @@
 """ACANCloud — wires TS + Manager + Handlers + MonitorDaemon into one
-runnable "custom ACAN cloud" (paper §4, §6) and runs a training job.
+runnable "custom ACAN cloud" (paper §4, §6) and runs a
+:class:`~repro.core.program.WorkloadProgram` under it.
 
-This is the reproduction entry point for the paper's three experiments::
+By default the cloud runs the paper's MLP workload
+(:class:`~repro.programs.mlp.MLPProgram` built from the CloudConfig
+geometry) — the reproduction entry point for the paper's three
+experiments::
 
     cloud = ACANCloud(CloudConfig(...))
     result = cloud.run()
     result.loss_history      # [(step, mse)]          — Fig. 1 / Fig. 3
     result.timeout_history   # [(t, timeout, power)]  — Fig. 2 / Fig. 4
+
+Any other program rides the same fault plane unchanged::
+
+    cloud = ACANCloud(CloudConfig(...), program=MoERoutingProgram(...))
 """
 
 from __future__ import annotations
@@ -15,19 +23,25 @@ import threading
 import time
 from dataclasses import dataclass, field
 
-import numpy as np
-
 from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.handler import Handler, SpeedBox
 from repro.core.manager import Manager, ManagerConfig, validate_scheduling
-from repro.core.tasks import LayerSpec
+from repro.core.program import WorkloadProgram
 from repro.core.space import ANY, TSTimeout, TupleSpace
+
+__all__ = ["ACANCloud", "CloudConfig", "CloudResult"]
+
+
+def _default_layers() -> list:
+    # Imported lazily: repro.programs.mlp itself imports repro.core
+    # submodules, so a module-level import here would be circular.
+    from repro.programs.mlp import LayerSpec
+    return [LayerSpec(256, 256), LayerSpec(256, 1)]   # paper §6: N=4^4
 
 
 @dataclass
 class CloudConfig:
-    layers: list[LayerSpec] = field(default_factory=lambda: [
-        LayerSpec(256, 256), LayerSpec(256, 1)])   # paper §6: N=4^4
+    layers: list = field(default_factory=_default_layers)
     n_handlers: int = 4                            # paper §6
     epochs: int = 2                                # paper §6.1
     n_samples: int = 100                           # paper §6.1
@@ -62,31 +76,17 @@ class CloudResult:
     pouches: int
 
 
-def make_teacher_data(layers: list[LayerSpec], n_samples: int, seed: int,
-                      noise: float = 0.0):
-    """Synthetic regression data from a random teacher net of the same
-    architecture (paper §6.1: "randomly generate a set of parameters that
-    define a mapping … synthesize 100 data points")."""
-    rng = np.random.default_rng(seed + 1234)
-    Ws = []
-    for spec in layers:
-        Ws.append(rng.standard_normal((spec.n_out, spec.n_in)).astype(np.float32)
-                  / np.sqrt(spec.n_in))
-    X = rng.standard_normal((n_samples, layers[0].n_in)).astype(np.float32)
-    Y = []
-    for x in X:
-        h = x
-        for i, W in enumerate(Ws):
-            h = W @ h
-            if i < len(Ws) - 1:
-                h = np.tanh(h)
-        Y.append(h + noise * rng.standard_normal(h.shape).astype(np.float32))
-    return X, np.stack(Y)
-
-
 class ACANCloud:
-    def __init__(self, cfg: CloudConfig) -> None:
+    def __init__(self, cfg: CloudConfig,
+                 program: WorkloadProgram | None = None) -> None:
         self.cfg = cfg
+        if program is None:
+            from repro.programs.mlp import MLPProgram
+            program = MLPProgram(
+                layers=cfg.layers, epochs=cfg.epochs,
+                n_samples=cfg.n_samples, seed=cfg.seed,
+                data_noise=cfg.data_noise)
+        self.program = program
         self.ts = TupleSpace(backend=cfg.ts_backend)
         self.stop_event = threading.Event()
 
@@ -94,18 +94,16 @@ class ACANCloud:
     def _make_manager(self, power_fn) -> tuple[Manager, threading.Thread]:
         mgr = Manager(
             ts=self.ts,
+            program=self.program,
             cfg=ManagerConfig(
-                layers=self.cfg.layers, epochs=self.cfg.epochs,
-                n_samples=self.cfg.n_samples, task_cap=self.cfg.task_cap,
-                pouch_size=self.cfg.pouch_size, lr=self.cfg.lr,
+                task_cap=self.cfg.task_cap, pouch_size=self.cfg.pouch_size,
                 initial_timeout=self.cfg.initial_timeout,
                 scheduling=self.cfg.scheduling,
-                history_limit=self.cfg.history_limit, seed=self.cfg.seed),
+                history_limit=self.cfg.history_limit),
             power_fn=power_fn,
             crash_event=self._manager_crash,
             stop_event=self.stop_event,
         )
-        mgr.controller.timeout = self.cfg.initial_timeout
         th = threading.Thread(target=self._manager_body, args=(mgr,),
                               name="acan-manager", daemon=True)
         th.start()
@@ -125,6 +123,7 @@ class ACANCloud:
                     time_scale=self.cfg.time_scale,
                     batch_size=self.cfg.handler_batch,
                     scheduling=self.cfg.scheduling,
+                    registry=self.program.registry,
                     crash_event=self._handler_crashes[i],
                     stop_event=self.stop_event)
         self._handlers[i] = h
@@ -148,14 +147,6 @@ class ACANCloud:
         self._speed_boxes = [SpeedBox(1.0) for _ in range(cfg.n_handlers)]
         self._handlers: list[Handler | None] = [None] * cfg.n_handlers
 
-        # Load the dataset into TS — "the data required for the current
-        # stage" is retrieved from TS by content (paper §5.3).
-        X, Y = make_teacher_data(cfg.layers, cfg.n_samples, cfg.seed,
-                                 cfg.data_noise)
-        for i in range(cfg.n_samples):
-            self.ts.put(("x", i), X[i])
-            self.ts.put(("label", i), Y[i])
-
         daemon = MonitorDaemon(
             plan=cfg.fault_plan,
             manager_crash=self._manager_crash,
@@ -169,6 +160,8 @@ class ACANCloud:
         )
 
         t0 = time.monotonic()
+        # The program seeds its own TS state (dataset, params, config) in
+        # Manager.run -> program.setup, before any task is issued.
         _, mthread = self._make_manager(lambda: daemon.power())
         hthreads = [self._make_handler(i) for i in range(cfg.n_handlers)]
         daemon.attach(mthread, hthreads)

@@ -1,30 +1,20 @@
-"""Numerical execution of ACAN tasks against the Tuple Space.
+"""Registry-dispatched execution of program tasks against the Tuple Space.
 
-TS data-plane key conventions (all per training *sample*, since the paper
-uses SGD with batch size 1):
+The :class:`TaskExecutor` is a thin dispatcher since PR 3: it resolves a
+task's **op name** in an :class:`~repro.core.program.OpRegistry` and runs
+the op's batch-vectorizable kernel. Program-specific kernels (the MLP
+tile matmuls, the MoE routing/expert/grad kernels, the jitted JAX grad
+op) live with their programs under :mod:`repro.programs`.
 
-==========================================  =================================
-key                                          value
-==========================================  =================================
-``("w", layer)`` / ``("b", layer)``          committed weights / bias
-``("wver", layer)``                          committed version (int)
-``("x", data_id)`` / ``("label", data_id)``  input / target vectors
-``("pre", l, data_id)``                      pre-activation (combined)
-``("act", l, data_id)``                      post-activation (combined)
-``("fpart", l, data_id, ol,oh, il,ih)``      forward partial: W[ol:oh,il:ih]·x
-``("actpart", l, data_id, lo, hi)``          activation slice
-``("losspart", data_id, lo, hi)``            loss over output slice
-``("dypart", l, data_id, lo, hi)``           dLoss/dpre slice (last layer)
-``("dy", l, data_id)``                       dLoss/dpre (combined)
-``("gw", l, data_id, ol,oh, il,ih)``         dW tile
-``("gb", l, data_id, ol,oh)``                db slice
-``("bpart", l, data_id, il,ih, ol,oh)``      dx partial (contribution of out
-                                              slice ``ol:oh`` to ``il:ih``)
-``("gW", l, data_id)`` / ``("gB", l, ...)``  combined gradients
-``("wnew", l, step, ol, oh)``                updated W rows (+"bnew" bias)
-==========================================  =================================
+Every op's output is a *pure function of tuples it reads* — duplicate
+execution re-writes identical values, which is the paper's §5.4
+idempotency argument for everything except parameter overwrites; those
+are keyed by ``step`` and committed exactly once by the Manager's
+sliding window (:mod:`repro.core.conflict`).
 
-Control-plane key conventions (Manager/Handler scheduling):
+Control-plane key conventions (Manager/Handler scheduling — shared by
+every program; data-plane key tables live in each program's module
+docstring, e.g. :mod:`repro.programs.mlp`):
 
 ===============================================  ===========================
 key                                              value
@@ -36,43 +26,40 @@ key                                              value
                                                  back so it can skip its
                                                  own re-puts for one
                                                  backoff cycle
-``("done", kind, l, data_id, step,``             completion mark, keyed by
-``  in_lo, in_hi, out_lo, out_hi)``              task *content*; all marks
-                                                 of one stage share (kind,
-                                                 l, data_id, step), so the
-                                                 Manager's pouch barrier is
-                                                 one ``wait_count`` over
-                                                 this pattern (the done
-                                                 counter)
-``("mstate", "cursor")`` / ``("mstate",``        Manager resume cursor /
-``  "rounds")`` / ``("mstate", "finished")``     per-round pouch counter
+``("done", op, layer, data_id, step,``           completion mark, keyed by
+``  in_lo, in_hi, out_lo, out_hi)``              task *content*; the **op
+                                                 name namespaces the
+                                                 control plane** — a
+                                                 stage's marks share every
+                                                 field the stage's tasks
+                                                 agree on, so the
+                                                 Manager's pouch barrier
+                                                 is one ``wait_count``
+                                                 over that pattern (the
+                                                 done counter)
+``("mstate", "cursor")`` / ``("mstate",``        Manager resume cursor
+``  "rounds")`` / ``("mstate", "finished")``     ``{round, stage_idx,
+                                                 timeout, window}`` /
+                                                 per-round pouch counter
                                                  (monotonic across
                                                  revivals) / job-completion
                                                  flag the Cloud blocks a
                                                  ``read`` on
+``("losshist", step)``                           loss trajectory (every
+                                                 training program records
+                                                 it via ``record_loss``)
 ===============================================  ===========================
-
-Every task's output is a *pure function of tuples it reads* — duplicate
-execution re-writes identical values, which is the paper's §5.4 idempotency
-argument for all kinds except ``update``; updates are keyed by ``step`` and
-committed exactly once by the Manager's sliding window (:mod:`conflict`).
-:meth:`TaskExecutor.execute_batch` exploits the same purity to run a
-*group* of compatible tasks (same kind/layer/data_id/step) vectorized —
-shared inputs read once, tiles stacked into one batched matmul, outputs
-written through a single ``put_many``.
-
-Hidden activation is ``tanh`` (regression setting, paper §5.1/§6.1); the
-last layer is linear.
 """
 
 from __future__ import annotations
 
-from collections import defaultdict
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Any
 
 import numpy as np
 
-from repro.core.tasks import TaskDesc, TaskKind
+from repro.core.program import OpRegistry, ensure_builtin_ops
+from repro.core.tasks import TaskDesc
 from repro.core.space import TupleSpace
 
 
@@ -90,222 +77,70 @@ def activation_deriv_from_act(a: np.ndarray) -> np.ndarray:
 
 
 @dataclass
-class TaskExecutor:
-    """Executes a :class:`TaskDesc` against a :class:`TupleSpace`.
-
-    ``lr`` is the SGD learning rate used by UPDATE tasks. The executor is
-    stateless between tasks — all state lives in TS (device-agnostic by
-    construction, the paper's decoupling property).
-    """
+class ExecContext:
+    """What an op kernel sees: the Tuple Space plus a small environment of
+    handler-side knobs (currently the SGD ``lr`` for the MLP update op).
+    All workload state lives in TS (device-agnostic by construction, the
+    paper's decoupling property); ``env`` is for execution parameters
+    only, never data."""
 
     ts: TupleSpace
-    lr: float = 0.01
+    env: dict[str, Any] = field(default_factory=dict)
 
-    # ------------------------------------------------------------------ I/O
-    def _input_vec(self, layer: int, data_id: int) -> np.ndarray:
-        if layer == 0:
-            hit = self.ts.try_read(("x", data_id))
-        else:
-            hit = self.ts.try_read(("act", layer - 1, data_id))
-        if hit is None:
-            raise PreconditionUnmet(f"input of layer {layer} for sample {data_id}")
-        return hit[1]
-
-    def _require(self, key: tuple) -> np.ndarray:
+    def require(self, key: tuple) -> Any:
         hit = self.ts.try_read(key)
         if hit is None:
             raise PreconditionUnmet(str(key))
         return hit[1]
 
+
+class TaskExecutor:
+    """Executes :class:`TaskDesc`\\ s by registry dispatch.
+
+    ``registry`` defaults to the built-in ops (MLP + MoE); a Handler
+    serving a program with private ops passes that program's registry.
+    The executor is stateless between tasks.
+    """
+
+    def __init__(self, ts: TupleSpace, lr: float = 0.01,
+                 registry: OpRegistry | None = None,
+                 env: dict[str, Any] | None = None) -> None:
+        self.ts = ts
+        self.registry = registry if registry is not None else ensure_builtin_ops()
+        e: dict[str, Any] = {"lr": lr}
+        e.update(env or {})
+        self.ctx = ExecContext(ts, e)
+
     # ------------------------------------------------------------- dispatch
     def execute(self, task: TaskDesc) -> None:
-        if task.kind == TaskKind.FORWARD:
-            self._forward(task)
-        elif task.kind == TaskKind.ACTIVATION:
-            self._activation(task)
-        elif task.kind == TaskKind.LOSS:
-            self._loss(task)
-        elif task.kind == TaskKind.BACKWARD:
-            self._backward(task)
-        elif task.kind == TaskKind.UPDATE:
-            self._update(task)
-        else:  # pragma: no cover
-            raise ValueError(task.kind)
+        self._run_group([task])
 
     def execute_batch(self, tasks: list[TaskDesc]) -> None:
-        """Execute a *group* of compatible tasks (same kind, layer,
-        data_id, step) vectorized: shared inputs are read from TS once,
-        uniform-shape tiles are stacked into one batched matmul, and all
-        outputs land through a single ``put_many``.
+        """Execute a batch vectorized per compatible *group* (same op,
+        layer, data_id, step): shared inputs are read from TS once,
+        uniform tiles are stacked, and each group's outputs land through
+        a single ``put_many``.
 
-        Raises :class:`PreconditionUnmet` before writing anything if the
-        group's inputs are missing — the whole group is discarded exactly
-        as each task would be individually. A heterogeneous list falls
-        back to sequential :meth:`execute`.
+        A group whose inputs are missing raises
+        :class:`PreconditionUnmet` before writing anything — the whole
+        group is discarded atomically, exactly as each task would be
+        individually. A heterogeneous list is split into its groups.
         """
         if not tasks:
             return
-        t0 = tasks[0]
-        if len(tasks) == 1:
-            return self.execute(t0)
-        sig = (t0.kind, t0.layer, t0.data_id, t0.step)
-        if any((t.kind, t.layer, t.data_id, t.step) != sig
-               for t in tasks[1:]):
-            for t in tasks:
-                self.execute(t)
-            return
-        if t0.kind == TaskKind.FORWARD:
-            self.ts.put_many(self._forward_parts(tasks))
-        elif t0.kind == TaskKind.ACTIVATION:
-            self.ts.put_many(self._activation_parts(tasks))
-        elif t0.kind == TaskKind.LOSS:
-            self.ts.put_many(self._loss_parts(tasks))
-        elif t0.kind == TaskKind.BACKWARD:
-            self.ts.put_many(self._backward_parts(tasks))
-        elif t0.kind == TaskKind.UPDATE:
-            self.ts.put_many(self._update_parts(tasks))
-        else:  # pragma: no cover
-            raise ValueError(t0.kind)
-
-    @staticmethod
-    def _by_shape(tasks: list[TaskDesc]):
-        """Stacking needs uniform tile shapes; edge tiles may differ."""
-        groups: dict[tuple[int, int], list[TaskDesc]] = defaultdict(list)
+        groups: list[list[TaskDesc]] = []
+        index: dict[tuple, int] = {}
         for t in tasks:
-            groups[(t.m, t.n)].append(t)
-        return groups.values()
+            sig = (t.op, t.layer, t.data_id, t.step)
+            if sig not in index:
+                index[sig] = len(groups)
+                groups.append([])
+            groups[index[sig]].append(t)
+        for group in groups:
+            self._run_group(group)
 
-    # ------------------------------------------------------ batched kernels
-    def _forward_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
-        t0 = tasks[0]
-        x = self._input_vec(t0.layer, t0.data_id)
-        W = self._require(("w", t0.layer))
-        items = []
-        for group in self._by_shape(tasks):
-            tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
-                              for t in group])
-            xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
-            parts = np.matmul(tiles, xs[:, :, None])[:, :, 0]
-            items.extend(
-                ((("fpart", t.layer, t.data_id, t.out_lo, t.out_hi,
-                   t.in_lo, t.in_hi), part.astype(np.float32)))
-                for t, part in zip(group, parts))
-        return items
-
-    def _activation_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
-        t0 = tasks[0]
-        pre = self._require(("pre", t0.layer, t0.data_id))
-        act = activation(pre).astype(np.float32)
-        return [(("actpart", t.layer, t.data_id, t.out_lo, t.out_hi),
-                 act[t.out_lo:t.out_hi]) for t in tasks]
-
-    def _loss_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
-        t0 = tasks[0]
-        pre = self._require(("pre", t0.layer, t0.data_id))
-        label = self._require(("label", t0.data_id))
-        n_total = pre.shape[0]
-        items = []
-        for t in tasks:
-            diff = pre[t.out_lo:t.out_hi] - label[t.out_lo:t.out_hi]
-            items.append((("losspart", t.data_id, t.out_lo, t.out_hi),
-                          np.float32(np.sum(diff * diff) / n_total)))
-            items.append((("dypart", t.layer, t.data_id, t.out_lo, t.out_hi),
-                          (2.0 * diff / n_total).astype(np.float32)))
-        return items
-
-    def _backward_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
-        t0 = tasks[0]
-        dy = self._require(("dy", t0.layer, t0.data_id))
-        x = self._input_vec(t0.layer, t0.data_id)
-        W = self._require(("w", t0.layer))
-        items = []
-        for group in self._by_shape(tasks):
-            dys = np.stack([dy[t.out_lo:t.out_hi] for t in group])
-            xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
-            tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
-                              for t in group])
-            # outer products and dx partials, batched over the group
-            gws = dys[:, :, None] * xs[:, None, :]
-            bparts = np.matmul(tiles.transpose(0, 2, 1),
-                               dys[:, :, None])[:, :, 0]
-            for t, gw, bp in zip(group, gws, bparts):
-                items.append((("gw", t.layer, t.data_id, t.out_lo, t.out_hi,
-                               t.in_lo, t.in_hi), gw.astype(np.float32)))
-                items.append((("bpart", t.layer, t.data_id, t.in_lo, t.in_hi,
-                               t.out_lo, t.out_hi), bp.astype(np.float32)))
-                if t.in_lo == 0:
-                    items.append((("gb", t.layer, t.data_id,
-                                   t.out_lo, t.out_hi),
-                                  dy[t.out_lo:t.out_hi].astype(np.float32)))
-        return items
-
-    def _update_parts(self, tasks: list[TaskDesc]) -> list[tuple[tuple, np.ndarray]]:
-        t0 = tasks[0]
-        W = self._require(("w", t0.layer))
-        b = self._require(("b", t0.layer))
-        gW = self._require(("gW", t0.layer, t0.data_id))
-        gB = self._require(("gB", t0.layer, t0.data_id))
-        items = []
-        for t in tasks:
-            rows = slice(t.out_lo, t.out_hi)
-            items.append((("wnew", t.layer, t.step, t.out_lo, t.out_hi),
-                          (W[rows] - self.lr * gW[rows]).astype(np.float32)))
-            items.append((("bnew", t.layer, t.step, t.out_lo, t.out_hi),
-                          (b[rows] - self.lr * gB[rows]).astype(np.float32)))
-        return items
-
-    # -------------------------------------------------------------- kernels
-    def _forward(self, t: TaskDesc) -> None:
-        x = self._input_vec(t.layer, t.data_id)
-        W = self._require(("w", t.layer))
-        tile = W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
-        part = tile @ x[t.in_lo:t.in_hi]
-        self.ts.put(("fpart", t.layer, t.data_id, t.out_lo, t.out_hi,
-                     t.in_lo, t.in_hi), part.astype(np.float32))
-
-    def _activation(self, t: TaskDesc) -> None:
-        pre = self._require(("pre", t.layer, t.data_id))
-        self.ts.put(("actpart", t.layer, t.data_id, t.out_lo, t.out_hi),
-                    activation(pre[t.out_lo:t.out_hi]).astype(np.float32))
-
-    def _loss(self, t: TaskDesc) -> None:
-        # Output of the net = pre-activation of the last layer (linear head).
-        y = self._require(("pre", t.layer, t.data_id))[t.out_lo:t.out_hi]
-        label = self._require(("label", t.data_id))[t.out_lo:t.out_hi]
-        n_total = self._require(("pre", t.layer, t.data_id)).shape[0]
-        diff = y - label
-        # MSE over the full output dim; slices contribute sum/ n_total.
-        self.ts.put(("losspart", t.data_id, t.out_lo, t.out_hi),
-                    np.float32(np.sum(diff * diff) / n_total))
-        self.ts.put(("dypart", t.layer, t.data_id, t.out_lo, t.out_hi),
-                    (2.0 * diff / n_total).astype(np.float32))
-
-    def _backward(self, t: TaskDesc) -> None:
-        dy = self._require(("dy", t.layer, t.data_id))[t.out_lo:t.out_hi]
-        x = self._input_vec(t.layer, t.data_id)[t.in_lo:t.in_hi]
-        W = self._require(("w", t.layer))
-        tile = W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
-        # dW tile, dx partial; db only once per out-slice (attached to the
-        # tile whose in_lo is 0 so it is emitted exactly once).
-        self.ts.put(("gw", t.layer, t.data_id, t.out_lo, t.out_hi,
-                     t.in_lo, t.in_hi), np.outer(dy, x).astype(np.float32))
-        self.ts.put(("bpart", t.layer, t.data_id, t.in_lo, t.in_hi,
-                     t.out_lo, t.out_hi), (tile.T @ dy).astype(np.float32))
-        if t.in_lo == 0:
-            self.ts.put(("gb", t.layer, t.data_id, t.out_lo, t.out_hi),
-                        dy.astype(np.float32))
-
-    def _update(self, t: TaskDesc) -> None:
-        W = self._require(("w", t.layer))
-        b = self._require(("b", t.layer))
-        gW = self._require(("gW", t.layer, t.data_id))
-        gB = self._require(("gB", t.layer, t.data_id))
-        rows = slice(t.out_lo, t.out_hi)
-        w_new = W[rows] - self.lr * gW[rows]
-        b_new = b[rows] - self.lr * gB[rows]
-        # Keyed by step → duplicate executions overwrite with identical
-        # values; the Manager's commit window takes each (step, slice) once.
-        self.ts.put(("wnew", t.layer, t.step, t.out_lo, t.out_hi),
-                    w_new.astype(np.float32))
-        self.ts.put(("bnew", t.layer, t.step, t.out_lo, t.out_hi),
-                    b_new.astype(np.float32))
+    def _run_group(self, group: list[TaskDesc]) -> None:
+        spec = self.registry.resolve(group[0].op)
+        items = list(spec.batch_fn(self.ctx, group))
+        if items:
+            self.ts.put_many(items)

@@ -1,14 +1,16 @@
-"""The ACAN Handler (paper §4).
+"""The ACAN Handler (paper §4) — an op-registry dispatcher since PR 3.
 
 A Handler ``take_batch()``\\ es task tuples from TS (blocking on arrival —
 no fixed-cadence polling), checks each against its **capability** (maximum
-task size — a too-big task is *stored* back for another handler, the
-paper's "process or store" choice), groups compatible tasks (same
-kind/layer/data_id/step), checks execution **preconditions** per group
-(inputs present in TS — otherwise the group is discarded; the Manager's
-timeout will re-issue it), executes each group vectorized through
-:meth:`~repro.core.executor.TaskExecutor.execute_batch`, writes results,
-and marks completion with one batched put.
+task size under the op's registered cost model — a too-big task is
+*stored* back for another handler, the paper's "process or store"
+choice; a task whose op is not in this handler's registry is treated the
+same way, so heterogeneous fleets can specialise), groups compatible
+tasks (same op/layer/data_id/step), checks execution **preconditions**
+per group (inputs present in TS — otherwise the group is discarded; the
+Manager's timeout will re-issue it), executes each group vectorized
+through :meth:`~repro.core.executor.TaskExecutor.execute_batch`, writes
+results, and marks completion with one batched put.
 
 "Store" livelock guard: a stored task is re-put tagged with the storing
 handler's name (value becomes ``(wire, name)``). If the same handler
@@ -37,8 +39,9 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 
 from repro.core.executor import PreconditionUnmet, TaskExecutor
-from repro.core.manager import content_key, validate_scheduling
-from repro.core.tasks import TaskDesc
+from repro.core.manager import validate_scheduling
+from repro.core.program import OpRegistry, UnknownOp, ensure_builtin_ops
+from repro.core.tasks import TaskDesc, content_key
 from repro.core.space import ANY, TSTimeout, TupleSpace
 
 
@@ -75,12 +78,13 @@ class Handler:
     name: str
     speed: SpeedBox
     capacity: float = 256.0           # max task size it can handle (4^4)
-    lr: float = 0.01
+    lr: float = 0.01                  # exec-env knob for the MLP update op
     time_scale: float = 2e-6          # seconds of sleep per unit cost at speed 1
     batch_size: int = 16              # max tasks drained per take_batch
     take_timeout: float = 0.2         # crash/stop responsiveness bound
     store_backoff: float = 0.02       # own-tagged re-put skip window
     scheduling: str = "event"         # "event" (batched) | "poll" (seed loop)
+    registry: OpRegistry | None = None  # None -> built-in ops (MLP + MoE)
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     tasks_done: int = 0
@@ -105,9 +109,19 @@ class Handler:
                 return
             time.sleep(min(remaining, 0.01))
 
+    def _task_cost(self, task: TaskDesc) -> float | None:
+        """Registered cost of the task, or None when this handler lacks
+        the op — which is a capability miss (store, don't crash)."""
+        try:
+            return self.registry.cost(task)
+        except UnknownOp:
+            return None
+
     def run(self) -> None:
         validate_scheduling(self.scheduling)
-        executor = TaskExecutor(self.ts, lr=self.lr)
+        if self.registry is None:
+            self.registry = ensure_builtin_ops()
+        executor = TaskExecutor(self.ts, lr=self.lr, registry=self.registry)
         if self.scheduling == "poll":
             return self._run_poll(executor)
         return self._run_event(executor)
@@ -137,7 +151,8 @@ class Handler:
                     deferred += 1
                     continue
                 task = TaskDesc.from_wire(wire)
-                if task.cost() > self.capacity:
+                cost = self._task_cost(task)
+                if cost is None or cost > self.capacity:
                     # "store": put it back for a more capable handler,
                     # tagged so we skip it for one backoff cycle.
                     self.ts.put(key, (wire, self.name))
@@ -151,9 +166,10 @@ class Handler:
             for group in self._group(runnable):
                 # Emulated compute time for the whole group — proportional
                 # to summed cost, inversely to current speed (paper §6.2).
-                self._throttled_sleep(sum(t.cost() for t in group)
-                                      * self.time_scale
-                                      / max(self.speed.get(), 1e-6))
+                self._throttled_sleep(
+                    sum(self.registry.cost(t) for t in group)
+                    * self.time_scale
+                    / max(self.speed.get(), 1e-6))
                 if self.stop_event.is_set():
                     return
                 try:
@@ -176,7 +192,7 @@ class Handler:
         """Group compatible tasks for vectorized execution."""
         groups: dict[tuple, list[TaskDesc]] = defaultdict(list)
         for t in tasks:
-            groups[(t.kind, t.layer, t.data_id, t.step)].append(t)
+            groups[(t.op, t.layer, t.data_id, t.step)].append(t)
         return list(groups.values())
 
     # ---------------------------------------------------------- poll loop
@@ -191,12 +207,13 @@ class Handler:
                 continue
             wire, _ = _unpack_task(value)
             task = TaskDesc.from_wire(wire)
-            if task.cost() > self.capacity:
+            cost = self._task_cost(task)
+            if cost is None or cost > self.capacity:
                 self.ts.put(key, wire)
                 self.tasks_stored += 1
                 time.sleep(0.001)
                 continue
-            self._throttled_sleep(task.cost() * self.time_scale
+            self._throttled_sleep(cost * self.time_scale
                                   / max(self.speed.get(), 1e-6))
             try:
                 executor.execute(task)

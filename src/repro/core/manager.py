@@ -1,31 +1,39 @@
-"""The ACAN Manager (paper §4, §5.3).
+"""The ACAN Manager (paper §4, §5.3) — a program-agnostic stage-graph
+scheduler since PR 3.
 
-The Manager:
+The Manager walks a :class:`~repro.core.program.WorkloadProgram`'s
+rounds and stages:
 
-1. derives prototype tasks for the current sample/stage, partitions them to
-   the uniform task-size cap, and publishes **pouches** (≤ ``pouch_size``
-   task descriptions) into TS with a **timeout**;
+1. asks the program for the stage's prototype tasks (possibly
+   data-dependent — derived from TS state earlier stages combined),
+   partitions them to the uniform task-size cap through the program's
+   op registry, and publishes **pouches** (≤ ``pouch_size`` task
+   descriptions) into TS with a **timeout**;
 2. waits on a **done-counter barrier** — a single blocking
    :meth:`~repro.core.space.TupleSpace.wait_count` over the stage's
    done-mark pattern with the GSS timeout as the *deadline* (the paper's
    timeout discipline, minus the polling: the Manager wakes on each
    completion event instead of re-scanning every done mark each tick);
    upon deadline (or early completion) it evaluates completion marks,
-   adapts the timeout (:class:`~repro.core.gss.TimeoutController`), sweeps
-   untaken task tuples, and re-issues unfinished tasks;
-3. combines stage results (partial sums → full vectors) and commits
-   parameter updates through the §5.4 sliding window;
-4. checkpoints its cursor into TS after every stage, so a crashed Manager
-   can be revived by the daemon and *continue from TS state alone* — the
-   paper's checkpoint-free recovery ("the Manager restart can be programmed
-   to read the tuple space state and continue").
+   adapts the timeout (:class:`~repro.core.gss.TimeoutController`),
+   sweeps untaken task tuples, and re-issues unfinished tasks;
+3. calls the program's stage-boundary ``combine`` hook (partial sums →
+   full vectors; parameter commits through the §5.4 sliding window);
+4. checkpoints its ``(round, stage)`` cursor into TS after every stage,
+   so a crashed Manager can be revived by the daemon and *continue from
+   TS state alone* — the paper's checkpoint-free recovery ("the Manager
+   restart can be programmed to read the tuple space state and
+   continue").
 
 Completion marks are keyed by task *content* (not attempt), so a slow
 handler finishing attempt k still satisfies attempt k+1 — redundant
-execution is harmless by construction. All tasks of one stage share
-``(kind, layer, data_id, step)``, so the stage's done marks form one
-pattern — which is what makes both the blocking barrier and the
-single-``keys()`` pending scan possible.
+execution is harmless by construction. The barrier pattern is derived
+from the stage's tasks: every field all tasks agree on is pinned, the
+rest are wildcards — for regular stages (one ``(op, layer, data_id,
+step)`` per stage, like the MLP pipeline) that is one concrete prefix;
+for non-regular stages (the MoE expert stage spans many ``layer``\\ s)
+the op name still pins the pattern to this stage, so the count cannot
+pick up marks from other stages of the same round.
 
 Crash semantics under the blocking barrier: an injected crash set while
 the Manager is parked inside ``wait_count`` fires at the next wakeup
@@ -46,13 +54,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
-import numpy as np
-
-from repro.core.conflict import CommitWindow, tiles_cover
-from repro.core.executor import activation, activation_deriv_from_act
 from repro.core.gss import TimeoutController
-from repro.core.tasks import (LayerSpec, TaskDesc, TaskKind, partition,
-                              prototype_tasks, stage_order)
+from repro.core.conflict import CommitWindow
+from repro.core.program import WorkloadProgram
+from repro.core.tasks import TaskDesc, content_key
 from repro.core.space import ANY, TSTimeout, TupleSpace
 
 
@@ -73,19 +78,12 @@ def validate_scheduling(value: str) -> str:
     return value
 
 
-def content_key(t: TaskDesc) -> tuple:
-    return (t.kind.value, t.layer, t.data_id, t.step,
-            t.in_lo, t.in_hi, t.out_lo, t.out_hi)
-
-
 @dataclass
 class ManagerConfig:
-    layers: list[LayerSpec]
-    epochs: int = 2
-    n_samples: int = 100
+    """Control-plane knobs only — *what* runs is the program's business."""
+
     task_cap: float = 256.0          # 4^4, paper §6
     pouch_size: int = 100            # paper §6
-    lr: float = 0.01
     initial_timeout: float = 0.25
     poll_quantum: float = 0.004      # poll-mode only: done-scan cadence
     strict_timeout: bool = False     # True = always wait the full timeout
@@ -97,7 +95,6 @@ class ManagerConfig:
     #: seconds, and a crash must not wait that long to fire.
     barrier_quantum: float = 0.05
     history_limit: int = 10_000      # cap on ("thist",...)/("losshist",...)
-    seed: int = 0
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
@@ -106,48 +103,42 @@ class ManagerConfig:
 @dataclass
 class Manager:
     ts: TupleSpace
-    cfg: ManagerConfig
+    program: WorkloadProgram
+    cfg: ManagerConfig = field(default_factory=ManagerConfig)
     power_fn: Callable[[], float] = lambda: 0.0
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     controller: TimeoutController = field(default_factory=TimeoutController)
     window: CommitWindow = field(default_factory=CommitWindow)
-    rounds: int = 0
+    rounds: int = 0                  # pouch rounds (monotonic via TS)
+    reissued: int = 0                # tasks re-published after a timeout
     _task_seq: int = 0
 
-    # ------------------------------------------------------------ lifecycle
-    def init_params(self) -> None:
-        """Publish initial weights into TS (fresh start only)."""
-        rng = np.random.default_rng(self.cfg.seed)
-        for l, spec in enumerate(self.cfg.layers):
-            if self.ts.try_read(("w", l)) is None:
-                scale = 1.0 / np.sqrt(spec.n_in)
-                self.ts.put(("w", l), (rng.standard_normal(
-                    (spec.n_out, spec.n_in)) * scale).astype(np.float32))
-                self.ts.put(("b", l), np.zeros(spec.n_out, dtype=np.float32))
-                self.ts.put(("wver", l), 0)
+    def __post_init__(self) -> None:
+        self.controller.timeout = self.cfg.initial_timeout
 
-    def _checkpoint_cursor(self, epoch: int, sample: int, stage_idx: int) -> None:
+    # ------------------------------------------------------------ lifecycle
+    def _checkpoint_cursor(self, rnd: int, stage_idx: int) -> None:
         self.ts.delete(("mstate", "cursor"))
         self.ts.put(("mstate", "cursor"), {
-            "epoch": epoch, "sample": sample, "stage_idx": stage_idx,
+            "round": rnd, "stage_idx": stage_idx,
             "timeout": self.controller.timeout,
             "window": self.window.to_state(),
         })
 
-    def _load_cursor(self) -> tuple[int, int, int]:
+    def _load_cursor(self) -> tuple[int, int]:
         hit = self.ts.try_read(("mstate", "cursor"))
         if hit is None:
-            return 0, 0, 0
+            return 0, 0
         st = hit[1]
         self.controller.timeout = st.get("timeout", self.controller.timeout)
         self.window = CommitWindow.from_state(st.get("window", {}))
-        # Rounds are checkpointed per round (not per stage, which would
-        # lose straggler rounds of the crashed stage) so the count stays
-        # monotonic across revivals — CloudResult.pouches reads it.
+        # Rounds are checkpointed per pouch round (not per stage, which
+        # would lose straggler rounds of the crashed stage) so the count
+        # stays monotonic across revivals — CloudResult.pouches reads it.
         rounds = self.ts.try_read(("mstate", "rounds"))
         self.rounds = rounds[1] if rounds is not None else 0
-        return st["epoch"], st["sample"], st["stage_idx"]
+        return st["round"], st["stage_idx"]
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
@@ -167,11 +158,17 @@ class Manager:
         return self.ts.delete(("task", ANY))
 
     @staticmethod
-    def _stage_done_pattern(t: TaskDesc) -> tuple:
-        """Done-mark pattern covering every task of ``t``'s stage — all
-        tasks in a stage share (kind, layer, data_id, step)."""
-        return ("done", t.kind.value, t.layer, t.data_id, t.step,
-                ANY, ANY, ANY, ANY)
+    def _stage_done_pattern(tasks: list[TaskDesc]) -> tuple:
+        """Done-mark pattern covering every task of this stage: fields all
+        tasks agree on are pinned, the rest are wildcards. Regular stages
+        pin the whole (op, layer, data_id, step) prefix; non-regular
+        stages (e.g. per-expert tasks, one per ``layer``) stay pinned by
+        op + data_id + step, which no other stage of the round shares."""
+        heads = {(t.op, t.layer, t.data_id, t.step) for t in tasks}
+        pinned = tuple(
+            vals[0] if len(set(vals)) == 1 else ANY
+            for vals in zip(*heads))
+        return ("done",) + pinned + (ANY, ANY, ANY, ANY)
 
     def _pending(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
         """Tasks (all from ONE stage) without a done mark. One ``keys()``
@@ -179,7 +176,7 @@ class Manager:
         ``try_read`` calls per evaluation."""
         if not tasks:
             return []
-        done = set(self.ts.keys(self._stage_done_pattern(tasks[0])))
+        done = set(self.ts.keys(self._stage_done_pattern(tasks)))
         return [t for t in tasks
                 if ("done",) + content_key(t) not in done]
 
@@ -219,8 +216,9 @@ class Manager:
             return self._run_stage_poll(tasks)
         if not tasks:
             return
-        done_pat = self._stage_done_pattern(tasks[0])
+        done_pat = self._stage_done_pattern(tasks)
         total = len(tasks)
+        issued_keys: set[tuple] = set()
         while not self.stop_event.is_set():
             self._maybe_crash()
             pending = self._pending(tasks)
@@ -228,6 +226,13 @@ class Manager:
                 return
             pouch = pending[: self.cfg.pouch_size]
             self._issue(pouch)
+            # Re-issues are tasks published a second time (timeout
+            # stragglers) — NOT later pouches of a stage wider than
+            # pouch_size, whose tasks are being published for the first
+            # time.
+            self.reissued += sum(
+                1 for t in pouch if content_key(t) in issued_keys)
+            issued_keys.update(content_key(t) for t in pouch)
             # Barrier target: stage done-marks already present + this
             # pouch. In-flight stragglers from a previous round are always
             # at the front of `pending` (order is preserved), hence inside
@@ -273,6 +278,7 @@ class Manager:
     def _run_stage_poll(self, tasks: list[TaskDesc]) -> None:
         """The pre-PR-2 fixed-cadence loop (``poll_quantum`` re-scans) —
         the measured baseline for ``benchmarks/sched_bench.py``."""
+        issued_keys: set[tuple] = set()
         while not self.stop_event.is_set():
             self._maybe_crash()
             pending = self._pending_polled(tasks)
@@ -280,6 +286,9 @@ class Manager:
                 return
             pouch = pending[: self.cfg.pouch_size]
             self._issue(pouch)
+            self.reissued += sum(
+                1 for t in pouch if content_key(t) in issued_keys)
+            issued_keys.update(content_key(t) for t in pouch)
             timeout = self.controller.timeout
             t0 = time.monotonic()
             while True:
@@ -299,145 +308,34 @@ class Manager:
         return [t for t in tasks
                 if self.ts.try_read(("done",) + content_key(t)) is None]
 
-    # ------------------------------------------------------------- combines
-    # Key iteration is SORTED everywhere: fp32 accumulation order must not
-    # depend on handler completion order, or re-executed/raced tasks could
-    # perturb training numerics (determinism is the §5.4 idempotency
-    # guarantee, and it must hold bitwise).
-    def _combine_forward(self, l: int, data_id: int, spec: LayerSpec) -> None:
-        if self.ts.try_read(("pre", l, data_id)) is not None:
-            return
-        keys = sorted(self.ts.keys(("fpart", l, data_id, ANY, ANY, ANY, ANY)))
-        pre = np.array(self.ts.try_read(("b", l))[1], copy=True)
-        for k in keys:
-            ol, oh = k[3], k[4]
-            pre[ol:oh] += self.ts.try_read(k)[1]
-        self.ts.put(("pre", l, data_id), pre.astype(np.float32))
-
-    def _combine_activation(self, l: int, data_id: int, spec: LayerSpec) -> None:
-        if self.ts.try_read(("act", l, data_id)) is not None:
-            return
-        out = np.zeros(spec.n_out, dtype=np.float32)
-        for k in sorted(self.ts.keys(("actpart", l, data_id, ANY, ANY))):
-            out[k[3]:k[4]] = self.ts.try_read(k)[1]
-        self.ts.put(("act", l, data_id), out)
-
-    def _combine_loss(self, data_id: int, step: int) -> None:
-        L = len(self.cfg.layers) - 1
-        if self.ts.try_read(("dy", L, data_id)) is not None:
-            return
-        n_out = self.cfg.layers[-1].n_out
-        loss = 0.0
-        dy = np.zeros(n_out, dtype=np.float32)
-        for k in sorted(self.ts.keys(("losspart", data_id, ANY, ANY))):
-            loss += float(self.ts.try_read(k)[1])
-        for k in sorted(self.ts.keys(("dypart", L, data_id, ANY, ANY))):
-            dy[k[3]:k[4]] = self.ts.try_read(k)[1]
-        self.ts.put(("loss", data_id, step), np.float32(loss))
-        self.ts.put(("losshist", step), float(loss))
-        # Cap loss history (steps are monotonic across revivals, so a
-        # step-number cut is safe here, unlike rounds in _finish_round).
-        limit = self.cfg.history_limit
-        if limit and step >= limit:
-            cut = step - limit
-            self.ts.delete(("losshist", lambda s: s <= cut))
-        self.ts.put(("dy", L, data_id), dy)
-
-    def _combine_backward(self, l: int, data_id: int, spec: LayerSpec) -> None:
-        if self.ts.try_read(("gW", l, data_id)) is not None:
-            return
-        gW = np.zeros((spec.n_out, spec.n_in), dtype=np.float32)
-        for k in sorted(self.ts.keys(("gw", l, data_id, ANY, ANY, ANY, ANY))):
-            gW[k[3]:k[4], k[5]:k[6]] = self.ts.try_read(k)[1]
-        gB = np.zeros(spec.n_out, dtype=np.float32)
-        for k in sorted(self.ts.keys(("gb", l, data_id, ANY, ANY))):
-            gB[k[3]:k[4]] = self.ts.try_read(k)[1]
-        self.ts.put(("gW", l, data_id), gW)
-        self.ts.put(("gB", l, data_id), gB)
-        if l > 0:
-            dx = np.zeros(spec.n_in, dtype=np.float32)
-            for k in sorted(self.ts.keys(("bpart", l, data_id, ANY, ANY, ANY, ANY))):
-                dx[k[3]:k[4]] += self.ts.try_read(k)[1]
-            a_prev = self.ts.try_read(("act", l - 1, data_id))[1]
-            self.ts.put(("dy", l - 1, data_id),
-                        (dx * activation_deriv_from_act(a_prev)).astype(np.float32))
-
-    def _commit_update(self, l: int, data_id: int, step: int,
-                       spec: LayerSpec) -> None:
-        """§5.4: overwrite W only when all row tiles are present, exactly
-        once per (layer, step)."""
-        if not self.window.can_commit(l, step):
-            return
-        keys = self.ts.keys(("wnew", l, step, ANY, ANY))
-        if not tiles_cover([(k[3], k[4]) for k in keys], 0, spec.n_out):
-            return
-        W = np.array(self.ts.try_read(("w", l))[1], copy=True)
-        b = np.array(self.ts.try_read(("b", l))[1], copy=True)
-        for k in keys:
-            W[k[3]:k[4]] = self.ts.try_read(k)[1]
-        for k in self.ts.keys(("bnew", l, step, ANY, ANY)):
-            b[k[3]:k[4]] = self.ts.try_read(k)[1]
-        if self.window.commit(l, step):
-            self.ts.delete(("w", l)); self.ts.put(("w", l), W)
-            self.ts.delete(("b", l)); self.ts.put(("b", l), b)
-            ver = self.ts.try_read(("wver", l))
-            self.ts.delete(("wver", l))
-            self.ts.put(("wver", l), (ver[1] if ver else 0) + 1)
-        self.ts.delete(("wnew", l, step, ANY, ANY))
-        self.ts.delete(("bnew", l, step, ANY, ANY))
-
-    def _cleanup_sample(self, data_id: int) -> None:
-        for pat in [("fpart", ANY, data_id, ANY, ANY, ANY, ANY),
-                    ("actpart", ANY, data_id, ANY, ANY),
-                    ("losspart", data_id, ANY, ANY),
-                    ("dypart", ANY, data_id, ANY, ANY),
-                    ("gw", ANY, data_id, ANY, ANY, ANY, ANY),
-                    ("gb", ANY, data_id, ANY, ANY),
-                    ("bpart", ANY, data_id, ANY, ANY, ANY, ANY),
-                    ("gW", ANY, data_id), ("gB", ANY, data_id),
-                    ("pre", ANY, data_id), ("act", ANY, data_id),
-                    ("dy", ANY, data_id),
-                    # per-sample loss tuples: nothing reads them after the
-                    # combine (losshist carries the trajectory) — leaving
-                    # them was unbounded TS garbage, one per sample-step.
-                    ("loss", data_id, ANY)]:
-            self.ts.delete(pat)
-        self.ts.delete(("done", ANY, ANY, data_id, ANY, ANY, ANY, ANY, ANY))
-
     # ------------------------------------------------------------------ run
     def run(self) -> None:
-        self.init_params()
-        order = stage_order(len(self.cfg.layers))
-        epoch0, sample0, stage0 = self._load_cursor()
-        n_layers = len(self.cfg.layers)
-        for epoch in range(epoch0, self.cfg.epochs):
-            s0 = sample0 if epoch == epoch0 else 0
-            for sample in range(s0, self.cfg.n_samples):
+        prog = self.program
+        prog.setup(self.ts)
+        r0, s0 = self._load_cursor()
+        for rnd in range(r0, prog.n_rounds()):
+            if self.stop_event.is_set():
+                return
+            names = prog.stage_names(rnd)
+            st0 = s0 if rnd == r0 else 0
+            for stage_idx in range(st0, len(names)):
+                name = names[stage_idx]
+                self._checkpoint_cursor(rnd, stage_idx)
+                tasks: list[TaskDesc] = []
+                for proto in prog.stage_tasks(self.ts, rnd, name):
+                    tasks.extend(
+                        prog.registry.partition(proto, self.cfg.task_cap))
+                self._run_stage(tasks)
                 if self.stop_event.is_set():
+                    # Stage aborted (wall limit / shutdown): combining
+                    # partial results would record bogus state (e.g. a
+                    # loss scatter-added from the few tiles that landed).
+                    # The cursor still points at this stage, so a revived
+                    # Manager redoes it from the done marks.
                     return
-                step = epoch * self.cfg.n_samples + sample
-                stages = prototype_tasks(self.cfg.layers, sample, step)
-                st0 = stage0 if (epoch == epoch0 and sample == s0) else 0
-                for stage_idx in range(st0, len(order)):
-                    name = order[stage_idx]
-                    self._checkpoint_cursor(epoch, sample, stage_idx)
-                    tasks = []
-                    for proto in stages[name]:
-                        tasks.extend(partition(proto, self.cfg.task_cap))
-                    self._run_stage(tasks)
-                    # Stage-boundary combine ("the Manager updates the
-                    # relevant TS entries as a checkpoint", §5.3).
-                    kind, _, l = name.partition("_")
-                    if kind == "fwd":
-                        self._combine_forward(int(l), sample, self.cfg.layers[int(l)])
-                    elif kind == "act":
-                        self._combine_activation(int(l), sample, self.cfg.layers[int(l)])
-                    elif name == "loss":
-                        self._combine_loss(sample, step)
-                    elif kind == "bwd":
-                        self._combine_backward(int(l), sample, self.cfg.layers[int(l)])
-                    elif kind == "upd":
-                        self._commit_update(int(l), sample, step, self.cfg.layers[int(l)])
-                self._cleanup_sample(sample)
-                self._checkpoint_cursor(epoch, sample + 1, 0)
+                # Stage-boundary combine ("the Manager updates the
+                # relevant TS entries as a checkpoint", §5.3).
+                prog.combine(self.ts, rnd, name, self)
+            prog.finish_round(self.ts, rnd)
+            self._checkpoint_cursor(rnd + 1, 0)
         self.ts.put(("mstate", "finished"), True)

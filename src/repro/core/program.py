@@ -1,0 +1,200 @@
+"""The :class:`WorkloadProgram` protocol and the **op registry** — one
+fault-tolerant control plane for arbitrary (including non-regular)
+workloads.
+
+The paper's core claim is feasibility of the reconfigurable
+multiprocessor for *non-regular workflows*, yet until PR 3 the
+Manager/Handler stack was hard-wired to the five MLP task kinds and the
+ACAN-over-JAX runner re-implemented its own barrier/timeout/commit loop.
+This module is the split point:
+
+- an **op** is a named, batch-vectorizable executor kernel with a
+  per-op cost model and split rule (:class:`OpSpec`), looked up by the
+  :class:`~repro.core.executor.TaskExecutor` at execution time through
+  an :class:`OpRegistry` — ops are pure functions of tuples they read,
+  which preserves the paper's §5.4 idempotency argument for free;
+- a **program** (:class:`WorkloadProgram`) declares the per-round stage
+  graph — which prototype tasks each stage holds, how stage results are
+  combined/committed, and what per-round cleanup looks like. Stages may
+  be *data-dependent*: ``stage_tasks`` reads the Tuple Space, so a
+  program can derive a stage's tasks from an earlier stage's combined
+  output (the MoE routing program derives expert tasks from routing
+  decisions — irregular task sizes on the same plane).
+
+The generic :class:`~repro.core.manager.Manager` walks the program's
+rounds/stages with the paper's pouch/timeout/barrier discipline,
+checkpointing a ``(round, stage)`` cursor into TS so a revived Manager
+resumes from TS state alone. Everything a program writes must therefore
+be either idempotent or guarded by the Manager's §5.4 commit window.
+
+Built-in programs: :mod:`repro.programs.mlp` (the paper §6 workload),
+:mod:`repro.programs.jax_sgd` (real JAX training), and
+:mod:`repro.programs.moe` (non-regular expert routing).
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Any, Callable, Iterable
+
+from repro.core.tasks import TaskDesc, split_out_halves
+
+if TYPE_CHECKING:  # pragma: no cover - type-only imports
+    from repro.core.executor import ExecContext
+    from repro.core.manager import Manager
+
+
+#: Batch executor: reads inputs from ``ctx.ts``, returns the (key, value)
+#: tuples to publish. Raising PreconditionUnmet before returning discards
+#: the whole group atomically (nothing is written).
+BatchFn = Callable[["ExecContext", list[TaskDesc]], Iterable[tuple[tuple, Any]]]
+
+
+@dataclass(frozen=True)
+class OpSpec:
+    """One registered op: executor kernel + cost model + split rule.
+
+    ``cost_fn`` is the task-size proxy the paper's §5.2 partitioning and
+    the Handler's capability check both consume; ``split_fn`` is one
+    level of the partition rule (default: halve the ``out`` slice).
+    """
+
+    name: str
+    batch_fn: BatchFn
+    cost_fn: Callable[[TaskDesc], float]
+    split_fn: Callable[[TaskDesc], list[TaskDesc]] = split_out_halves
+
+
+class UnknownOp(KeyError):
+    """No OpSpec registered under this name (in this registry chain)."""
+
+
+class OpRegistry:
+    """Name → :class:`OpSpec`, with optional parent chaining.
+
+    Stateless ops (the MLP and MoE kernels — everything they need lives
+    in TS) register in the shared :data:`GLOBAL_OPS`; programs whose ops
+    close over instance state (the JAX-SGD program's jitted grad
+    function) build a private ``OpRegistry(parent=GLOBAL_OPS)`` so two
+    program instances never collide.
+    """
+
+    def __init__(self, parent: "OpRegistry | None" = None) -> None:
+        self._ops: dict[str, OpSpec] = {}
+        self.parent = parent
+
+    def register(self, spec: OpSpec, override: bool = False) -> OpSpec:
+        if not override and spec.name in self._ops:
+            raise ValueError(f"op {spec.name!r} already registered")
+        self._ops[spec.name] = spec
+        return spec
+
+    def resolve(self, name: str) -> OpSpec:
+        reg: OpRegistry | None = self
+        while reg is not None:
+            spec = reg._ops.get(name)
+            if spec is not None:
+                return spec
+            reg = reg.parent
+        raise UnknownOp(
+            f"no op {name!r} registered (is the owning program module "
+            f"imported, and the Handler given the program's registry?)")
+
+    # ------------------------------------------------------ cost/partition
+    def cost(self, task: TaskDesc) -> float:
+        return self.resolve(task.op).cost_fn(task)
+
+    def split(self, task: TaskDesc) -> list[TaskDesc]:
+        return self.resolve(task.op).split_fn(task)
+
+    def partition(self, task: TaskDesc, max_size: float) -> list[TaskDesc]:
+        """Recursively split ``task`` until every piece costs ≤ ``max_size``
+        (paper §5.2). A task that can no longer shrink is emitted as-is
+        (the cap then acts as a soft bound)."""
+        if self.cost(task) <= max_size:
+            return [task]
+        pieces = self.split(task)
+        if len(pieces) == 1 and self.cost(pieces[0]) >= self.cost(task):
+            return [task]
+        out: list[TaskDesc] = []
+        for p in pieces:
+            out.extend(self.partition(p, max_size))
+        return out
+
+
+#: Shared registry for stateless ops (MLP, MoE routing).
+GLOBAL_OPS = OpRegistry()
+
+
+def ensure_builtin_ops() -> OpRegistry:
+    """Import the built-in program modules (registering their ops) and
+    return :data:`GLOBAL_OPS`. Lazy so :mod:`repro.core.executor` never
+    imports :mod:`repro.programs` at module load (no import cycle)."""
+    import repro.programs  # noqa: F401  (import side effect: registration)
+    return GLOBAL_OPS
+
+
+def partition(task: TaskDesc, max_size: float,
+              registry: OpRegistry | None = None) -> list[TaskDesc]:
+    """Module-level convenience over :meth:`OpRegistry.partition` using
+    the built-in registry by default."""
+    return (registry or ensure_builtin_ops()).partition(task, max_size)
+
+
+def record_loss(ts, step: int, loss: float, history_limit: int = 0) -> None:
+    """Append to the ``("losshist", step)`` trajectory exactly once per
+    step (idempotent under Manager revival) and trim it to
+    ``history_limit`` entries — steps are monotonic across revivals, so a
+    step-number cut is safe."""
+    if ts.try_read(("losshist", step)) is None:
+        ts.put(("losshist", step), float(loss))
+    if history_limit and step >= history_limit:
+        cut = step - history_limit
+        ts.delete(("losshist", lambda s: s <= cut))
+
+
+class WorkloadProgram(abc.ABC):
+    """A declarative workload: per-round stage graph + combine/commit
+    hooks, scheduled by the generic Manager over crash-prone Handlers.
+
+    Contract (what fault tolerance requires of implementations):
+
+    - ``setup`` must be **idempotent** — a revived Manager calls it again;
+    - ``stage_tasks`` must be a pure function of ``(ts, round, stage)``
+      — it may read TS (data-dependent stages) but only state produced
+      by *earlier, combined* stages of the same round or committed
+      earlier rounds;
+    - ``combine`` must be idempotent or guarded by ``mgr.window`` (the
+      §5.4 sliding commit window) — it can run twice around a crash;
+    - every op a program issues must be resolvable in ``self.registry``.
+    """
+
+    #: Program name — used for reporting only; ops namespace the control
+    #: plane (done marks carry the op name), so two programs with
+    #: disjoint op vocabularies could even share one Tuple Space.
+    name: str = "program"
+    registry: OpRegistry = GLOBAL_OPS
+
+    def setup(self, ts) -> None:
+        """Publish initial TS state (params, data, config) — idempotent."""
+
+    @abc.abstractmethod
+    def n_rounds(self) -> int:
+        """Total rounds (outer iterations) in the job."""
+
+    @abc.abstractmethod
+    def stage_names(self, rnd: int) -> list[str]:
+        """Dependency-ordered stage names for round ``rnd``."""
+
+    @abc.abstractmethod
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
+        """Prototype tasks of one stage (pre-partition). May read TS."""
+
+    def combine(self, ts, rnd: int, stage: str, mgr: "Manager") -> None:
+        """Stage-boundary combine/commit hook ("the Manager updates the
+        relevant TS entries as a checkpoint", §5.3). ``mgr`` exposes
+        ``window`` (commit dedup) and ``cfg.history_limit``."""
+
+    def finish_round(self, ts, rnd: int) -> None:
+        """Per-round TS cleanup (delete partials + done marks)."""

@@ -1,57 +1,47 @@
-"""Prototype tasks and fixed-size partitioning (paper §5.1–5.2).
+"""Declarative task descriptions — the unit of work every WorkloadProgram
+schedules through the ACAN plane.
 
-For a NN of linear layers the Manager derives five *prototype task* kinds per
-layer — ``forward``, ``activation`` (hidden layers), ``loss`` (last layer),
-``backward``, ``update`` — then partitions them into **uniform fixed-size**
-tasks so pouch/timeout tuning is handler-agnostic:
+A :class:`TaskDesc` is a **declarative description** (serialisable
+dataclass ↔ wire string), not an instantiated object — the Handler
+independently retrieves whatever the task needs from the Tuple Space at
+execution time (paper §5.1), which is what decouples Manager from
+Handler.
 
-- a *forward/backward* task over ``(m inputs, n outputs)`` splits **4-way**
-  into the quadrants ``(first m/2, first n/2) … (last m/2, last n/2)``;
-- *activation*, *loss* and *update* tasks over ``m`` elements split **2-way**
-  into halves;
-- splitting recurses until every task's :func:`cost` is ≤ the task-size cap
-  (the paper uses cap = 4⁴ = 256).
+Since PR 3 the task carries an **op name** (open string) instead of the
+old closed ``TaskKind`` enum: what an op *means* — its executor kernel,
+its cost model, its split rule — lives in the
+:class:`~repro.core.program.OpRegistry`, so new workloads register new
+ops without touching the Manager/Handler plane. The paper's five MLP
+prototype ops (``forward`` / ``activation`` / ``loss`` / ``backward`` /
+``update``) are registered by :mod:`repro.programs.mlp`.
 
-Tasks are **declarative descriptions** (serialisable dataclass ↔ string),
-not instantiated objects — the Handler independently retrieves weights /
-activations from the Tuple Space at execution time (paper §5.1), which is
-what decouples Manager from Handler.
+The four slice ints are **generic payload slices**: for the MLP ops they
+are the paper's §5.2 (input × output) rectangle; the JAX-SGD program uses
+``out_lo`` as the microbatch index; the MoE routing program uses
+``layer`` as the expert id and ``out_lo:out_hi`` as a slot range into
+that expert's (data-dependent) dispatch list.
 """
 
 from __future__ import annotations
 
-import enum
 import json
 from dataclasses import dataclass, replace
 
 
-class TaskKind(str, enum.Enum):
-    FORWARD = "forward"
-    ACTIVATION = "activation"
-    LOSS = "loss"
-    BACKWARD = "backward"
-    UPDATE = "update"
-
-
-# Cost weighting: the paper notes loss tasks "involve more complex
-# computations and are better to be assigned a proportionally larger size".
-LOSS_COST_FACTOR = 4.0
-
-
 @dataclass(frozen=True)
 class TaskDesc:
-    """Declarative description of one unit of NN work.
+    """Declarative description of one unit of program work.
 
-    ``in_lo:in_hi`` slices the layer input dimension, ``out_lo:out_hi`` the
-    output dimension. For 1-D kinds (activation / loss / update) only the
-    ``out`` slice is meaningful except UPDATE which covers the weight-row
-    range ``out_lo:out_hi`` (all columns) — "each updating m/2 parameters".
+    ``op`` names the registered executor kernel. ``in_lo:in_hi`` /
+    ``out_lo:out_hi`` are op-interpreted payload slices (for the MLP ops:
+    the layer input / output dimension ranges).
 
-    ``data_id`` identifies the training sample, ``step`` the global SGD step
-    (used for update-dedup, §5.4), ``task_id`` is unique per issued task.
+    ``data_id`` identifies the work item (training sample, minibatch,
+    …), ``step`` the global SGD step (used for update-dedup, §5.4),
+    ``task_id`` is unique per issued task.
     """
 
-    kind: TaskKind
+    op: str
     layer: int
     data_id: int
     step: int
@@ -60,6 +50,14 @@ class TaskDesc:
     out_lo: int = 0
     out_hi: int = 0
     task_id: str = ""
+
+    def __post_init__(self) -> None:
+        # Accept str-enum-like values but store the plain string so wire
+        # format, content keys, and registry lookups are uniform.
+        op = getattr(self.op, "value", self.op)
+        if not isinstance(op, str) or not op:
+            raise ValueError(f"op must be a non-empty string, got {self.op!r}")
+        object.__setattr__(self, "op", op)
 
     # ------------------------------------------------------------- geometry
     @property
@@ -70,56 +68,25 @@ class TaskDesc:
     def n(self) -> int:
         return self.out_hi - self.out_lo
 
-    # ----------------------------------------------------------------- cost
-    def cost(self) -> float:
-        """Task size — multiply/accumulate count proxy (paper §5.2)."""
-        if self.kind in (TaskKind.FORWARD, TaskKind.BACKWARD):
-            return float(self.m * self.n)
-        if self.kind == TaskKind.ACTIVATION:
-            return float(self.n)
-        if self.kind == TaskKind.LOSS:
-            return LOSS_COST_FACTOR * self.n
-        if self.kind == TaskKind.UPDATE:
-            # rows out_lo:out_hi of W (n_rows × m columns) + bias rows
-            return float(self.n * max(self.m, 1))
-        raise ValueError(self.kind)
-
-    # -------------------------------------------------------------- split
-    def split(self) -> list["TaskDesc"]:
-        """One level of the paper's partition rule."""
-        if self.kind in (TaskKind.FORWARD, TaskKind.BACKWARD):
-            halves_in = _halves(self.in_lo, self.in_hi)
-            halves_out = _halves(self.out_lo, self.out_hi)
-            return [
-                replace(self, in_lo=il, in_hi=ih, out_lo=ol, out_hi=oh, task_id="")
-                for (il, ih) in halves_in
-                for (ol, oh) in halves_out
-            ]
-        if self.kind == TaskKind.UPDATE:
-            return [
-                replace(self, out_lo=ol, out_hi=oh, task_id="")
-                for (ol, oh) in _halves(self.out_lo, self.out_hi)
-            ]
-        # activation / loss: split the element range in half
-        return [
-            replace(self, out_lo=ol, out_hi=oh, task_id="")
-            for (ol, oh) in _halves(self.out_lo, self.out_hi)
-        ]
-
     # ------------------------------------------------------------ serialise
     def to_wire(self) -> str:
-        d = {k: (v.value if isinstance(v, TaskKind) else v)
-             for k, v in self.__dict__.items()}
-        return json.dumps(d, sort_keys=True)
+        return json.dumps(self.__dict__, sort_keys=True)
 
     @staticmethod
     def from_wire(s: str) -> "TaskDesc":
-        d = json.loads(s)
-        d["kind"] = TaskKind(d["kind"])
-        return TaskDesc(**d)
+        return TaskDesc(**json.loads(s))
 
 
-def _halves(lo: int, hi: int) -> list[tuple[int, int]]:
+def content_key(t: TaskDesc) -> tuple:
+    """Identity of a task by *content* (not attempt) — completion marks are
+    keyed by this, so a slow handler finishing attempt k still satisfies
+    attempt k+1 (redundant execution is harmless by construction)."""
+    return (t.op, t.layer, t.data_id, t.step,
+            t.in_lo, t.in_hi, t.out_lo, t.out_hi)
+
+
+def halves(lo: int, hi: int) -> list[tuple[int, int]]:
+    """Split [lo, hi) in half; a span of ≤ 1 no longer splits."""
     span = hi - lo
     if span <= 1:
         return [(lo, hi)]
@@ -127,74 +94,17 @@ def _halves(lo: int, hi: int) -> list[tuple[int, int]]:
     return [(lo, mid), (mid, hi)]
 
 
-def partition(task: TaskDesc, max_size: float) -> list[TaskDesc]:
-    """Recursively split ``task`` until every piece costs ≤ ``max_size``.
-
-    Degenerate dims (span 1) stop splitting along that axis; a task that can
-    no longer split is emitted as-is even if above cap (cap then acts as a
-    soft bound — cannot happen for power-of-two layer dims and caps ≥ 1).
-    """
-    if task.cost() <= max_size:
-        return [task]
-    pieces = task.split()
-    if len(pieces) == 1 and pieces[0].cost() >= task.cost():
-        return [task]  # cannot shrink further
-    out: list[TaskDesc] = []
-    for p in pieces:
-        out.extend(partition(p, max_size))
-    return out
+def split_out_halves(task: TaskDesc) -> list[TaskDesc]:
+    """Default split rule: halve the ``out`` slice (the paper's 2-way rule
+    for 1-D task kinds)."""
+    return [replace(task, out_lo=ol, out_hi=oh, task_id="")
+            for (ol, oh) in halves(task.out_lo, task.out_hi)]
 
 
-# --------------------------------------------------------------------------
-# Prototype-task generation for a linear-layer NN (paper §5.1)
-# --------------------------------------------------------------------------
-
-@dataclass(frozen=True)
-class LayerSpec:
-    """One linear layer: ``y = W x + b`` with ``W: (n_out, n_in)``."""
-    n_in: int
-    n_out: int
-
-
-def prototype_tasks(layers: list[LayerSpec], data_id: int, step: int) -> dict[str, list[TaskDesc]]:
-    """All prototype tasks for one training sample, grouped by pipeline stage.
-
-    Stage keys (in dependency order)::
-
-        fwd_<l>  act_<l> (hidden only)  loss  bwd_<l>  upd_<l>
-    """
-    n_layers = len(layers)
-    stages: dict[str, list[TaskDesc]] = {}
-    for l, spec in enumerate(layers):
-        stages[f"fwd_{l}"] = [TaskDesc(TaskKind.FORWARD, l, data_id, step,
-                                       0, spec.n_in, 0, spec.n_out)]
-        if l < n_layers - 1:
-            stages[f"act_{l}"] = [TaskDesc(TaskKind.ACTIVATION, l, data_id, step,
-                                           0, 0, 0, spec.n_out)]
-    last = layers[-1]
-    stages["loss"] = [TaskDesc(TaskKind.LOSS, n_layers - 1, data_id, step,
-                               0, 0, 0, last.n_out)]
-    for l in reversed(range(n_layers)):
-        spec = layers[l]
-        stages[f"bwd_{l}"] = [TaskDesc(TaskKind.BACKWARD, l, data_id, step,
-                                       0, spec.n_in, 0, spec.n_out)]
-    for l in range(n_layers):
-        spec = layers[l]
-        stages[f"upd_{l}"] = [TaskDesc(TaskKind.UPDATE, l, data_id, step,
-                                       0, spec.n_in, 0, spec.n_out)]
-    return stages
-
-
-def stage_order(n_layers: int) -> list[str]:
-    """Dependency-ordered stage names for one sample's pipeline."""
-    order: list[str] = []
-    for l in range(n_layers):
-        order.append(f"fwd_{l}")
-        if l < n_layers - 1:
-            order.append(f"act_{l}")
-    order.append("loss")
-    for l in reversed(range(n_layers)):
-        order.append(f"bwd_{l}")
-    for l in range(n_layers):
-        order.append(f"upd_{l}")
-    return order
+def split_quadrants(task: TaskDesc) -> list[TaskDesc]:
+    """4-way split into (input × output) quadrants (the paper's rule for
+    2-D forward/backward tasks)."""
+    return [replace(task, in_lo=il, in_hi=ih, out_lo=ol, out_hi=oh,
+                    task_id="")
+            for (il, ih) in halves(task.in_lo, task.in_hi)
+            for (ol, oh) in halves(task.out_lo, task.out_hi)]

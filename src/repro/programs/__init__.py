@@ -1,0 +1,16 @@
+"""Built-in workload programs for the ACAN plane.
+
+Importing this package registers the stateless built-in ops (the paper's
+five MLP prototype ops and the MoE routing ops) into
+:data:`repro.core.program.GLOBAL_OPS`. The JAX-SGD program is *not*
+imported here — it pulls in ``jax`` and the model zoo; import
+:mod:`repro.programs.jax_sgd` explicitly.
+"""
+
+from repro.programs.mlp import LayerSpec, MLPProgram, make_teacher_data, prototype_tasks, stage_order
+from repro.programs.moe import MoERoutingProgram
+
+__all__ = [
+    "LayerSpec", "MLPProgram", "make_teacher_data", "prototype_tasks",
+    "stage_order", "MoERoutingProgram",
+]

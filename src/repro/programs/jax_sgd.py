@@ -1,0 +1,151 @@
+"""ACAN-over-JAX as a :class:`WorkloadProgram` — real JAX training on the
+generic Manager/Handler plane.
+
+Data-parallel SGD where every microbatch gradient is one ACAN task:
+
+- each round is one SGD step; the single ``grad`` stage holds one
+  ``jaxgrad`` task per microbatch (``out_lo`` = microbatch index);
+- the op computes ``grad(loss)`` with a jitted step on the
+  *deterministic* microbatch ``batch_at(step·M + micro)`` and publishes
+  the gradient tree keyed by content — duplicate execution rewrites
+  identical values (bitwise: same jit, same data, same params);
+- the combine averages exactly one gradient per micro key, applies the
+  update, and commits the new param version through the §5.4 sliding
+  window (handlers read params by version — a handler that crashed
+  mid-task never corrupts anything; its task simply re-appears).
+
+This replaces the pre-PR-3 ``ts_exec/step_runner.py`` control loop,
+which re-implemented its own barrier/timeout/commit discipline: the
+Manager's pouch barrier, GSS deadline, straggler re-issue, and cursor
+checkpointing now come from the shared plane.
+
+The op closes over the jitted grad function and the data pipeline, so it
+registers in a **program-private** registry chained to the global one —
+two concurrent programs never collide.
+
+TS data-plane keys: ``("params", step)`` (current param tree),
+``("gpart", step, micro)`` ((loss, grad-tree) per microbatch).
+"""
+
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.executor import ExecContext, PreconditionUnmet
+from repro.core.program import (OpRegistry, OpSpec, WorkloadProgram,
+                                ensure_builtin_ops, record_loss)
+from repro.core.space import ANY
+from repro.core.tasks import TaskDesc
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models import model as M
+
+JAXGRAD = "jaxgrad"
+
+
+class JAXSGDProgram(WorkloadProgram):
+    """One microbatch-gradient task per handler trip; SGD combine."""
+
+    name = "jax_sgd"
+
+    def __init__(self, cfg: "M.ModelConfig", steps: int, n_micro: int = 4,
+                 micro_batch: int = 2, seq: int = 64, lr: float = 0.05,
+                 handler_crash_prob: float = 0.0, data_mode: str = "cyclic",
+                 seed: int = 0) -> None:
+        self.cfg = cfg
+        self.steps = steps
+        self.n_micro = n_micro
+        self.lr = lr
+        self.seed = seed
+        self.handler_crash_prob = handler_crash_prob
+        self.crashes = 0
+        self._crash_rng = np.random.default_rng(seed + 7)
+        # The op runs on every Handler thread; Generator is not
+        # thread-safe and the counter would undercount unsynchronized.
+        self._crash_lock = threading.Lock()
+        self.pipe = TokenPipeline(PipelineConfig(
+            vocab=cfg.vocab, batch=micro_batch, seq=seq,
+            seed=seed, mode=data_mode,
+            n_codebooks=cfg.n_codebooks if cfg.frontend == "codebooks" else 0,
+            embed_dim=cfg.d_model if cfg.frontend == "embeds" else 0))
+
+        def loss_fn(params, batch):
+            return M.train_loss(params, cfg, batch)[0]
+
+        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        self.registry = OpRegistry(parent=ensure_builtin_ops())
+        self.registry.register(OpSpec(
+            JAXGRAD, self._grad_parts,
+            cost_fn=lambda t: 1.0,          # uniform, indivisible
+            split_fn=lambda t: [t]))
+
+    # ---------------------------------------------------------------- setup
+    def setup(self, ts) -> None:
+        if ts.try_read(("params", ANY)) is None:
+            params = M.init_params(self.cfg, jax.random.PRNGKey(self.seed))
+            ts.put(("params", 0), params)
+
+    # ---------------------------------------------------------- stage graph
+    def n_rounds(self) -> int:
+        return self.steps
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return ["grad"]
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
+        return [TaskDesc(JAXGRAD, 0, rnd, rnd, 0, 0, m, m + 1)
+                for m in range(self.n_micro)]
+
+    # ------------------------------------------------------------------- op
+    def _grad_parts(self, ctx: ExecContext, tasks: list[TaskDesc]):
+        hit = ctx.ts.try_read(("params", ANY))
+        if hit is None:
+            raise PreconditionUnmet("params")
+        params = hit[1]
+        items = []
+        for t in tasks:
+            with self._crash_lock:
+                crash = self._crash_rng.random() < self.handler_crash_prob
+                if crash:
+                    self.crashes += 1
+            if crash:
+                # Emulated crash while holding the task: the group is
+                # discarded with nothing written, and the Manager's
+                # timeout re-issues it (paper §5.1).
+                raise PreconditionUnmet("injected handler crash")
+            micro = t.out_lo
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.pipe.batch_at(t.step * self.n_micro + micro).items()}
+            loss, grads = self._grad_fn(params, batch)
+            items.append((("gpart", t.step, micro),
+                          (float(loss), jax.device_get(grads))))
+        return items
+
+    # -------------------------------------------------------------- combine
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        if not mgr.window.can_commit(0, rnd):
+            return                       # already committed before a crash
+        hit = ts.try_read(("params", rnd))
+        if hit is None:
+            return
+        parts = [ts.try_read(("gpart", rnd, m)) for m in range(self.n_micro)]
+        if any(p is None for p in parts):
+            return                       # stage incomplete (stopped early)
+        parts = [p[1] for p in parts]
+        mean_loss = float(np.mean([p[0] for p in parts]))
+        grads = jax.tree.map(
+            lambda *gs: np.mean(np.stack(gs), axis=0), *[p[1] for p in parts])
+        new_params = jax.tree.map(
+            lambda p, g: (p - self.lr * g).astype(p.dtype), hit[1], grads)
+        record_loss(ts, rnd, mean_loss, mgr.cfg.history_limit)
+        if mgr.window.commit(0, rnd):    # §5.4 exactly-once
+            ts.put(("params", rnd + 1), new_params)
+            ts.delete(("params", rnd))
+
+    # -------------------------------------------------------------- cleanup
+    def finish_round(self, ts, rnd: int) -> None:
+        ts.delete(("gpart", rnd, ANY))
+        ts.delete(("done", ANY, ANY, rnd, ANY, ANY, ANY, ANY, ANY))

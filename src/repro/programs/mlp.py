@@ -1,0 +1,464 @@
+"""The paper's MLP workload (§5–§6) as a :class:`WorkloadProgram`.
+
+For a NN of linear layers the program derives five *prototype ops* per
+layer — ``forward``, ``activation`` (hidden layers), ``loss`` (last
+layer), ``backward``, ``update`` — and partitions them into **uniform
+fixed-size** tasks so pouch/timeout tuning is handler-agnostic
+(paper §5.1–5.2):
+
+- a *forward/backward* task over ``(m inputs, n outputs)`` splits
+  **4-way** into quadrants;
+- *activation*, *loss* and *update* tasks over ``m`` elements split
+  **2-way** into halves;
+- splitting recurses until every task's cost is ≤ the task-size cap
+  (the paper uses cap = 4⁴ = 256).
+
+One round = one training sample at one SGD step (``data_id = round %
+n_samples``, ``step = round``); the stage graph is the sample's forward
+→ loss → backward → update pipeline. The stage-boundary combines and
+the §5.4 exactly-once parameter commit moved here verbatim from the
+pre-PR-3 Manager — the loss trajectory is bit-identical.
+
+TS data-plane key conventions (all per training *sample*, since the
+paper uses SGD with batch size 1):
+
+==========================================  =================================
+key                                          value
+==========================================  =================================
+``("w", layer)`` / ``("b", layer)``          committed weights / bias
+``("wver", layer)``                          committed version (int)
+``("x", data_id)`` / ``("label", data_id)``  input / target vectors
+``("pre", l, data_id)``                      pre-activation (combined)
+``("act", l, data_id)``                      post-activation (combined)
+``("fpart", l, data_id, ol,oh, il,ih)``      forward partial: W[ol:oh,il:ih]·x
+``("actpart", l, data_id, lo, hi)``          activation slice
+``("losspart", data_id, lo, hi)``            loss over output slice
+``("dypart", l, data_id, lo, hi)``           dLoss/dpre slice (last layer)
+``("dy", l, data_id)``                       dLoss/dpre (combined)
+``("gw", l, data_id, ol,oh, il,ih)``         dW tile
+``("gb", l, data_id, ol,oh)``                db slice
+``("bpart", l, data_id, il,ih, ol,oh)``      dx partial (contribution of out
+                                              slice ``ol:oh`` to ``il:ih``)
+``("gW", l, data_id)`` / ``("gB", l, ...)``  combined gradients
+``("wnew", l, step, ol, oh)``                updated W rows (+"bnew" bias)
+==========================================  =================================
+
+Hidden activation is ``tanh`` (regression setting, paper §5.1/§6.1); the
+last layer is linear.
+"""
+
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.conflict import tiles_cover
+from repro.core.executor import (ExecContext, activation,
+                                 activation_deriv_from_act)
+from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
+                                record_loss)
+from repro.core.space import ANY
+from repro.core.tasks import TaskDesc, split_out_halves, split_quadrants
+
+# The five prototype op names (open strings — new programs add their own).
+FORWARD = "forward"
+ACTIVATION = "activation"
+LOSS = "loss"
+BACKWARD = "backward"
+UPDATE = "update"
+
+# Cost weighting: the paper notes loss tasks "involve more complex
+# computations and are better to be assigned a proportionally larger size".
+LOSS_COST_FACTOR = 4.0
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One linear layer: ``y = W x + b`` with ``W: (n_out, n_in)``."""
+    n_in: int
+    n_out: int
+
+
+# --------------------------------------------------------------------------
+# Prototype-task generation (paper §5.1)
+# --------------------------------------------------------------------------
+
+def prototype_tasks(layers: list[LayerSpec], data_id: int, step: int) -> dict[str, list[TaskDesc]]:
+    """All prototype tasks for one training sample, grouped by pipeline stage.
+
+    Stage keys (in dependency order)::
+
+        fwd_<l>  act_<l> (hidden only)  loss  bwd_<l>  upd_<l>
+    """
+    n_layers = len(layers)
+    stages: dict[str, list[TaskDesc]] = {}
+    for l, spec in enumerate(layers):
+        stages[f"fwd_{l}"] = [TaskDesc(FORWARD, l, data_id, step,
+                                       0, spec.n_in, 0, spec.n_out)]
+        if l < n_layers - 1:
+            stages[f"act_{l}"] = [TaskDesc(ACTIVATION, l, data_id, step,
+                                           0, 0, 0, spec.n_out)]
+    last = layers[-1]
+    stages["loss"] = [TaskDesc(LOSS, n_layers - 1, data_id, step,
+                               0, 0, 0, last.n_out)]
+    for l in reversed(range(n_layers)):
+        spec = layers[l]
+        stages[f"bwd_{l}"] = [TaskDesc(BACKWARD, l, data_id, step,
+                                       0, spec.n_in, 0, spec.n_out)]
+    for l in range(n_layers):
+        spec = layers[l]
+        stages[f"upd_{l}"] = [TaskDesc(UPDATE, l, data_id, step,
+                                       0, spec.n_in, 0, spec.n_out)]
+    return stages
+
+
+def stage_order(n_layers: int) -> list[str]:
+    """Dependency-ordered stage names for one sample's pipeline."""
+    order: list[str] = []
+    for l in range(n_layers):
+        order.append(f"fwd_{l}")
+        if l < n_layers - 1:
+            order.append(f"act_{l}")
+    order.append("loss")
+    for l in reversed(range(n_layers)):
+        order.append(f"bwd_{l}")
+    for l in range(n_layers):
+        order.append(f"upd_{l}")
+    return order
+
+
+# --------------------------------------------------------------------------
+# Op kernels — batch-vectorized, pure functions of tuples they read
+# --------------------------------------------------------------------------
+
+def _input_vec(ctx: ExecContext, layer: int, data_id: int) -> np.ndarray:
+    if layer == 0:
+        return ctx.require(("x", data_id))
+    return ctx.require(("act", layer - 1, data_id))
+
+
+def _by_shape(tasks: list[TaskDesc]):
+    """Stacking needs uniform tile shapes; edge tiles may differ."""
+    groups: dict[tuple[int, int], list[TaskDesc]] = defaultdict(list)
+    for t in tasks:
+        groups[(t.m, t.n)].append(t)
+    return groups.values()
+
+
+def forward_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    t0 = tasks[0]
+    x = _input_vec(ctx, t0.layer, t0.data_id)
+    W = ctx.require(("w", t0.layer))
+    items = []
+    for group in _by_shape(tasks):
+        tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+                          for t in group])
+        xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
+        parts = np.matmul(tiles, xs[:, :, None])[:, :, 0]
+        items.extend(
+            ((("fpart", t.layer, t.data_id, t.out_lo, t.out_hi,
+               t.in_lo, t.in_hi), part.astype(np.float32)))
+            for t, part in zip(group, parts))
+    return items
+
+
+def activation_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    t0 = tasks[0]
+    pre = ctx.require(("pre", t0.layer, t0.data_id))
+    act = activation(pre).astype(np.float32)
+    return [(("actpart", t.layer, t.data_id, t.out_lo, t.out_hi),
+             act[t.out_lo:t.out_hi]) for t in tasks]
+
+
+def loss_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    # Output of the net = pre-activation of the last layer (linear head);
+    # MSE over the full output dim — slices contribute sum / n_total.
+    t0 = tasks[0]
+    pre = ctx.require(("pre", t0.layer, t0.data_id))
+    label = ctx.require(("label", t0.data_id))
+    n_total = pre.shape[0]
+    items = []
+    for t in tasks:
+        diff = pre[t.out_lo:t.out_hi] - label[t.out_lo:t.out_hi]
+        items.append((("losspart", t.data_id, t.out_lo, t.out_hi),
+                      np.float32(np.sum(diff * diff) / n_total)))
+        items.append((("dypart", t.layer, t.data_id, t.out_lo, t.out_hi),
+                      (2.0 * diff / n_total).astype(np.float32)))
+    return items
+
+
+def backward_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    t0 = tasks[0]
+    dy = ctx.require(("dy", t0.layer, t0.data_id))
+    x = _input_vec(ctx, t0.layer, t0.data_id)
+    W = ctx.require(("w", t0.layer))
+    items = []
+    for group in _by_shape(tasks):
+        dys = np.stack([dy[t.out_lo:t.out_hi] for t in group])
+        xs = np.stack([x[t.in_lo:t.in_hi] for t in group])
+        tiles = np.stack([W[t.out_lo:t.out_hi, t.in_lo:t.in_hi]
+                          for t in group])
+        # outer products and dx partials, batched over the group; db only
+        # once per out-slice (attached to the tile whose in_lo is 0).
+        gws = dys[:, :, None] * xs[:, None, :]
+        bparts = np.matmul(tiles.transpose(0, 2, 1),
+                           dys[:, :, None])[:, :, 0]
+        for t, gw, bp in zip(group, gws, bparts):
+            items.append((("gw", t.layer, t.data_id, t.out_lo, t.out_hi,
+                           t.in_lo, t.in_hi), gw.astype(np.float32)))
+            items.append((("bpart", t.layer, t.data_id, t.in_lo, t.in_hi,
+                           t.out_lo, t.out_hi), bp.astype(np.float32)))
+            if t.in_lo == 0:
+                items.append((("gb", t.layer, t.data_id,
+                               t.out_lo, t.out_hi),
+                              dy[t.out_lo:t.out_hi].astype(np.float32)))
+    return items
+
+
+def update_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    # Keyed by step → duplicate executions overwrite with identical
+    # values; the Manager's commit window takes each (step, slice) once.
+    t0 = tasks[0]
+    lr = float(ctx.env.get("lr", 0.01))
+    W = ctx.require(("w", t0.layer))
+    b = ctx.require(("b", t0.layer))
+    gW = ctx.require(("gW", t0.layer, t0.data_id))
+    gB = ctx.require(("gB", t0.layer, t0.data_id))
+    items = []
+    for t in tasks:
+        rows = slice(t.out_lo, t.out_hi)
+        items.append((("wnew", t.layer, t.step, t.out_lo, t.out_hi),
+                      (W[rows] - lr * gW[rows]).astype(np.float32)))
+        items.append((("bnew", t.layer, t.step, t.out_lo, t.out_hi),
+                      (b[rows] - lr * gB[rows]).astype(np.float32)))
+    return items
+
+
+def _cost_2d(t: TaskDesc) -> float:
+    """Multiply/accumulate count proxy for 2-D tasks (paper §5.2)."""
+    return float(t.m * t.n)
+
+
+def _cost_act(t: TaskDesc) -> float:
+    return float(t.n)
+
+
+def _cost_loss(t: TaskDesc) -> float:
+    return LOSS_COST_FACTOR * t.n
+
+
+def _cost_update(t: TaskDesc) -> float:
+    # rows out_lo:out_hi of W (n rows × m columns) + bias rows
+    return float(t.n * max(t.m, 1))
+
+
+for _spec in (
+    OpSpec(FORWARD, forward_parts, _cost_2d, split_quadrants),
+    OpSpec(ACTIVATION, activation_parts, _cost_act, split_out_halves),
+    OpSpec(LOSS, loss_parts, _cost_loss, split_out_halves),
+    OpSpec(BACKWARD, backward_parts, _cost_2d, split_quadrants),
+    OpSpec(UPDATE, update_parts, _cost_update, split_out_halves),
+):
+    GLOBAL_OPS.register(_spec)
+
+
+# --------------------------------------------------------------------------
+# Teacher data (paper §6.1)
+# --------------------------------------------------------------------------
+
+def make_teacher_data(layers: list[LayerSpec], n_samples: int, seed: int,
+                      noise: float = 0.0):
+    """Synthetic regression data from a random teacher net of the same
+    architecture (paper §6.1: "randomly generate a set of parameters that
+    define a mapping … synthesize 100 data points")."""
+    rng = np.random.default_rng(seed + 1234)
+    Ws = []
+    for spec in layers:
+        Ws.append(rng.standard_normal((spec.n_out, spec.n_in)).astype(np.float32)
+                  / np.sqrt(spec.n_in))
+    X = rng.standard_normal((n_samples, layers[0].n_in)).astype(np.float32)
+    Y = []
+    for x in X:
+        h = x
+        for i, W in enumerate(Ws):
+            h = W @ h
+            if i < len(Ws) - 1:
+                h = np.tanh(h)
+        Y.append(h + noise * rng.standard_normal(h.shape).astype(np.float32))
+    return X, np.stack(Y)
+
+
+# --------------------------------------------------------------------------
+# The program
+# --------------------------------------------------------------------------
+
+class MLPProgram(WorkloadProgram):
+    """The paper's §6 workload: SGD(bs=1) over a linear-layer NN."""
+
+    name = "mlp"
+
+    def __init__(self, layers: list[LayerSpec], epochs: int = 2,
+                 n_samples: int = 100, seed: int = 0,
+                 data_noise: float = 0.0, make_data: bool = True) -> None:
+        self.layers = list(layers)
+        self.epochs = epochs
+        self.n_samples = n_samples
+        self.seed = seed
+        self.data_noise = data_noise
+        self.make_data = make_data
+        self._order = stage_order(len(self.layers))
+
+    # ---------------------------------------------------------------- setup
+    def setup(self, ts) -> None:
+        """Publish dataset + initial weights (fresh start only — every put
+        is guarded, so a revived Manager's re-call is a no-op)."""
+        if self.make_data and ts.try_read(("x", 0)) is None:
+            X, Y = make_teacher_data(self.layers, self.n_samples, self.seed,
+                                     self.data_noise)
+            for i in range(self.n_samples):
+                ts.put(("x", i), X[i])
+                ts.put(("label", i), Y[i])
+        rng = np.random.default_rng(self.seed)
+        for l, spec in enumerate(self.layers):
+            if ts.try_read(("w", l)) is None:
+                scale = 1.0 / np.sqrt(spec.n_in)
+                ts.put(("w", l), (rng.standard_normal(
+                    (spec.n_out, spec.n_in)) * scale).astype(np.float32))
+                ts.put(("b", l), np.zeros(spec.n_out, dtype=np.float32))
+                ts.put(("wver", l), 0)
+
+    # ---------------------------------------------------------- stage graph
+    def n_rounds(self) -> int:
+        return self.epochs * self.n_samples
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return self._order
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
+        data_id = rnd % self.n_samples
+        return prototype_tasks(self.layers, data_id, rnd)[stage]
+
+    # -------------------------------------------------------------- combine
+    # Key iteration is SORTED everywhere: fp32 accumulation order must not
+    # depend on handler completion order, or re-executed/raced tasks could
+    # perturb training numerics (determinism is the §5.4 idempotency
+    # guarantee, and it must hold bitwise).
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        data_id = rnd % self.n_samples
+        kind, _, l = stage.partition("_")
+        if kind == "fwd":
+            self._combine_forward(ts, int(l), data_id, self.layers[int(l)])
+        elif kind == "act":
+            self._combine_activation(ts, int(l), data_id, self.layers[int(l)])
+        elif stage == "loss":
+            self._combine_loss(ts, data_id, rnd, mgr.cfg.history_limit)
+        elif kind == "bwd":
+            self._combine_backward(ts, int(l), data_id, self.layers[int(l)])
+        elif kind == "upd":
+            self._commit_update(ts, int(l), rnd, self.layers[int(l)],
+                                mgr.window)
+
+    def _combine_forward(self, ts, l: int, data_id: int, spec: LayerSpec) -> None:
+        if ts.try_read(("pre", l, data_id)) is not None:
+            return
+        keys = sorted(ts.keys(("fpart", l, data_id, ANY, ANY, ANY, ANY)))
+        pre = np.array(ts.try_read(("b", l))[1], copy=True)
+        for k in keys:
+            ol, oh = k[3], k[4]
+            pre[ol:oh] += ts.try_read(k)[1]
+        ts.put(("pre", l, data_id), pre.astype(np.float32))
+
+    def _combine_activation(self, ts, l: int, data_id: int, spec: LayerSpec) -> None:
+        if ts.try_read(("act", l, data_id)) is not None:
+            return
+        out = np.zeros(spec.n_out, dtype=np.float32)
+        for k in sorted(ts.keys(("actpart", l, data_id, ANY, ANY))):
+            out[k[3]:k[4]] = ts.try_read(k)[1]
+        ts.put(("act", l, data_id), out)
+
+    def _combine_loss(self, ts, data_id: int, step: int,
+                      history_limit: int) -> None:
+        L = len(self.layers) - 1
+        if ts.try_read(("dy", L, data_id)) is not None:
+            return
+        n_out = self.layers[-1].n_out
+        loss = 0.0
+        dy = np.zeros(n_out, dtype=np.float32)
+        for k in sorted(ts.keys(("losspart", data_id, ANY, ANY))):
+            loss += float(ts.try_read(k)[1])
+        for k in sorted(ts.keys(("dypart", L, data_id, ANY, ANY))):
+            dy[k[3]:k[4]] = ts.try_read(k)[1]
+        ts.put(("loss", data_id, step), np.float32(loss))
+        record_loss(ts, step, loss, history_limit)
+        ts.put(("dy", L, data_id), dy)
+
+    def _combine_backward(self, ts, l: int, data_id: int, spec: LayerSpec) -> None:
+        # Idempotency guard on the LAST tuple this combine writes (dy for
+        # hidden layers, gB for layer 0): a crash mid-combine must leave
+        # the guard unset so a revived Manager redoes the whole combine
+        # (re-puts overwrite with identical values — pure function of
+        # sorted parts).
+        done_key = ("dy", l - 1, data_id) if l > 0 else ("gB", l, data_id)
+        if ts.try_read(done_key) is not None:
+            return
+        gW = np.zeros((spec.n_out, spec.n_in), dtype=np.float32)
+        for k in sorted(ts.keys(("gw", l, data_id, ANY, ANY, ANY, ANY))):
+            gW[k[3]:k[4], k[5]:k[6]] = ts.try_read(k)[1]
+        gB = np.zeros(spec.n_out, dtype=np.float32)
+        for k in sorted(ts.keys(("gb", l, data_id, ANY, ANY))):
+            gB[k[3]:k[4]] = ts.try_read(k)[1]
+        ts.put(("gW", l, data_id), gW)
+        ts.put(("gB", l, data_id), gB)
+        if l > 0:
+            dx = np.zeros(spec.n_in, dtype=np.float32)
+            for k in sorted(ts.keys(("bpart", l, data_id, ANY, ANY, ANY, ANY))):
+                dx[k[3]:k[4]] += ts.try_read(k)[1]
+            a_prev = ts.try_read(("act", l - 1, data_id))[1]
+            ts.put(("dy", l - 1, data_id),
+                   (dx * activation_deriv_from_act(a_prev)).astype(np.float32))
+
+    def _commit_update(self, ts, l: int, step: int, spec: LayerSpec,
+                       window) -> None:
+        """§5.4: overwrite W only when all row tiles are present, exactly
+        once per (layer, step)."""
+        if not window.can_commit(l, step):
+            return
+        keys = ts.keys(("wnew", l, step, ANY, ANY))
+        if not tiles_cover([(k[3], k[4]) for k in keys], 0, spec.n_out):
+            return
+        W = np.array(ts.try_read(("w", l))[1], copy=True)
+        b = np.array(ts.try_read(("b", l))[1], copy=True)
+        for k in keys:
+            W[k[3]:k[4]] = ts.try_read(k)[1]
+        for k in ts.keys(("bnew", l, step, ANY, ANY)):
+            b[k[3]:k[4]] = ts.try_read(k)[1]
+        if window.commit(l, step):
+            ts.delete(("w", l)); ts.put(("w", l), W)
+            ts.delete(("b", l)); ts.put(("b", l), b)
+            ver = ts.try_read(("wver", l))
+            ts.delete(("wver", l))
+            ts.put(("wver", l), (ver[1] if ver else 0) + 1)
+        ts.delete(("wnew", l, step, ANY, ANY))
+        ts.delete(("bnew", l, step, ANY, ANY))
+
+    # -------------------------------------------------------------- cleanup
+    def finish_round(self, ts, rnd: int) -> None:
+        data_id = rnd % self.n_samples
+        for pat in [("fpart", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("actpart", ANY, data_id, ANY, ANY),
+                    ("losspart", data_id, ANY, ANY),
+                    ("dypart", ANY, data_id, ANY, ANY),
+                    ("gw", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("gb", ANY, data_id, ANY, ANY),
+                    ("bpart", ANY, data_id, ANY, ANY, ANY, ANY),
+                    ("gW", ANY, data_id), ("gB", ANY, data_id),
+                    ("pre", ANY, data_id), ("act", ANY, data_id),
+                    ("dy", ANY, data_id),
+                    # per-sample loss tuples: nothing reads them after the
+                    # combine (losshist carries the trajectory) — leaving
+                    # them was unbounded TS garbage, one per sample-step.
+                    ("loss", data_id, ANY)]:
+            ts.delete(pat)
+        ts.delete(("done", ANY, ANY, data_id, ANY, ANY, ANY, ANY, ANY))

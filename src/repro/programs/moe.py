@@ -1,0 +1,366 @@
+"""Non-regular workload: MoE expert routing as a :class:`WorkloadProgram`.
+
+A numpy mixture-of-experts regression in the formulation of
+:mod:`repro.models.moe` (top-k routing with renormalised gate probs,
+per-expert FFN experts, frozen router): each round draws a token
+minibatch, routes it, and trains the experts — and because routing is
+**data-dependent**, the per-expert task sizes are *irregular*: a hot
+expert's forward/grad task costs several times a cold expert's, and the
+load re-draws every round. That is exactly the non-regular regime the
+paper claims feasibility for — irregular stage durations exercise the
+GSS timeout adaptation, and the multi-size tasks exercise partitioning
+and the Handler capability ("store") path, all on the *same*
+Manager/Handler plane as the paper's MLP.
+
+Stage graph per round (minibatch)::
+
+    route   — regular:  one task per token block, computes top-k + gates
+    expert  — IRREGULAR: one prototype task per expert with ≥1 routed
+              token, sized by that expert's data-dependent dispatch list
+    grad    — IRREGULAR: same shape; expert weight gradients
+
+Combines: ``route`` → per-expert dispatch lists; ``expert`` → scatter-add
+the gate-weighted expert outputs, loss + dY; ``grad`` → sum partials and
+commit the SGD update exactly once per (expert, round) through the §5.4
+window. The router stays frozen (the teacher shares it), so the loss
+decreases as the experts learn the teacher mixture.
+
+TS data-plane key conventions (all per *round* — one minibatch):
+
+==========================================  =================================
+key                                          value
+==========================================  =================================
+``("moecfg",)``                              program geometry dict (consumed
+                                             by the stateless op kernels)
+``("xtok",)`` / ``("ylab",)``                token inputs (T, d_in) /
+                                             teacher targets (T, d_out)
+``("wr",)``                                  frozen router (E, d_in)
+``("we1", e)`` / ``("we2", e)``              expert weights (d_h, d_in) /
+                                             (d_out, d_h)
+``("wever", e)``                             committed expert version
+``("route", rnd, lo, hi)``                   block routing: top-k expert ids
+                                             + gates for minibatch slots
+``("disp", rnd, e)``                         dispatch list: token ids +
+                                             gates routed to expert ``e``
+``("efwd", rnd, e, lo, hi)``                 gate-weighted expert outputs
+                                             for slots lo:hi of e's list
+``("gw1", rnd, e, lo, hi)``                  ∂W1 partial / slot slice
+``("gw2", rnd, e, lo, hi)``                  ∂W2 partial / slot slice
+``("dy", rnd)``                              combined dLoss/dYhat (B, d_out)
+==========================================  =================================
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.conflict import tiles_cover
+from repro.core.executor import ExecContext
+from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
+                                record_loss)
+from repro.core.space import ANY
+from repro.core.tasks import TaskDesc
+
+ROUTE = "moe_route"
+EXPERT_FWD = "moe_fwd"
+EXPERT_GRAD = "moe_grad"
+
+#: Cost units (same scale as the MLP MAC proxy): routing a token scores
+#: logits against every expert; an expert slot runs the two FFN matmuls.
+ROUTE_COST_PER_TOKEN = 4.0
+EXPERT_COST_PER_SLOT = 16.0
+
+
+def _relu(z: np.ndarray) -> np.ndarray:
+    return np.maximum(z, 0.0)
+
+
+def minibatch_ids(cfg: dict, rnd: int) -> np.ndarray:
+    """The round's token minibatch — a pure function of (cfg, round), so
+    ops and combines recompute it instead of persisting it (idempotent
+    under revival by construction)."""
+    rng = np.random.default_rng(cfg["seed"] * 1_000_003 + rnd + 17)
+    return rng.choice(cfg["T"], size=cfg["B"], replace=False)
+
+
+def _topk_route(x: np.ndarray, wr: np.ndarray, k: int):
+    """Top-k expert ids + renormalised softmax gates per token (the
+    ``norm_topk`` discipline of :func:`repro.models.moe.moe_ffn`)."""
+    logits = x @ wr.T                                     # (n, E)
+    order = np.argsort(-logits, axis=1, kind="stable")[:, :k]
+    top = np.take_along_axis(logits, order, axis=1)
+    top = np.exp(top - top.max(axis=1, keepdims=True))
+    gates = top / np.maximum(top.sum(axis=1, keepdims=True), 1e-9)
+    return order.astype(np.int64), gates.astype(np.float32)
+
+
+def _slot_inverse(cfg: dict, rnd: int) -> np.ndarray:
+    """token id -> row in the round's minibatch (-1 if absent)."""
+    ids_mb = minibatch_ids(cfg, rnd)
+    inv = np.full(cfg["T"], -1, dtype=np.int64)
+    inv[ids_mb] = np.arange(len(ids_mb))
+    return inv
+
+
+# --------------------------------------------------------------------------
+# Op kernels
+# --------------------------------------------------------------------------
+
+def route_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    cfg = ctx.require(("moecfg",))
+    X = ctx.require(("xtok",))
+    wr = ctx.require(("wr",))
+    items = []
+    for t in tasks:
+        ids = minibatch_ids(cfg, t.step)[t.out_lo:t.out_hi]
+        experts, gates = _topk_route(X[ids], wr, cfg["k"])
+        items.append((("route", t.step, t.out_lo, t.out_hi),
+                      {"experts": experts, "gates": gates}))
+    return items
+
+
+def expert_fwd_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    X = ctx.require(("xtok",))
+    t0 = tasks[0]
+    disp = ctx.require(("disp", t0.step, t0.layer))
+    W1 = ctx.require(("we1", t0.layer))
+    W2 = ctx.require(("we2", t0.layer))
+    items = []
+    for t in tasks:
+        tok = disp["ids"][t.out_lo:t.out_hi]
+        g = disp["gates"][t.out_lo:t.out_hi]
+        h = _relu(X[tok] @ W1.T)                          # (n, d_h)
+        y = (h @ W2.T) * g[:, None]                       # gate-weighted
+        items.append((("efwd", t.step, t.layer, t.out_lo, t.out_hi),
+                      y.astype(np.float32)))
+    return items
+
+
+def expert_grad_parts(ctx: ExecContext, tasks: list[TaskDesc]):
+    cfg = ctx.require(("moecfg",))
+    X = ctx.require(("xtok",))
+    t0 = tasks[0]
+    disp = ctx.require(("disp", t0.step, t0.layer))
+    dY = ctx.require(("dy", t0.step))                     # (B, d_out)
+    W1 = ctx.require(("we1", t0.layer))
+    W2 = ctx.require(("we2", t0.layer))
+    inv = _slot_inverse(cfg, t0.step)
+    items = []
+    for t in tasks:
+        tok = disp["ids"][t.out_lo:t.out_hi]
+        g = disp["gates"][t.out_lo:t.out_hi]
+        x = X[tok]                                        # (n, d_in)
+        h = _relu(x @ W1.T)                               # (n, d_h)
+        dy_tok = dY[inv[tok]] * g[:, None]                # (n, d_out)
+        gW2 = dy_tok.T @ h                                # (d_out, d_h)
+        dh = (dy_tok @ W2) * (h > 0)                      # (n, d_h)
+        gW1 = dh.T @ x                                    # (d_h, d_in)
+        items.append((("gw1", t.step, t.layer, t.out_lo, t.out_hi),
+                      gW1.astype(np.float32)))
+        items.append((("gw2", t.step, t.layer, t.out_lo, t.out_hi),
+                      gW2.astype(np.float32)))
+    return items
+
+
+for _spec in (
+    OpSpec(ROUTE, route_parts,
+           lambda t: ROUTE_COST_PER_TOKEN * t.n),
+    OpSpec(EXPERT_FWD, expert_fwd_parts,
+           lambda t: EXPERT_COST_PER_SLOT * t.n),
+    OpSpec(EXPERT_GRAD, expert_grad_parts,
+           lambda t: EXPERT_COST_PER_SLOT * t.n),
+):
+    GLOBAL_OPS.register(_spec)
+
+
+# --------------------------------------------------------------------------
+# The program
+# --------------------------------------------------------------------------
+
+class MoERoutingProgram(WorkloadProgram):
+    """Train MoE experts under a frozen shared router (teacher/student)."""
+
+    name = "moe_routing"
+
+    def __init__(self, n_tokens: int = 128, minibatch: int = 32,
+                 d_in: int = 16, d_hidden: int = 16, d_out: int = 8,
+                 n_experts: int = 4, top_k: int = 2, steps: int = 10,
+                 block: int = 8, lr: float = 0.3, seed: int = 0) -> None:
+        self.T, self.B = n_tokens, minibatch
+        self.d_in, self.d_h, self.d_out = d_in, d_hidden, d_out
+        self.E, self.k = n_experts, top_k
+        self.steps = steps
+        self.block = block
+        self.lr = lr
+        self.seed = seed
+        self._cfg = {"T": self.T, "B": self.B, "E": self.E, "k": self.k,
+                     "d_in": d_in, "d_h": d_hidden, "d_out": d_out,
+                     "seed": seed}
+
+    # ---------------------------------------------------------------- setup
+    def setup(self, ts) -> None:
+        if ts.try_read(("moecfg",)) is not None:
+            return
+        rng = np.random.default_rng(self.seed + 4321)
+        X = rng.standard_normal((self.T, self.d_in)).astype(np.float32)
+        wr = (rng.standard_normal((self.E, self.d_in))
+              / np.sqrt(self.d_in)).astype(np.float32)
+        # Teacher experts — same routing, same architecture; the student
+        # experts below must learn this mixture.
+        tW1 = rng.standard_normal((self.E, self.d_h, self.d_in)).astype(
+            np.float32) / np.sqrt(self.d_in)
+        tW2 = rng.standard_normal((self.E, self.d_out, self.d_h)).astype(
+            np.float32) / np.sqrt(self.d_h)
+        experts, gates = _topk_route(X, wr, self.k)
+        Y = np.zeros((self.T, self.d_out), dtype=np.float32)
+        for j in range(self.k):
+            for e in range(self.E):
+                mask = experts[:, j] == e
+                if not mask.any():
+                    continue
+                h = _relu(X[mask] @ tW1[e].T)
+                Y[mask] += (h @ tW2[e].T) * gates[mask, j][:, None]
+        ts.put(("xtok",), X)
+        ts.put(("ylab",), Y)
+        ts.put(("wr",), wr)
+        srng = np.random.default_rng(self.seed + 77)
+        for e in range(self.E):
+            ts.put(("we1", e), (srng.standard_normal((self.d_h, self.d_in))
+                                / np.sqrt(self.d_in)).astype(np.float32))
+            ts.put(("we2", e), (srng.standard_normal((self.d_out, self.d_h))
+                                / np.sqrt(self.d_h)).astype(np.float32))
+            ts.put(("wever", e), 0)
+        # Config last: ops require it, so its presence implies the rest.
+        ts.put(("moecfg",), dict(self._cfg))
+
+    # ---------------------------------------------------------- stage graph
+    def n_rounds(self) -> int:
+        return self.steps
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return ["route", "expert", "grad"]
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
+        if stage == "route":
+            return [TaskDesc(ROUTE, 0, rnd, rnd, 0, 0,
+                             lo, min(lo + self.block, self.B))
+                    for lo in range(0, self.B, self.block)]
+        # expert / grad: one prototype per expert, sized by its dispatch
+        # list — DATA-DEPENDENT (read from TS, written by the route
+        # combine; a revived Manager re-derives identical tasks).
+        op = EXPERT_FWD if stage == "expert" else EXPERT_GRAD
+        tasks = []
+        for e in range(self.E):
+            hit = ts.try_read(("disp", rnd, e))
+            if hit is None:
+                raise RuntimeError(
+                    f"dispatch for expert {e} missing in round {rnd} — "
+                    f"stage {stage!r} scheduled before route combined")
+            n_e = len(hit[1]["ids"])
+            if n_e:
+                tasks.append(TaskDesc(op, e, rnd, rnd, 0, 0, 0, n_e))
+        return tasks
+
+    # -------------------------------------------------------------- combine
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        if stage == "route":
+            self._combine_route(ts, rnd)
+        elif stage == "expert":
+            self._combine_expert(ts, rnd, mgr.cfg.history_limit)
+        elif stage == "grad":
+            self._commit_experts(ts, rnd, mgr.window)
+
+    def _combine_route(self, ts, rnd: int) -> None:
+        if ts.try_read(("disp", rnd, 0)) is not None:
+            return
+        ids_mb = minibatch_ids(self._cfg, rnd)
+        by_expert: dict[int, list[tuple[int, float]]] = {e: [] for e in range(self.E)}
+        for key in sorted(ts.keys(("route", rnd, ANY, ANY))):
+            lo, hi = key[2], key[3]
+            blk = ts.try_read(key)[1]
+            for slot in range(hi - lo):
+                tok = int(ids_mb[lo + slot])
+                for j in range(self.k):
+                    by_expert[int(blk["experts"][slot, j])].append(
+                        (tok, float(blk["gates"][slot, j])))
+        # Expert 0 (the idempotency-guard key) is written LAST, so a crash
+        # mid-combine leaves the guard unset and a revived Manager redoes
+        # the whole combine — same "presence implies the rest" ordering as
+        # setup()'s ("moecfg",).
+        for e in range(self.E - 1, -1, -1):
+            pairs = by_expert[e]
+            ts.put(("disp", rnd, e), {
+                "ids": np.array([p[0] for p in pairs], dtype=np.int64),
+                "gates": np.array([p[1] for p in pairs], dtype=np.float32)})
+
+    def _combine_expert(self, ts, rnd: int, history_limit: int) -> None:
+        if ts.try_read(("dy", rnd)) is not None:
+            return
+        ids_mb = minibatch_ids(self._cfg, rnd)
+        inv = _slot_inverse(self._cfg, rnd)
+        Yhat = np.zeros((self.B, self.d_out), dtype=np.float32)
+        for e in range(self.E):
+            disp = ts.try_read(("disp", rnd, e))[1]
+            for key in sorted(ts.keys(("efwd", rnd, e, ANY, ANY))):
+                lo, hi = key[3], key[4]
+                rows = inv[disp["ids"][lo:hi]]
+                np.add.at(Yhat, rows, ts.try_read(key)[1])
+        target = ts.try_read(("ylab",))[1][ids_mb]
+        diff = Yhat - target
+        denom = self.B * self.d_out
+        loss = float(np.sum(diff * diff) / denom)
+        record_loss(ts, rnd, loss, history_limit)
+        ts.put(("dy", rnd), (2.0 * diff / denom).astype(np.float32))
+
+    def _commit_experts(self, ts, rnd: int, window) -> None:
+        """Sum gradient partials and SGD-update each routed expert exactly
+        once per (expert, round) — the §5.4 window keyed by expert."""
+        for e in range(self.E):
+            hit = ts.try_read(("disp", rnd, e))
+            if hit is None or len(hit[1]["ids"]) == 0:
+                continue
+            if not window.can_commit(e, rnd):
+                continue
+            n_e = len(hit[1]["ids"])
+            k1 = ts.keys(("gw1", rnd, e, ANY, ANY))
+            if not tiles_cover([(k[3], k[4]) for k in k1], 0, n_e):
+                continue
+            gW1 = np.zeros((self.d_h, self.d_in), dtype=np.float32)
+            for k in sorted(k1):
+                gW1 += ts.try_read(k)[1]
+            gW2 = np.zeros((self.d_out, self.d_h), dtype=np.float32)
+            for k in sorted(ts.keys(("gw2", rnd, e, ANY, ANY))):
+                gW2 += ts.try_read(k)[1]
+            W1 = ts.try_read(("we1", e))[1] - self.lr * gW1
+            W2 = ts.try_read(("we2", e))[1] - self.lr * gW2
+            if window.commit(e, rnd):
+                ts.delete(("we1", e)); ts.put(("we1", e), W1.astype(np.float32))
+                ts.delete(("we2", e)); ts.put(("we2", e), W2.astype(np.float32))
+                ver = ts.try_read(("wever", e))
+                ts.delete(("wever", e))
+                ts.put(("wever", e), (ver[1] if ver else 0) + 1)
+
+    # ------------------------------------------------------------ probing
+    def probe_expert_tasks(self, rnd: int = 0) -> list[TaskDesc]:
+        """Run one routing round inline on a scratch TS and return the
+        expert stage's prototype tasks — the measured irregularity probe
+        shared by the benchmark, the example, and the tests (cost each
+        task via ``GLOBAL_OPS.cost``)."""
+        from repro.core.executor import TaskExecutor
+        from repro.core.space import TupleSpace
+        ts = TupleSpace()
+        self.setup(ts)
+        TaskExecutor(ts).execute_batch(self.stage_tasks(ts, rnd, "route"))
+        # The route combine touches neither the commit window nor the
+        # manager config, so no Manager is needed here.
+        self._combine_route(ts, rnd)
+        return self.stage_tasks(ts, rnd, "expert")
+
+    # -------------------------------------------------------------- cleanup
+    def finish_round(self, ts, rnd: int) -> None:
+        for pat in [("route", rnd, ANY, ANY), ("disp", rnd, ANY),
+                    ("efwd", rnd, ANY, ANY, ANY),
+                    ("gw1", rnd, ANY, ANY, ANY),
+                    ("gw2", rnd, ANY, ANY, ANY), ("dy", rnd)]:
+            ts.delete(pat)
+        ts.delete(("done", ANY, ANY, rnd, ANY, ANY, ANY, ANY, ANY))

@@ -1,40 +1,28 @@
-"""ACAN-over-JAX: the paper's runtime orchestrating *real* JAX training.
+"""ACAN-over-JAX — a thin entry point since PR 3.
 
-Data-parallel SGD where every microbatch-gradient is an ACAN task flowing
-through the Tuple Space:
+The pre-PR-3 runner re-implemented its own barrier/timeout/commit loop
+next to the Manager's. It is now a wrapper that runs
+:class:`~repro.programs.jax_sgd.JAXSGDProgram` on the *generic*
+Manager/Handler plane: the pouch barrier, GSS deadline adaptation,
+straggler re-issue, cursor checkpointing, and the §5.4 exactly-once
+commit all come from :mod:`repro.core.manager` — one fault-tolerant
+control plane for every workload.
 
-- the Manager publishes ``("gtask", step, micro)`` descriptors (a pouch),
-  blocks on a ``wait_count`` done-counter barrier over the step's
-  ``("gdone", step, *)`` marks with the adaptive timeout as the deadline,
-  re-issues stragglers;
-- Handler threads ``get()`` tasks, compute ``grad(loss)`` with a jitted
-  step on the *deterministic* microbatch ``batch_at(step·M + micro)`` and
-  ``put`` the gradient tree back keyed by content — duplicate execution
-  rewrites identical values (bitwise: same jit, same data, same params);
-- the Manager combines exactly one gradient per micro key, applies the
-  update, and commits the new param version through the §5.4 sliding
-  window. Handlers read params by version — a handler that crashed
-  mid-task never corrupts anything; its task simply re-appears.
-
-This is the bridge between ``core/`` (the paper, linear layers) and the
-arch zoo: any :class:`~repro.models.model.ModelConfig` trains under it.
+This is the bridge between ``core/`` (the paper) and the arch zoo: any
+:class:`~repro.models.model.ModelConfig` trains under it.
 """
 
 from __future__ import annotations
 
 import threading
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.conflict import CommitWindow
 from repro.core.gss import TimeoutController
-from repro.core.space import ANY, TSTimeout, TupleSpace
-from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.core.handler import Handler, SpeedBox
+from repro.core.manager import Manager, ManagerConfig
+from repro.core.space import ANY, TupleSpace
 from repro.models import model as M
+from repro.programs.jax_sgd import JAXSGDProgram
 
 
 @dataclass
@@ -65,107 +53,44 @@ class ACANStepRunner:
         self.cfg = cfg
         self.tcfg = tcfg
         self.ts = TupleSpace(backend=tcfg.ts_backend)
-        self.window = CommitWindow()
-        self.controller = TimeoutController(timeout=tcfg.timeout,
-                                            max_timeout=60.0)
-        self.pipe = TokenPipeline(PipelineConfig(
-            vocab=cfg.vocab, batch=tcfg.micro_batch, seq=tcfg.seq,
-            seed=tcfg.seed, mode=tcfg.data_mode,
-            n_codebooks=cfg.n_codebooks if cfg.frontend == "codebooks" else 0,
-            embed_dim=cfg.d_model if cfg.frontend == "embeds" else 0))
-        self.stop = threading.Event()
-        self.reissues = 0
-        self.crashes = 0
-        self._crash_rng = np.random.default_rng(tcfg.seed + 7)
-
-        def loss_fn(params, batch):
-            return M.train_loss(params, cfg, batch)[0]
-
-        self._grad_fn = jax.jit(jax.value_and_grad(loss_fn))
-
-    # ---------------------------------------------------------------- parts
-    def _handler(self, name: str) -> None:
-        while not self.stop.is_set():
-            try:
-                # Blocking take; the timeout only bounds stop-event
-                # responsiveness (gradient tasks are heavy, so batch=1).
-                key, _ = self.ts.get(("gtask", ANY, ANY), timeout=0.2)
-            except TSTimeout:
-                continue
-            _, step, micro = key
-            if self._crash_rng.random() < self.tcfg.handler_crash_prob:
-                self.crashes += 1       # dies holding the task → re-issue
-                continue
-            hit = self.ts.try_read(("params", ANY))
-            if hit is None:
-                continue
-            params = hit[1]
-            batch = {k: jnp.asarray(v) for k, v in
-                     self.pipe.batch_at(step * self.tcfg.n_micro + micro).items()}
-            loss, grads = self._grad_fn(params, batch)
-            self.ts.put(("gpart", step, micro),
-                        (float(loss), jax.device_get(grads)))
-            self.ts.put(("gdone", step, micro), name)
-
-    def _combine_and_update(self, params, step: int):
-        parts = []
-        for micro in range(self.tcfg.n_micro):
-            hit = self.ts.try_read(("gpart", step, micro))
-            parts.append(hit[1])
-        mean_loss = float(np.mean([p[0] for p in parts]))
-        grads = jax.tree.map(
-            lambda *gs: np.mean(np.stack(gs), axis=0), *[p[1] for p in parts])
-        new_params = jax.tree.map(
-            lambda p, g: (p - self.tcfg.lr * g).astype(p.dtype), params, grads)
-        return new_params, mean_loss
+        self.program = JAXSGDProgram(
+            cfg, steps=tcfg.steps, n_micro=tcfg.n_micro,
+            micro_batch=tcfg.micro_batch, seq=tcfg.seq, lr=tcfg.lr,
+            handler_crash_prob=tcfg.handler_crash_prob,
+            data_mode=tcfg.data_mode, seed=tcfg.seed)
 
     # ------------------------------------------------------------------ run
     def run(self) -> ACANTrainResult:
         tcfg = self.tcfg
-        params = M.init_params(self.cfg, jax.random.PRNGKey(tcfg.seed))
-        self.ts.put(("params", 0), params)
-        self.ts.put(("pver",), 0)
-
-        threads = [threading.Thread(target=self._handler, args=(f"h{i}",),
-                                    daemon=True)
-                   for i in range(tcfg.n_handlers)]
+        stop = threading.Event()
+        mgr = Manager(
+            ts=self.ts, program=self.program,
+            cfg=ManagerConfig(task_cap=float("inf"),
+                              pouch_size=max(tcfg.n_micro, 1),
+                              initial_timeout=tcfg.timeout),
+            stop_event=stop)
+        mgr.controller = TimeoutController(timeout=tcfg.timeout,
+                                           max_timeout=60.0)
+        # batch_size=1: gradient tasks are heavy, so microbatches must
+        # spread across handlers instead of draining into one batch.
+        handlers = [Handler(ts=self.ts, name=f"h{i}", speed=SpeedBox(1.0),
+                            capacity=float("inf"), time_scale=0.0,
+                            batch_size=1, registry=self.program.registry,
+                            stop_event=stop)
+                    for i in range(tcfg.n_handlers)]
+        threads = [threading.Thread(target=h.run, daemon=True)
+                   for h in handlers]
         for t in threads:
             t.start()
-
-        losses = []
-        for step in range(tcfg.steps):
-            pending = set(range(tcfg.n_micro))
-            while pending:
-                for micro in sorted(pending):
-                    self.ts.put(("gtask", step, micro), "issued")
-                # Done-counter barrier: block until every microbatch of
-                # this step has a gdone mark, with the adaptive timeout as
-                # the deadline (no 10 ms polling).
-                t0 = time.monotonic()
-                try:
-                    self.ts.wait_count(("gdone", step, ANY), tcfg.n_micro,
-                                       timeout=self.controller.timeout)
-                except TSTimeout:
-                    pass
-                elapsed = time.monotonic() - t0
-                done = {k[2] for k in self.ts.keys(("gdone", step, ANY))}
-                pending = set(range(tcfg.n_micro)) - done
-                done_frac = 1 - len(pending) / tcfg.n_micro
-                self.controller.update(not pending, elapsed, done_frac)
-                if pending:
-                    self.reissues += len(pending)
-                    self.ts.delete(("gtask", ANY, ANY))   # sweep untaken
-            hit = self.ts.try_read(("params", step))
-            params, loss = self._combine_and_update(hit[1], step)
-            if self.window.commit(0, step):               # §5.4 exactly-once
-                self.ts.put(("params", step + 1), params)
-                self.ts.delete(("params", step))
-                self.ts.delete(("gpart", step, ANY))
-                self.ts.delete(("gdone", step, ANY))
-            losses.append(loss)
-        self.stop.set()
+        try:
+            mgr.run()
+        finally:
+            stop.set()
         for t in threads:
             t.join(timeout=1.0)
-        return ACANTrainResult(losses=losses, reissues=self.reissues,
-                               crashes=self.crashes,
-                               param_versions=self.window.committed_step[0] + 1)
+        losses = [self.ts.try_read(k)[1]
+                  for k in sorted(self.ts.keys(("losshist", ANY)))]
+        return ACANTrainResult(
+            losses=losses, reissues=mgr.reissued,
+            crashes=self.program.crashes,
+            param_versions=mgr.window.committed_step.get(0, -1) + 1)

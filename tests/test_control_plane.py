@@ -1,6 +1,7 @@
-"""The event-driven control plane (PR 2): blocking pouch barriers with
-crash/resume semantics, batched vectorized task execution, the Handler
-"store" livelock guard, TS garbage caps, and poll/event equivalence."""
+"""The event-driven control plane (PR 2) on the program-agnostic
+scheduler (PR 3): blocking pouch barriers with crash/resume semantics,
+batched vectorized task execution, the Handler "store" livelock guard,
+TS garbage caps, and poll/event equivalence."""
 
 import threading
 import time
@@ -9,11 +10,12 @@ import numpy as np
 import pytest
 
 from repro.core import (ACANCloud, CloudConfig, FaultPlan, LayerSpec,
-                        TupleSpace, make_teacher_data)
+                        MLPProgram, TupleSpace, make_teacher_data, partition,
+                        prototype_tasks)
 from repro.core.executor import PreconditionUnmet, TaskExecutor
 from repro.core.handler import Handler, SpeedBox
 from repro.core.manager import Manager, ManagerConfig, ManagerCrash
-from repro.core.tasks import TaskDesc, TaskKind, partition, prototype_tasks
+from repro.core.tasks import TaskDesc
 from repro.core.space import ANY
 
 
@@ -30,11 +32,9 @@ def test_manager_crash_inside_blocking_barrier_resumes_from_cursor():
     for i in range(n_samples):
         ts.put(("x", i), X[i])
         ts.put(("label", i), Y[i])
-    cfg = ManagerConfig(layers=layers, epochs=1, n_samples=n_samples,
-                        task_cap=16.0, pouch_size=50, lr=0.05,
-                        initial_timeout=30.0)
-    mgr = Manager(ts=ts, cfg=cfg)
-    mgr.controller.timeout = 30.0
+    program = MLPProgram(layers, epochs=1, n_samples=n_samples, seed=0)
+    cfg = ManagerConfig(task_cap=16.0, pouch_size=50, initial_timeout=30.0)
+    mgr = Manager(ts=ts, program=program, cfg=cfg)
     outcome = []
 
     def body():
@@ -56,12 +56,12 @@ def test_manager_crash_inside_blocking_barrier_resumes_from_cursor():
     assert crash_latency < 1.0                # not the 30 s GSS deadline
     cursor = ts.try_read(("mstate", "cursor"))
     assert cursor is not None
-    assert (cursor[1]["epoch"], cursor[1]["sample"]) == (0, 0)
+    assert (cursor[1]["round"], cursor[1]["stage_idx"]) == (0, 0)
 
     # Revival: a fresh Manager + one handler resume from the cursor and
     # the done marks already in TS; every sample completes exactly once.
     stop = threading.Event()
-    mgr2 = Manager(ts=ts, cfg=cfg, stop_event=stop)
+    mgr2 = Manager(ts=ts, program=program, cfg=cfg, stop_event=stop)
     handler = Handler(ts=ts, name="h0", speed=SpeedBox(1.0), capacity=16.0,
                       lr=0.05, time_scale=1e-6, stop_event=stop)
     threads = [threading.Thread(target=mgr2.run, daemon=True),
@@ -83,11 +83,11 @@ def test_store_livelock_all_handlers_under_capacity():
     at backoff cadence while small tasks drain normally."""
     ts = TupleSpace(backend="sharded")
     ts.put(("pre", 0, 0), np.zeros(8, dtype=np.float32))
-    big = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 32, 0, 32)   # cost 1024
+    big = TaskDesc("forward", 0, 0, 0, 0, 32, 0, 32)          # cost 1024
     ts.put(("task", "big"), big.to_wire())
     n_small = 8
     for j in range(n_small):                                  # cost 1 each
-        t = TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, j, j + 1)
+        t = TaskDesc("activation", 0, 0, 0, 0, 0, j, j + 1)
         ts.put(("task", f"s{j}"), t.to_wire())
     stop = threading.Event()
     handlers = [Handler(ts=ts, name=f"h{i}", speed=SpeedBox(1.0),
@@ -106,6 +106,27 @@ def test_store_livelock_all_handlers_under_capacity():
     # Bounded by the backoff cadence (~0.5 s / 0.02 s per handler, plus
     # slack) — the untagged seed loop spun ~1000 stores/s here.
     assert sum(h.tasks_stored for h in handlers) < 150
+
+
+def test_unknown_op_is_stored_not_fatal():
+    """A task whose op is not in this handler's registry is a capability
+    miss: the handler stores it back (for a specialised peer) instead of
+    dying — a heterogeneous fleet keeps draining what it understands."""
+    ts = TupleSpace()
+    ts.put(("task", "alien"), TaskDesc("warpdrive", 0, 0, 0).to_wire())
+    ts.put(("pre", 0, 0), np.zeros(4, dtype=np.float32))
+    ts.put(("task", "ok"), TaskDesc("activation", 0, 0, 0, 0, 0, 0, 4).to_wire())
+    stop = threading.Event()
+    h = Handler(ts=ts, name="h0", speed=SpeedBox(1.0), capacity=256.0,
+                time_scale=1e-9, stop_event=stop)
+    th = threading.Thread(target=h.run, daemon=True)
+    th.start()
+    time.sleep(0.3)
+    stop.set()
+    th.join(timeout=2.0)
+    assert h.tasks_done == 1
+    assert h.tasks_stored >= 1
+    assert ts.count(("task", ANY)) == 1       # the alien task circulates
 
 
 # ------------------------------------------------- poll/event equivalence
@@ -135,7 +156,7 @@ def test_history_caps_and_per_sample_loss_cleanup():
     cloud = ACANCloud(cfg)
     cloud.run()
     ts = cloud.ts
-    # per-sample loss tuples are deleted by _cleanup_sample
+    # per-sample loss tuples are deleted by the program's finish_round
     assert ts.count(("loss", ANY, ANY)) == 0
     # history tuples are capped at history_limit, keeping the newest
     assert ts.count(("thist", ANY, ANY)) <= 6
@@ -144,7 +165,7 @@ def test_history_caps_and_per_sample_loss_cleanup():
 
 
 # --------------------------------------------------- batched execution
-def _seeded_space(layers, lr_unused=None):
+def _seeded_space(layers):
     """A TS holding every input any stage of sample 0 could need."""
     rng = np.random.default_rng(7)
     ts = TupleSpace()
@@ -170,7 +191,7 @@ def _seeded_space(layers, lr_unused=None):
 
 def test_execute_batch_matches_sequential_for_every_stage():
     """Vectorized group execution must write the same tuples as per-task
-    execution for every task kind (forward/activation/loss/backward/
+    execution for every MLP op (forward/activation/loss/backward/
     update), including non-uniform edge-tile shapes."""
     layers = [LayerSpec(16, 16), LayerSpec(16, 1)]
     for protos in prototype_tasks(layers, 0, 0).values():
@@ -186,11 +207,11 @@ def test_execute_batch_matches_sequential_for_every_stage():
                                        rtol=1e-6, atol=1e-7, err_msg=str(k))
 
 
-def test_execute_batch_heterogeneous_falls_back_sequential():
+def test_execute_batch_heterogeneous_splits_into_groups():
     layers = [LayerSpec(8, 8), LayerSpec(8, 1)]
     ts = _seeded_space(layers)
-    mixed = [TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 8, 0, 8),
-             TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, 0, 8)]
+    mixed = [TaskDesc("forward", 0, 0, 0, 0, 8, 0, 8),
+             TaskDesc("activation", 0, 0, 0, 0, 0, 0, 8)]
     TaskExecutor(ts, lr=0.05).execute_batch(mixed)
     assert ts.count(("fpart", 0, 0, 0, 8, 0, 8)) == 1
     assert ts.count(("actpart", 0, 0, 0, 8)) == 1
@@ -200,8 +221,7 @@ def test_execute_batch_unmet_precondition_writes_nothing():
     """A group whose inputs are missing is discarded atomically — no
     partial writes land in TS."""
     ts = TupleSpace()
-    tasks = partition(TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 16, 0, 16),
-                      32.0)
+    tasks = partition(TaskDesc("forward", 0, 0, 0, 0, 16, 0, 16), 32.0)
     with pytest.raises(PreconditionUnmet):
         TaskExecutor(ts).execute_batch(tasks)
     assert ts.count(("fpart", ANY, ANY, ANY, ANY, ANY, ANY)) == 0

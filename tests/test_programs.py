@@ -1,0 +1,197 @@
+"""The unified WorkloadProgram API (PR 3): the op registry, program-
+agnostic scheduling, and the acceptance criteria — the paper MLP, the
+JAX-SGD port, and the non-regular MoE routing program all train through
+the *same* Manager/Handler plane, and the MoE program survives
+manager+handler crashes with revival."""
+
+import numpy as np
+import pytest
+
+from repro.core import (ACANCloud, CloudConfig, FaultPlan, GLOBAL_OPS,
+                        LayerSpec, MLPProgram, MoERoutingProgram, OpRegistry,
+                        OpSpec, TaskDesc, TupleSpace, UnknownOp)
+from repro.core.manager import Manager, ManagerConfig
+
+
+# ------------------------------------------------------------ op registry
+def test_registry_parent_chain_and_shadowing():
+    child = OpRegistry(parent=GLOBAL_OPS)
+    # parent ops are visible through the chain
+    assert child.resolve("forward") is GLOBAL_OPS.resolve("forward")
+    # a child registration shadows without touching the parent
+    spec = OpSpec("forward", lambda ctx, ts: [], lambda t: 42.0)
+    child.register(spec)
+    assert child.resolve("forward") is spec
+    assert GLOBAL_OPS.resolve("forward") is not spec
+    # duplicate registration in the same registry is rejected
+    with pytest.raises(ValueError):
+        child.register(spec)
+    with pytest.raises(UnknownOp):
+        child.resolve("definitely-not-registered")
+
+
+def test_partition_respects_custom_cost_and_split():
+    reg = OpRegistry(parent=GLOBAL_OPS)
+    reg.register(OpSpec("atomic", lambda ctx, ts: [],
+                        cost_fn=lambda t: 1e9, split_fn=lambda t: [t]))
+    t = TaskDesc("atomic", 0, 0, 0)
+    assert reg.partition(t, 256.0) == [t]    # indivisible stays whole
+
+
+# ----------------------------------------------- programs on the one plane
+def _moe_cfg(**kw):
+    base = dict(n_handlers=3, task_cap=256.0, pouch_size=64,
+                time_scale=1e-6, initial_timeout=0.1,
+                fault_plan=FaultPlan(interval=1e9), wall_limit=120.0)
+    base.update(kw)
+    return CloudConfig(**base)
+
+
+def test_moe_program_trains_decreasing_loss():
+    prog = MoERoutingProgram(steps=12, seed=0)
+    res = ACANCloud(_moe_cfg(), program=prog).run()
+    losses = [l for _, l in res.loss_history]
+    assert len(losses) == 12
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    assert res.ledger_ok
+    assert res.manager_revivals == 0
+
+
+def test_moe_program_survives_manager_and_handler_crashes():
+    """Acceptance: the non-regular program completes under an exp3-style
+    plan (Manager AND all Handlers crash each interval with p=1.0) via
+    daemon revival, and still learns."""
+    prog = MoERoutingProgram(steps=12, seed=0)
+    res = ACANCloud(_moe_cfg(
+        fault_plan=FaultPlan(interval=0.1, speed_levels=(1.0, 5.0, 10.0),
+                             p_speed_change=1.0, p_handler_crash=1.0,
+                             p_manager_crash=1.0, seed=1)),
+        program=prog).run()
+    losses = [l for _, l in res.loss_history]
+    assert len(losses) == 12              # completed despite the crashes
+    assert np.mean(losses[-4:]) < np.mean(losses[:4])
+    assert res.manager_revivals >= 1
+    assert res.handler_revivals >= 1
+    assert res.ledger_ok
+
+
+def test_moe_task_sizes_are_irregular():
+    """The expert stage's task costs are data-dependent: after routing, a
+    hot expert's prototype task must cost more than a cold expert's —
+    the non-regular regime the GSS timeout has to absorb."""
+    prog = MoERoutingProgram(steps=2, seed=0)
+    expert_tasks = prog.probe_expert_tasks()
+    costs = [GLOBAL_OPS.cost(t) for t in expert_tasks]
+    assert len(costs) >= 2
+    assert len(set(costs)) > 1, costs     # irregular — not uniform
+    # every routed slot appears exactly once across the expert tasks
+    total_slots = sum(t.n for t in expert_tasks)
+    assert total_slots == prog.B * prog.k
+
+
+def test_moe_dispatch_is_revival_deterministic():
+    """stage_tasks is a pure function of TS state: a 'revived' Manager
+    (fresh program call on the same TS) derives identical expert tasks."""
+    prog = MoERoutingProgram(steps=2, seed=3)
+    ts = TupleSpace()
+    prog.setup(ts)
+    mgr = Manager(ts=ts, program=prog, cfg=ManagerConfig(task_cap=1e9))
+    from repro.core.executor import TaskExecutor
+    TaskExecutor(ts).execute_batch(prog.stage_tasks(ts, 0, "route"))
+    prog.combine(ts, 0, "route", mgr)
+    first = prog.stage_tasks(ts, 0, "expert")
+    prog2 = MoERoutingProgram(steps=2, seed=3)     # the revived instance
+    prog2.combine(ts, 0, "route", mgr)             # idempotent re-run
+    assert prog2.stage_tasks(ts, 0, "expert") == first
+
+
+def test_mlp_program_equals_legacy_cloud_path():
+    """CloudConfig without an explicit program builds the MLP program —
+    and an explicitly-passed MLPProgram is bit-identical to it."""
+    base = dict(layers=[LayerSpec(16, 16), LayerSpec(16, 1)], n_handlers=3,
+                epochs=1, n_samples=6, task_cap=32.0, pouch_size=64,
+                lr=0.05, time_scale=1e-6, initial_timeout=0.1,
+                fault_plan=FaultPlan(interval=1e9), seed=0, wall_limit=60.0)
+    res_default = ACANCloud(CloudConfig(**base)).run()
+    cfg = CloudConfig(**base)
+    res_explicit = ACANCloud(cfg, program=MLPProgram(
+        cfg.layers, epochs=1, n_samples=6, seed=0)).run()
+    ld = [l for _, l in res_default.loss_history]
+    le = [l for _, l in res_explicit.loss_history]
+    np.testing.assert_allclose(ld, le, rtol=1e-6, atol=1e-8)
+
+
+def test_moe_route_combine_resumes_after_partial_crash():
+    """Crash-recovery contract: the route combine's idempotency guard is
+    its LAST-written tuple (expert 0's dispatch), so a Manager that died
+    mid-combine leaves the guard unset and the revived combine redoes
+    everything instead of wedging stage_tasks('expert')."""
+    from repro.core.executor import TaskExecutor
+    prog = MoERoutingProgram(steps=1, seed=0)
+    ts = TupleSpace()
+    prog.setup(ts)
+    TaskExecutor(ts).execute_batch(prog.stage_tasks(ts, 0, "route"))
+    prog._combine_route(ts, 0)
+    # Simulate a crash mid-combine: the guard tuple is missing, the rest
+    # of the dispatch lists landed.
+    ts.delete(("disp", 0, 0))
+    prog._combine_route(ts, 0)          # the revived Manager's re-run
+    for e in range(prog.E):
+        assert ts.try_read(("disp", 0, e)) is not None
+    assert len(prog.stage_tasks(ts, 0, "expert")) >= 1
+
+
+def test_mlp_backward_combine_resumes_after_partial_crash():
+    """Same contract for the MLP backward combine: the guard is dy (the
+    last-written tuple), so a crash between the gW and gB/dy puts does
+    not make the revived Manager skip the rest of the combine."""
+    layers = [LayerSpec(8, 8), LayerSpec(8, 1)]
+    prog = MLPProgram(layers, epochs=1, n_samples=1, seed=0)
+    rng = np.random.default_rng(5)
+    ts = TupleSpace()
+    l, d = 1, 0
+    ts.put(("gw", l, d, 0, 1, 0, 8), rng.standard_normal((1, 8)).astype(np.float32))
+    ts.put(("gb", l, d, 0, 1), rng.standard_normal(1).astype(np.float32))
+    ts.put(("bpart", l, d, 0, 8, 0, 1), rng.standard_normal(8).astype(np.float32))
+    ts.put(("act", 0, d), rng.standard_normal(8).astype(np.float32))
+    prog._combine_backward(ts, l, d, layers[l])
+    full_gB = ts.try_read(("gB", l, d))[1]
+    # Simulate a crash after the gW put but before gB/dy landed.
+    ts.delete(("gB", l, d))
+    ts.delete(("dy", 0, d))
+    prog._combine_backward(ts, l, d, layers[l])   # revived re-run
+    np.testing.assert_array_equal(ts.try_read(("gB", l, d))[1], full_gB)
+    assert ts.try_read(("dy", 0, d)) is not None
+
+
+def test_reissued_counts_only_straggler_republications():
+    """A stage wider than pouch_size publishes its later pouches of
+    first-time tasks — those must NOT count as re-issues (only a task
+    published a second time after a timeout does)."""
+    import threading
+    from repro.core.handler import Handler, SpeedBox
+    ts = TupleSpace()
+    prog = MLPProgram([LayerSpec(16, 16), LayerSpec(16, 1)], epochs=1,
+                      n_samples=2, seed=0)
+    # task_cap 16 -> fwd_0 partitions into 16 tasks; pouch_size 4 forces
+    # four first-time pouches per such stage.
+    mgr = Manager(ts=ts, program=prog,
+                  cfg=ManagerConfig(task_cap=16.0, pouch_size=4,
+                                    initial_timeout=10.0))
+    stop = threading.Event()
+    h = Handler(ts=ts, name="h0", speed=SpeedBox(1.0), capacity=16.0,
+                lr=0.01, time_scale=1e-9, stop_event=stop)
+    th = threading.Thread(target=h.run, daemon=True)
+    th.start()
+    mgr.run()
+    stop.set()
+    th.join(timeout=2.0)
+    assert ts.try_read(("mstate", "finished")) is not None
+    assert mgr.reissued == 0, mgr.reissued
+
+
+def test_moe_respects_history_limit():
+    prog = MoERoutingProgram(steps=10, seed=0)
+    res = ACANCloud(_moe_cfg(history_limit=4), program=prog).run()
+    steps = [s for s, _ in res.loss_history]
+    assert steps == list(range(6, 10))    # trimmed to the newest 4

@@ -8,8 +8,7 @@ import numpy as np
 from repro.core import (ACANCloud, CloudConfig, FaultPlan, LayerSpec,
                         TupleSpace, make_teacher_data)
 from repro.core.executor import TaskExecutor, activation
-from repro.core.manager import Manager, ManagerConfig
-from repro.core.tasks import TaskDesc, TaskKind, partition
+from repro.core.tasks import TaskDesc
 
 
 def _numpy_reference_training(layers, X, Y, lr, epochs):
@@ -73,7 +72,7 @@ def test_single_task_executor_forward():
     ts.put(("w", 0), W)
     ts.put(("x", 0), x)
     ex = TaskExecutor(ts)
-    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 4, 2, 6)
+    t = TaskDesc("forward", 0, 0, 0, 0, 4, 2, 6)
     ex.execute(t)
     _, part = ts.read(("fpart", 0, 0, 2, 6, 0, 4))
     np.testing.assert_allclose(part, W[2:6, :4] @ x[:4], rtol=1e-6)
@@ -87,7 +86,7 @@ def test_duplicate_execution_is_idempotent():
     ts.put(("w", 0), rng.standard_normal((8, 8)).astype(np.float32))
     ts.put(("x", 0), rng.standard_normal(8).astype(np.float32))
     ex = TaskExecutor(ts)
-    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 8, 0, 8)
+    t = TaskDesc("forward", 0, 0, 0, 0, 8, 0, 8)
     ex.execute(t)
     _, first = ts.read(("fpart", 0, 0, 0, 8, 0, 8))
     ex.execute(t)                       # duplicate (late straggler)

@@ -1,13 +1,20 @@
-"""Task partitioning invariants (paper §5.2) — property-based.
+"""Task partitioning invariants (paper §5.2) — property-based, now
+running through the PR-3 op registry (cost models and split rules are
+per-op, looked up by the open op *name* instead of a closed enum).
 
 The partition must (a) respect the size cap, (b) exactly tile the original
 task's (input × output) rectangle with disjoint pieces, (c) follow the
 4-way / 2-way split rules, (d) round-trip the declarative wire format."""
 
+import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import LayerSpec, TaskDesc, TaskKind, partition, prototype_tasks
-from repro.core.tasks import stage_order
+from repro.core import (GLOBAL_OPS, LayerSpec, TaskDesc, UnknownOp,
+                        partition, prototype_tasks)
+from repro.programs.mlp import (ACTIVATION, BACKWARD, FORWARD, LOSS, UPDATE,
+                                stage_order)
+
+MLP_OPS = [FORWARD, ACTIVATION, LOSS, BACKWARD, UPDATE]
 
 dims = st.sampled_from([1, 2, 4, 8, 16, 32, 64, 128, 256])
 caps = st.sampled_from([16.0, 64.0, 256.0, 1024.0])
@@ -16,11 +23,11 @@ caps = st.sampled_from([16.0, 64.0, 256.0, 1024.0])
 @given(dims, dims, caps)
 @settings(max_examples=200, deadline=None)
 def test_forward_partition_tiles_exactly(m, n, cap):
-    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, m, 0, n)
+    t = TaskDesc(FORWARD, 0, 0, 0, 0, m, 0, n)
     pieces = partition(t, cap)
     # size cap respected whenever splitting is possible
     for p in pieces:
-        assert p.cost() <= cap or (p.m <= 1 and p.n <= 1)
+        assert GLOBAL_OPS.cost(p) <= cap or (p.m <= 1 and p.n <= 1)
     # exact disjoint cover of the m×n rectangle
     cells = set()
     for p in pieces:
@@ -34,7 +41,7 @@ def test_forward_partition_tiles_exactly(m, n, cap):
 @given(dims, caps)
 @settings(max_examples=100, deadline=None)
 def test_1d_partition_covers(n, cap):
-    t = TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, 0, n)
+    t = TaskDesc(ACTIVATION, 0, 0, 0, 0, 0, 0, n)
     pieces = partition(t, cap)
     covered = sorted((p.out_lo, p.out_hi) for p in pieces)
     cur = 0
@@ -45,30 +52,38 @@ def test_1d_partition_covers(n, cap):
 
 
 def test_forward_splits_four_way():
-    t = TaskDesc(TaskKind.FORWARD, 0, 0, 0, 0, 8, 0, 8)
-    kids = t.split()
+    t = TaskDesc(FORWARD, 0, 0, 0, 0, 8, 0, 8)
+    kids = GLOBAL_OPS.split(t)
     assert len(kids) == 4        # paper: "split into FOUR smaller tasks"
     assert {(k.in_lo, k.in_hi, k.out_lo, k.out_hi) for k in kids} == {
         (0, 4, 0, 4), (0, 4, 4, 8), (4, 8, 0, 4), (4, 8, 4, 8)}
 
 
 def test_update_splits_two_way():
-    t = TaskDesc(TaskKind.UPDATE, 0, 0, 0, 0, 8, 0, 8)
-    kids = t.split()
+    t = TaskDesc(UPDATE, 0, 0, 0, 0, 8, 0, 8)
+    kids = GLOBAL_OPS.split(t)
     assert len(kids) == 2        # "each updating m/2 parameters"
 
 
 def test_loss_costs_more_per_element():
-    loss = TaskDesc(TaskKind.LOSS, 0, 0, 0, 0, 0, 0, 16)
-    act = TaskDesc(TaskKind.ACTIVATION, 0, 0, 0, 0, 0, 0, 16)
-    assert loss.cost() > act.cost()   # §5.2 "proportionally larger size"
+    loss = TaskDesc(LOSS, 0, 0, 0, 0, 0, 0, 16)
+    act = TaskDesc(ACTIVATION, 0, 0, 0, 0, 0, 0, 16)
+    # §5.2 "proportionally larger size"
+    assert GLOBAL_OPS.cost(loss) > GLOBAL_OPS.cost(act)
 
 
-@given(st.sampled_from(list(TaskKind)), dims, dims)
+def test_unregistered_op_raises():
+    t = TaskDesc("nosuchop", 0, 0, 0)
+    with pytest.raises(UnknownOp):
+        GLOBAL_OPS.cost(t)
+
+
+@given(st.sampled_from(MLP_OPS), dims, dims)
 @settings(max_examples=50, deadline=None)
-def test_wire_roundtrip(kind, m, n):
-    t = TaskDesc(kind, 3, 7, 11, 0, m, 0, n, task_id="x1")
+def test_wire_roundtrip(op, m, n):
+    t = TaskDesc(op, 3, 7, 11, 0, m, 0, n, task_id="x1")
     assert TaskDesc.from_wire(t.to_wire()) == t
+    assert isinstance(TaskDesc.from_wire(t.to_wire()).op, str)
 
 
 def test_paper_model_task_census():
