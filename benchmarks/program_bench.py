@@ -14,12 +14,18 @@ wallclock, TS traffic, pouch rounds, and the loss trajectory ends:
                    p=1.0, speeds 1:5:10 re-drawn) — the non-regular
                    robustness gate;
 - ``jax``        — the JAX-SGD program (reduced smollm) with 25%
-                   per-task handler crashes.
+                   per-task handler crashes;
+- ``multi``      — MLP + MoE **co-resident on one tuple space** (each in
+                   its own namespace) under a shared handler fleet and an
+                   exp3-style p=1.0 fault plan — the multi-tenant gate.
 
 Acceptance (exit code): every selected program's loss must decrease,
-``moe`` must exhibit irregular (non-uniform) expert task costs, and
+``moe`` must exhibit irregular (non-uniform) expert task costs,
 ``moe_faults`` must complete all rounds with ≥ 1 manager revival and
-≥ 1 handler revival.
+≥ 1 handler revival, and ``multi`` must complete both tenants with ≥ 1
+manager revival, ≥ 1 handler revival, and **zero cross-namespace task
+deletions** (no widened-subject deletes, nothing removed under an
+unscoped task subject — InstrumentedBackend delete accounting).
 """
 
 from __future__ import annotations
@@ -35,9 +41,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
 from repro.core import (ACANCloud, CloudConfig, FaultPlan, GLOBAL_OPS,  # noqa: E402
-                        LayerSpec, MoERoutingProgram)
+                        LayerSpec, MLPProgram, MoERoutingProgram)
 
-DEFAULT_PROGRAMS = "mlp,moe,moe_faults,jax"
+DEFAULT_PROGRAMS = "mlp,moe,moe_faults,jax,multi"
 
 
 def _ts_ops(res) -> int:
@@ -109,6 +115,61 @@ def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
     return out
 
 
+def run_multi(smoke: bool, backend: str | None) -> dict:
+    """The multi-tenant co-residency gate: MLP + MoE on ONE space, one
+    shared handler fleet, exp3-style faults — both must complete with
+    revivals and zero deletes capable of crossing a namespace."""
+    # 2 epochs like run_mlp: SGD bs=1 is noisy — a single epoch over few
+    # samples does not give a stable first-half/second-half comparison.
+    epochs, n_samples = (2, 8) if smoke else (2, 24)
+    moe_steps = 10 if smoke else 20
+    inner = backend or os.environ.get("REPRO_TS_BACKEND", "") or "local"
+    cfg = CloudConfig(layers=[LayerSpec(32, 32), LayerSpec(32, 1)],
+                      n_handlers=4, epochs=epochs, n_samples=n_samples,
+                      task_cap=256.0, pouch_size=64, lr=0.01,
+                      time_scale=2e-5, initial_timeout=0.1,
+                      fault_plan=FaultPlan(
+                          interval=0.1, speed_levels=(1.0, 5.0, 10.0),
+                          p_speed_change=1.0, p_handler_crash=1.0,
+                          p_manager_crash=1.0, seed=1),
+                      wall_limit=240.0, ts_backend=f"instrumented:{inner}")
+    programs = [MLPProgram(cfg.layers, epochs=epochs, n_samples=n_samples,
+                           seed=0),
+                MoERoutingProgram(steps=moe_steps, seed=0)]
+    cloud = ACANCloud(cfg, programs=programs)
+    res = cloud.run()
+    mlp = res.per_program["mlp"]
+    moe = res.per_program["moe_routing"]
+    mlp_losses = [l for _, l in mlp.loss_history]
+    moe_losses = [l for _, l in moe.loss_history]
+    completed = (len(mlp_losses) == epochs * n_samples
+                 and len(moe_losses) == moe_steps)
+    # zero cross-namespace task deletions: no widened-subject deletes and
+    # nothing removed under an unscoped "task" subject.
+    dm = cloud.ts.backend.delete_metrics()
+    cross_free = (cloud.ts.stats()["instr_widened_deletes"] == 0
+                  and dm.get("task", {"removed": 0})["removed"] == 0)
+    half = len(mlp_losses) // 2
+    decreased = bool(
+        mlp_losses and moe_losses and len(moe_losses) >= 6
+        and np.mean(mlp_losses[half:]) < np.mean(mlp_losses[:half])
+        and np.mean(moe_losses[-3:]) < np.mean(moe_losses[:3]))
+    return {"name": "program_multi",
+            "wall": res.wallclock,
+            "ts_ops": res.ts_stats.get("puts", 0)
+            + res.ts_stats.get("takes", 0) + res.ts_stats.get("reads", 0),
+            "pouches": mlp.pouches + moe.pouches,
+            "first": float(np.mean(mlp_losses[:half])) if half else 0.0,
+            "last": float(np.mean(mlp_losses[half:])) if half else 0.0,
+            "completed": completed,
+            "mgr_revive": res.manager_revivals,
+            "hdl_revive": res.handler_revivals,
+            "cross_ns_free": cross_free,
+            "ok": (completed and decreased and cross_free
+                   and res.manager_revivals >= 1
+                   and res.handler_revivals >= 1)}
+
+
 def run_jax(smoke: bool, backend: str | None) -> dict:
     from repro.configs import get_config
     from repro.ts_exec.step_runner import ACANStepRunner, ACANTrainConfig
@@ -141,6 +202,8 @@ def run_programs(programs: list[str], smoke: bool,
             out.append(run_moe(smoke, backend, faults=True))
         elif name == "jax":
             out.append(run_jax(smoke, backend))
+        elif name == "multi":
+            out.append(run_multi(smoke, backend))
         else:
             raise SystemExit(f"unknown program {name!r}")
     return out
@@ -149,7 +212,8 @@ def run_programs(programs: list[str], smoke: bool,
 def bench_rows(smoke: bool = True, backend: str | None = None,
                include_jax: bool = False) -> list[tuple[str, float, str]]:
     """CSV rows for the benchmarks/run.py harness."""
-    programs = ["mlp", "moe", "moe_faults"] + (["jax"] if include_jax else [])
+    programs = (["mlp", "moe", "moe_faults"]
+                + (["jax"] if include_jax else []) + ["multi"])
     rows = []
     for r in run_programs(programs, smoke, backend):
         derived = (f"loss {r['first']:.3f}->{r['last']:.3f} "
@@ -158,9 +222,11 @@ def bench_rows(smoke: bool = True, backend: str | None = None,
         if "cost_max" in r:
             derived += (f" cost_spread={r['cost_min']:.0f}"
                         f"..{r['cost_max']:.0f}")
-        if "mgr_revive" in r and r["name"].endswith("faults"):
+        if "mgr_revive" in r and r["name"].endswith(("faults", "multi")):
             derived += (f" mgr_revive={r['mgr_revive']} "
                         f"hdl_revive={r['hdl_revive']}")
+        if "cross_ns_free" in r:
+            derived += f" cross_ns_free={r['cross_ns_free']}"
         rows.append((r["name"], r["wall"] * 1e6, derived))
     return rows
 
@@ -187,7 +253,7 @@ def main() -> int:
               f"{r['first']:>11.3f} ->{r['last']:>7.3f}{str(r['ok']):>5}")
         extras = {k: r[k] for k in
                   ("cost_min", "cost_max", "mgr_revive", "hdl_revive",
-                   "crashes", "reissues") if k in r}
+                   "crashes", "reissues", "cross_ns_free") if k in r}
         if extras:
             print(f"{'':<22}{extras}")
     ok = all(r["ok"] for r in results)

@@ -55,14 +55,16 @@ def main() -> None:
                      f"pouches={row['pouches']} ts_ops={row['ts_ops']} "
                      f"mse={row['final_mse']}"))
 
-    # Control-plane scheduling rows (PR 2): poll vs event on the §6.1
-    # workload, including the ops-per-pouch gate ratio.
+    # Control-plane scheduling rows (PR 2/4): poll vs event on the §6.1
+    # workload (including the ops-per-pouch gate ratio) plus the adaptive
+    # pouch-size row against the fixed §6 baseline.
     from benchmarks import sched_bench as SB
     rows.extend(SB.bench_rows(smoke=not paper_scale))
 
-    # WorkloadProgram rows (PR 3): the paper MLP, the non-regular MoE
-    # routing program (with and without an exp3-style fault plan), and —
-    # at paper scale — the JAX-SGD program.
+    # WorkloadProgram rows (PR 3/4): the paper MLP, the non-regular MoE
+    # routing program (with and without an exp3-style fault plan), the
+    # MLP+MoE multi-tenant co-residency gate, and — at paper scale — the
+    # JAX-SGD program.
     from benchmarks import program_bench as PB
     rows.extend(PB.bench_rows(smoke=not paper_scale,
                               include_jax=paper_scale))

@@ -45,13 +45,13 @@ WALLCLOCK_SLACK = 1.15
 
 
 def run_mode(scheduling: str, backend: str, layers, epochs: int,
-             n_samples: int, seed: int) -> dict:
+             n_samples: int, seed: int, adaptive_pouch: bool = False) -> dict:
     cfg = CloudConfig(
         layers=layers, n_handlers=4, epochs=epochs, n_samples=n_samples,
         task_cap=256.0, pouch_size=100, lr=PAPER_LR, time_scale=2e-6,
         initial_timeout=0.25, fault_plan=FaultPlan(interval=1e9),
         seed=seed, wall_limit=600.0, scheduling=scheduling,
-        ts_backend=f"instrumented:{backend}")
+        ts_backend=f"instrumented:{backend}", adaptive_pouch=adaptive_pouch)
     cloud = ACANCloud(cfg)
     res = cloud.run()
     metrics = cloud.ts.backend.metrics()
@@ -88,6 +88,21 @@ def bench_rows(smoke: bool = True,
                  f"ops_per_pouch_ratio={ratio:.1f}x "
                  f"gate>={OPS_RATIO_FLOOR:.0f}x "
                  f"pass={ratio >= OPS_RATIO_FLOOR}"))
+    # Adaptive pouch sizing (PouchController in the Manager) vs the fixed
+    # §6 pouch_size=100 baseline, both in event mode: measured, not gated
+    # — adaptation pays off on wide stages/heterogeneous fleets, and the
+    # row keeps the wiring honest (it must complete the same trajectory).
+    fixed = results["event"]
+    adap = run_mode("event", backend, layers, epochs, samples, 0,
+                    adaptive_pouch=True)
+    loss_ok = (len(adap["losses"]) == len(fixed["losses"])
+               and np.allclose(adap["losses"], fixed["losses"],
+                               rtol=1e-3, atol=1e-5))
+    rows.append((f"sched_adaptive_pouch_{backend}", adap["wallclock"] * 1e6,
+                 f"ts_ops={adap['ops']} "
+                 f"ops_per_pouch={adap['ops_per_pouch']:.1f} "
+                 f"pouches={adap['pouches']} "
+                 f"(fixed: {fixed['pouches']}) loss_match={loss_ok}"))
     return rows
 
 
@@ -115,6 +130,8 @@ def main() -> int:
     for scheduling in ("poll", "event"):
         results[scheduling] = run_mode(scheduling, args.backend, layers,
                                        args.epochs, args.samples, args.seed)
+    adap = run_mode("event", args.backend, layers, args.epochs,
+                    args.samples, args.seed, adaptive_pouch=True)
 
     poll, event = results["poll"], results["event"]
     width = 18
@@ -130,17 +147,27 @@ def main() -> int:
         print(f"{label:<{width}}{p:>14,.1f}{e:>14,.1f}{ratio:>11.1f}x")
     print(f"\nper-op calls, poll : {poll['per_op']}")
     print(f"per-op calls, event: {event['per_op']}")
+    adap_loss_ok = (len(adap["losses"]) == len(event["losses"])
+                    and np.allclose(adap["losses"], event["losses"],
+                                    rtol=1e-3, atol=1e-5))
+    print(f"adaptive pouch (event): pouches={adap['pouches']} "
+          f"(fixed: {event['pouches']}), "
+          f"ops/pouch={adap['ops_per_pouch']:.1f} "
+          f"(fixed: {event['ops_per_pouch']:.1f}), "
+          f"wallclock={adap['wallclock']:.2f}s, "
+          f"loss_match={adap_loss_ok}")
 
     ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
     wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
     loss_ok = (len(poll["losses"]) == len(event["losses"])
                and np.allclose(poll["losses"], event["losses"],
                                rtol=1e-3, atol=1e-5))
-    ok = ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
+    ok = ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok and adap_loss_ok
     print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
           f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
           f"wallclock {'OK' if wall_ok else 'WORSE'}, "
-          f"loss trajectories {'match' if loss_ok else 'DIVERGE'} "
+          f"loss trajectories {'match' if loss_ok else 'DIVERGE'}, "
+          f"adaptive pouch {'matches' if adap_loss_ok else 'DIVERGES'} "
           f"-> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

@@ -2,17 +2,20 @@
 core contribution (Li et al., "Fault Tolerant Reconfigurable ML
 Multiprocessor", 2025)."""
 
-from repro.core.cloud import ACANCloud, CloudConfig, CloudResult
+from repro.core.cloud import (ACANCloud, CloudConfig, CloudResult,
+                              MultiCloudResult)
 from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.gss import PouchController, TimeoutController, gss_chunk
-from repro.core.handler import Handler, SpeedBox
+from repro.core.handler import Handler, HandlerTenant, SpeedBox
 from repro.core.ledger import Ledger
 from repro.core.manager import Manager, ManagerConfig
 from repro.core.program import (GLOBAL_OPS, OpRegistry, OpSpec, UnknownOp,
                                 WorkloadProgram, partition)
-from repro.core.space import (ANY, InstrumentedBackend, LocalBackend,
+from repro.core.space import (ANY, DEFAULT_NAMESPACE, InstrumentedBackend,
+                              LocalBackend, NsSubject, ScopedSpace,
                               ShardedBackend, SpaceBackend, TSTimeout,
-                              TupleSpace, make_backend, match)
+                              TupleSpace, as_scoped, key_namespace,
+                              make_backend, match, task_take_pattern)
 from repro.core.tasks import TaskDesc, content_key
 
 # Program symbols are re-exported lazily (PEP 562): repro.programs.*
@@ -34,12 +37,16 @@ def __getattr__(name: str):
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
-    "ACANCloud", "CloudConfig", "CloudResult", "make_teacher_data",
+    "ACANCloud", "CloudConfig", "CloudResult", "MultiCloudResult",
+    "make_teacher_data",
     "FaultPlan", "MonitorDaemon", "PouchController", "TimeoutController",
-    "gss_chunk", "Handler", "SpeedBox", "Ledger", "Manager", "ManagerConfig",
+    "gss_chunk", "Handler", "HandlerTenant", "SpeedBox", "Ledger",
+    "Manager", "ManagerConfig",
     "GLOBAL_OPS", "OpRegistry", "OpSpec", "UnknownOp", "WorkloadProgram",
     "partition", "LayerSpec", "MLPProgram", "MoERoutingProgram",
     "prototype_tasks", "stage_order", "TaskDesc", "content_key",
     "ANY", "TSTimeout", "TupleSpace", "match", "make_backend",
     "SpaceBackend", "LocalBackend", "ShardedBackend", "InstrumentedBackend",
+    "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",
+    "key_namespace", "task_take_pattern",
 ]

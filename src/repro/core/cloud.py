@@ -1,6 +1,6 @@
-"""ACANCloud — wires TS + Manager + Handlers + MonitorDaemon into one
-runnable "custom ACAN cloud" (paper §4, §6) and runs a
-:class:`~repro.core.program.WorkloadProgram` under it.
+"""ACANCloud — wires TS + Manager(s) + Handlers + MonitorDaemon into one
+runnable "custom ACAN cloud" (paper §4, §6) and runs one or several
+:class:`~repro.core.program.WorkloadProgram`\\ s under it.
 
 By default the cloud runs the paper's MLP workload
 (:class:`~repro.programs.mlp.MLPProgram` built from the CloudConfig
@@ -15,6 +15,23 @@ experiments::
 Any other program rides the same fault plane unchanged::
 
     cloud = ACANCloud(CloudConfig(...), program=MoERoutingProgram(...))
+
+**Multi-tenant mode** (PR 4): several programs co-resident on *one*
+tuple space, served by one shared, reconfigurable handler fleet::
+
+    cloud = ACANCloud(CloudConfig(...),
+                      programs=[MLPProgram(...), MoERoutingProgram(...)])
+    multi = cloud.run()              # MultiCloudResult
+    multi.per_program["mlp"]         # that program's CloudResult
+
+Each program gets its own namespace (its ``name``, de-duplicated), its
+own :class:`~repro.core.space.ScopedSpace` view, and its own Manager —
+so sweeps, cursors and data-plane keys cannot collide — while the
+handler fleet drains tasks across all namespaces in one ``take_batch``
+and the MonitorDaemon crashes/revives every Manager plus the fleet under
+the same fault plan. Single-program mode uses the default (passthrough)
+namespace: keys, ledger and the §6.1 trajectory stay bit-identical to
+the pre-PR-4 cloud.
 """
 
 from __future__ import annotations
@@ -24,12 +41,13 @@ import time
 from dataclasses import dataclass, field
 
 from repro.core.faults import FaultPlan, MonitorDaemon
-from repro.core.handler import Handler, SpeedBox
+from repro.core.handler import Handler, HandlerTenant, SpeedBox
 from repro.core.manager import Manager, ManagerConfig, validate_scheduling
 from repro.core.program import WorkloadProgram
-from repro.core.space import ANY, TSTimeout, TupleSpace
+from repro.core.space import (ANY, DEFAULT_NAMESPACE, TSTimeout, TupleSpace,
+                              as_scoped)
 
-__all__ = ["ACANCloud", "CloudConfig", "CloudResult"]
+__all__ = ["ACANCloud", "CloudConfig", "CloudResult", "MultiCloudResult"]
 
 
 def _default_layers() -> list:
@@ -58,6 +76,7 @@ class CloudConfig:
     scheduling: str = "event"                      # "event" | "poll" baseline
     handler_batch: int = 16                        # tasks per take_batch
     history_limit: int = 10_000                    # thist/losshist cap
+    adaptive_pouch: bool = False                   # PouchController in Manager
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
@@ -67,8 +86,8 @@ class CloudConfig:
 class CloudResult:
     loss_history: list          # [(step, loss)]
     timeout_history: list       # [(wallclock, timeout, power)]
-    manager_revivals: int
-    handler_revivals: int
+    manager_revivals: int       # this program's Manager
+    handler_revivals: int       # shared fleet total
     speed_changes: int
     wallclock: float
     ts_stats: dict
@@ -76,36 +95,78 @@ class CloudResult:
     pouches: int
 
 
+@dataclass
+class MultiCloudResult:
+    """Co-residency outcome: one :class:`CloudResult` per program (keyed
+    by namespace) plus the shared-fleet aggregates."""
+
+    per_program: dict[str, CloudResult]
+    manager_revivals: int       # all Managers
+    handler_revivals: int
+    speed_changes: int
+    wallclock: float
+    ts_stats: dict
+    ledger_ok: bool
+
+
 class ACANCloud:
     def __init__(self, cfg: CloudConfig,
-                 program: WorkloadProgram | None = None) -> None:
+                 program: WorkloadProgram | None = None,
+                 programs: list[WorkloadProgram] | None = None) -> None:
+        if program is not None and programs is not None:
+            raise ValueError("pass either program= or programs=, not both")
         self.cfg = cfg
-        if program is None:
-            from repro.programs.mlp import MLPProgram
-            program = MLPProgram(
-                layers=cfg.layers, epochs=cfg.epochs,
-                n_samples=cfg.n_samples, seed=cfg.seed,
-                data_noise=cfg.data_noise)
-        self.program = program
+        self.multi = programs is not None
+        if programs is None:
+            if program is None:
+                from repro.programs.mlp import MLPProgram
+                program = MLPProgram(
+                    layers=cfg.layers, epochs=cfg.epochs,
+                    n_samples=cfg.n_samples, seed=cfg.seed,
+                    data_noise=cfg.data_noise)
+            programs = [program]
+        if not programs:
+            raise ValueError("programs= must name at least one program")
+        self.programs = list(programs)
+        self.program = self.programs[0]            # single-mode convenience
+        self.namespaces = self._assign_namespaces()
         self.ts = TupleSpace(backend=cfg.ts_backend)
+        self.spaces = [as_scoped(self.ts, ns) for ns in self.namespaces]
         self.stop_event = threading.Event()
 
+    def _assign_namespaces(self) -> list[str]:
+        """Single program → the default passthrough namespace (bit-
+        identical legacy behaviour); co-residents → one namespace per
+        program from its ``name``, de-duplicated by suffix."""
+        if not self.multi:
+            return [DEFAULT_NAMESPACE]
+        out: list[str] = []
+        seen: dict[str, int] = {}
+        for prog in self.programs:
+            base = str(getattr(prog, "name", "program") or "program")
+            n = seen.get(base, 0)
+            seen[base] = n + 1
+            out.append(base if n == 0 else f"{base}.{n}")
+        return out
+
     # ----------------------------------------------------------- factories
-    def _make_manager(self, power_fn) -> tuple[Manager, threading.Thread]:
+    def _make_manager(self, i: int, power_fn) -> tuple[Manager, threading.Thread]:
         mgr = Manager(
-            ts=self.ts,
-            program=self.program,
+            ts=self.spaces[i],
+            program=self.programs[i],
             cfg=ManagerConfig(
                 task_cap=self.cfg.task_cap, pouch_size=self.cfg.pouch_size,
                 initial_timeout=self.cfg.initial_timeout,
                 scheduling=self.cfg.scheduling,
-                history_limit=self.cfg.history_limit),
+                history_limit=self.cfg.history_limit,
+                adaptive_pouch=self.cfg.adaptive_pouch),
             power_fn=power_fn,
-            crash_event=self._manager_crash,
+            crash_event=self._manager_crashes[i],
             stop_event=self.stop_event,
         )
+        suffix = f"-{self.namespaces[i]}" if self.multi else ""
         th = threading.Thread(target=self._manager_body, args=(mgr,),
-                              name="acan-manager", daemon=True)
+                              name=f"acan-manager{suffix}", daemon=True)
         th.start()
         return mgr, th
 
@@ -118,12 +179,21 @@ class ACANCloud:
             return
 
     def _make_handler(self, i: int) -> threading.Thread:
+        if self.multi:
+            tenants = {ns: HandlerTenant(space, prog.registry)
+                       for ns, space, prog in zip(
+                           self.namespaces, self.spaces, self.programs)}
+            registry = None
+        else:
+            tenants = None
+            registry = self.program.registry
         h = Handler(ts=self.ts, name=f"h{i}", speed=self._speed_boxes[i],
                     capacity=self.cfg.task_cap, lr=self.cfg.lr,
                     time_scale=self.cfg.time_scale,
                     batch_size=self.cfg.handler_batch,
                     scheduling=self.cfg.scheduling,
-                    registry=self.program.registry,
+                    registry=registry,
+                    tenants=tenants,
                     crash_event=self._handler_crashes[i],
                     stop_event=self.stop_event)
         self._handlers[i] = h
@@ -139,77 +209,119 @@ class ACANCloud:
         except Exception:
             return
 
+    # ------------------------------------------------------------- results
+    def _finished(self, i: int) -> bool:
+        return self.spaces[i].try_read(("mstate", "finished")) is not None
+
+    def _collect(self, i: int, daemon: MonitorDaemon, wall: float,
+                 ts_stats: dict | None = None,
+                 ledger_ok: bool | None = None) -> CloudResult:
+        """One program's result from its namespace view. Every history
+        read is guarded: a tuple listed by ``keys()`` can vanish (history
+        trimming by a still-running revived Manager) before ``try_read``
+        — the unguarded loss loop was a crash window."""
+        space = self.spaces[i]
+        loss_hist = []
+        for k in space.keys(("losshist", ANY)):
+            hit = space.try_read(k)
+            if hit is not None:
+                loss_hist.append((k[1], hit[1]))
+        loss_hist.sort()
+        # timeout_history holds at most ManagerConfig.history_limit rounds
+        # (the newest); the pouch count comes from the per-round-
+        # checkpointed ("mstate", "rounds") counter instead, so neither
+        # the cap nor a revival can deflate it.
+        thist = []
+        for k in space.keys(("thist", ANY, ANY)):
+            v = space.try_read(k)
+            if v is not None:
+                thist.append((k[1], v[1]["timeout"], v[1]["power"]))
+        thist.sort()
+        rounds_hit = space.try_read(("mstate", "rounds"))
+        total_rounds = rounds_hit[1] if rounds_hit is not None else 0
+        return CloudResult(
+            loss_history=loss_hist,
+            timeout_history=thist,
+            manager_revivals=daemon.manager_revivals_by[i],
+            handler_revivals=daemon.handler_revivals,
+            speed_changes=daemon.speed_changes,
+            wallclock=wall,
+            ts_stats=self.ts.stats() if ts_stats is None else ts_stats,
+            ledger_ok=(self.ts.ledger.verify() if ledger_ok is None
+                       else ledger_ok),
+            pouches=total_rounds,
+        )
+
     # ----------------------------------------------------------------- run
-    def run(self) -> CloudResult:
+    def run(self) -> CloudResult | MultiCloudResult:
         cfg = self.cfg
-        self._manager_crash = threading.Event()
+        n_programs = len(self.programs)
+        self._manager_crashes = [threading.Event() for _ in range(n_programs)]
         self._handler_crashes = [threading.Event() for _ in range(cfg.n_handlers)]
         self._speed_boxes = [SpeedBox(1.0) for _ in range(cfg.n_handlers)]
         self._handlers: list[Handler | None] = [None] * cfg.n_handlers
 
         daemon = MonitorDaemon(
             plan=cfg.fault_plan,
-            manager_crash=self._manager_crash,
+            manager_crashes=self._manager_crashes,
             handler_crashes=self._handler_crashes,
             speed_boxes=self._speed_boxes,
-            make_manager_thread=lambda: self._make_manager(lambda: daemon.power())[1],
+            make_manager_threads=lambda i: self._make_manager(
+                i, lambda: daemon.power())[1],
             make_handler_thread=self._make_handler,
-            is_finished=lambda: self.ts.try_read(("mstate", "finished"))
-            is not None,
+            is_manager_finished=self._finished,
             stop_event=self.stop_event,
         )
 
         t0 = time.monotonic()
-        # The program seeds its own TS state (dataset, params, config) in
+        # Each program seeds its own TS state (dataset, params, config) in
         # Manager.run -> program.setup, before any task is issued.
-        _, mthread = self._make_manager(lambda: daemon.power())
+        mthreads = [self._make_manager(i, lambda: daemon.power())[1]
+                    for i in range(n_programs)]
         hthreads = [self._make_handler(i) for i in range(cfg.n_handlers)]
-        daemon.attach(mthread, hthreads)
+        daemon.attach(mthreads, hthreads)
         dthread = threading.Thread(target=daemon.run, name="acan-daemon",
                                    daemon=True)
         dthread.start()
 
-        # Wait for the Manager to publish the finished flag (revivals keep
-        # the job alive through crashes): one blocking read with the wall
-        # limit as the deadline — the completion put wakes us directly.
-        # ("poll" scheduling keeps the busy-wait as the benchmark baseline.)
+        # Wait for every Manager to publish its finished flag (revivals
+        # keep the jobs alive through crashes): one blocking read per
+        # namespace against the shared wall-limit deadline — each
+        # completion put wakes us directly. ("poll" scheduling keeps the
+        # busy-wait as the benchmark baseline.)
+        deadline = t0 + cfg.wall_limit
         if cfg.scheduling == "poll":
-            while self.ts.try_read(("mstate", "finished")) is None:
-                if time.monotonic() - t0 > cfg.wall_limit:
+            while not all(self._finished(i) for i in range(n_programs)):
+                if time.monotonic() > deadline:
                     break
                 time.sleep(0.02)
         else:
-            try:
-                self.ts.read(("mstate", "finished"), timeout=cfg.wall_limit)
-            except TSTimeout:
-                pass                    # wall limit hit — stop everything
+            for space in self.spaces:
+                try:
+                    space.read(("mstate", "finished"),
+                               timeout=max(deadline - time.monotonic(),
+                                           1e-3))
+                except TSTimeout:
+                    break               # wall limit hit — stop everything
         self.stop_event.set()
         dthread.join(timeout=2.0)
         wall = time.monotonic() - t0
 
-        loss_hist = sorted(
-            (k[1], self.ts.try_read(k)[1])
-            for k in self.ts.keys(("losshist", ANY)))
-        # timeout_history holds at most ManagerConfig.history_limit rounds
-        # (the newest); the pouch count comes from the per-round-
-        # checkpointed ("mstate", "rounds") counter instead, so neither
-        # the cap nor a revival can deflate it.
-        thist = []
-        for k in self.ts.keys(("thist", ANY, ANY)):
-            v = self.ts.try_read(k)
-            if v is not None:
-                thist.append((k[1], v[1]["timeout"], v[1]["power"]))
-        thist.sort()
-        rounds_hit = self.ts.try_read(("mstate", "rounds"))
-        total_rounds = rounds_hit[1] if rounds_hit is not None else 0
-        return CloudResult(
-            loss_history=loss_hist,
-            timeout_history=thist,
+        # Verify the shared hash chain and snapshot stats ONCE — the
+        # ledger replay is O(total mutations) and identical for every
+        # tenant of the shared space.
+        ts_stats = self.ts.stats()
+        ledger_ok = self.ts.ledger.verify()
+        results = [self._collect(i, daemon, wall, ts_stats, ledger_ok)
+                   for i in range(n_programs)]
+        if not self.multi:
+            return results[0]
+        return MultiCloudResult(
+            per_program=dict(zip(self.namespaces, results)),
             manager_revivals=daemon.manager_revivals,
             handler_revivals=daemon.handler_revivals,
             speed_changes=daemon.speed_changes,
             wallclock=wall,
-            ts_stats=self.ts.stats(),
-            ledger_ok=self.ts.ledger.verify(),
-            pouches=total_rounds,
+            ts_stats=ts_stats,
+            ledger_ok=ledger_ok,
         )

@@ -14,41 +14,58 @@ sliding window (:mod:`repro.core.conflict`).
 
 Control-plane key conventions (Manager/Handler scheduling — shared by
 every program; data-plane key tables live in each program's module
-docstring, e.g. :mod:`repro.programs.mlp`):
+docstring, e.g. :mod:`repro.programs.mlp`). The **namespace** column
+shows each key as stored in a *multi-tenant* space: a program running
+under a :class:`~repro.core.space.ScopedSpace` has its subject fused
+into ``ns::subject`` (an :class:`~repro.core.space.NsSubject`), so no
+tenant's sweeps, cursors, marks or histories can touch another's; in
+the single-tenant default namespace the subject is stored raw and
+everything below reads as before:
 
-===============================================  ===========================
-key                                              value
-===============================================  ===========================
-``("task", tid)``                                task wire string — or
-                                                 ``(wire, handler_name)``
-                                                 after a "store": the name
-                                                 tags which handler put it
-                                                 back so it can skip its
-                                                 own re-puts for one
-                                                 backoff cycle
-``("done", op, layer, data_id, step,``           completion mark, keyed by
-``  in_lo, in_hi, out_lo, out_hi)``              task *content*; the **op
-                                                 name namespaces the
-                                                 control plane** — a
-                                                 stage's marks share every
-                                                 field the stage's tasks
-                                                 agree on, so the
-                                                 Manager's pouch barrier
-                                                 is one ``wait_count``
-                                                 over that pattern (the
-                                                 done counter)
-``("mstate", "cursor")`` / ``("mstate",``        Manager resume cursor
-``  "rounds")`` / ``("mstate", "finished")``     ``{round, stage_idx,
-                                                 timeout, window}`` /
-                                                 per-round pouch counter
-                                                 (monotonic across
-                                                 revivals) / job-completion
-                                                 flag the Cloud blocks a
-                                                 ``read`` on
-``("losshist", step)``                           loss trajectory (every
-                                                 training program records
-                                                 it via ``record_loss``)
-===============================================  ===========================
+===========================================  ===================  ==========================
+key (as the program writes it)               namespaced subject   value
+===========================================  ===================  ==========================
+``("task", tid)``                            ``ns::task``         task wire string — or
+                                                                  ``(wire, handler_name)``
+                                                                  after a "store": the name
+                                                                  tags which handler put it
+                                                                  back so it can skip its
+                                                                  own re-puts for one
+                                                                  backoff cycle; ``tid`` is
+                                                                  ``e<epoch>t<seq>`` — the
+                                                                  Manager epoch makes a
+                                                                  revived Manager's ids
+                                                                  collision-free against
+                                                                  its predecessor's
+                                                                  leftovers
+``("done", op, layer, data_id, step,``       ``ns::done``         completion mark, keyed by
+``  in_lo, in_hi, out_lo, out_hi)``                               task *content*; the **op
+                                                                  name namespaces the
+                                                                  control plane within a
+                                                                  tenant** — a stage's
+                                                                  marks share every field
+                                                                  the stage's tasks agree
+                                                                  on, so the Manager's
+                                                                  pouch barrier is one
+                                                                  ``wait_count`` over that
+                                                                  pattern (the done counter)
+``("mstate", "cursor")`` / ``("mstate",``    ``ns::mstate``       Manager resume cursor
+``  "rounds")`` / ``("mstate", "epoch")``                         ``{round, stage_idx,
+``/ ("mstate", "finished")``                                      timeout, pouch, window}``
+                                                                  / per-round pouch counter
+                                                                  (monotonic across
+                                                                  revivals) / Manager
+                                                                  (re)start count (folded
+                                                                  into tids) / per-program
+                                                                  completion flag the Cloud
+                                                                  blocks a ``read`` on
+``("thist", t, round)``                      ``ns::thist``        timeout/power history
+                                                                  (capped by
+                                                                  ``history_limit``)
+``("losshist", step)``                       ``ns::losshist``     loss trajectory (every
+                                                                  training program records
+                                                                  it via ``record_loss``)
+===========================================  ===================  ==========================
 """
 
 from __future__ import annotations

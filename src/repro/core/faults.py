@@ -40,15 +40,28 @@ class MonitorDaemon:
     *started* threads resuming from TS state. Revival is unconditional —
     the daemon notices death by ``Thread.is_alive()`` polling (it cannot
     reliably detect *failure*, only absence — consistent with the paper's
-    stance that reliable failure detection is impossible)."""
+    stance that reliable failure detection is impossible).
+
+    Multi-tenancy (PR 4): one daemon supervises *several* Managers (one
+    per co-resident program) over the shared handler fleet. Pass the
+    plural fields — ``manager_crashes`` (one crash event per Manager),
+    ``make_manager_threads(i)`` and ``is_manager_finished(i)`` — and the
+    fault plan crashes every Manager each firing (the exp3 discipline,
+    applied fleet-wide) while revival and its accounting stay per tenant
+    (``manager_revivals_by[i]``). The singular fields remain as the
+    one-Manager convenience API and populate index 0."""
 
     plan: FaultPlan
-    manager_crash: threading.Event
-    handler_crashes: list[threading.Event]
-    speed_boxes: list
-    make_manager_thread: Callable[[], threading.Thread]
-    make_handler_thread: Callable[[int], threading.Thread]
+    manager_crash: threading.Event | None = None
+    handler_crashes: list[threading.Event] = field(default_factory=list)
+    speed_boxes: list = field(default_factory=list)
+    make_manager_thread: Callable[[], threading.Thread] | None = None
+    make_handler_thread: Callable[[int], threading.Thread] | None = None
     is_finished: Callable[[], bool] = lambda: False
+    #: Plural (multi-manager) API — when set, overrides the singular one.
+    manager_crashes: list[threading.Event] | None = None
+    make_manager_threads: Callable[[int], threading.Thread] | None = None
+    is_manager_finished: Callable[[int], bool] | None = None
     stop_event: threading.Event = field(default_factory=threading.Event)
     manager_revivals: int = 0
     handler_revivals: int = 0
@@ -57,7 +70,23 @@ class MonitorDaemon:
 
     def __post_init__(self) -> None:
         self._rng = np.random.default_rng(self.plan.seed)
-        self._mthread: threading.Thread | None = None
+        if self.manager_crashes is None:
+            self.manager_crashes = [self.manager_crash
+                                    if self.manager_crash is not None
+                                    else threading.Event()]
+            self.manager_crash = self.manager_crashes[0]
+        elif self.manager_crash is None and self.manager_crashes:
+            self.manager_crash = self.manager_crashes[0]
+        if self.make_manager_threads is None:
+            mk = self.make_manager_thread
+            if mk is not None:
+                self.make_manager_threads = lambda i: mk()
+        if self.is_manager_finished is None:
+            fin = self.is_finished
+            self.is_manager_finished = lambda i: fin()
+        self.n_managers = len(self.manager_crashes)
+        self.manager_revivals_by = [0] * self.n_managers
+        self._mthreads: list[threading.Thread | None] = [None] * self.n_managers
         self._hthreads: list[threading.Thread | None] = [None] * len(self.speed_boxes)
 
     # ------------------------------------------------------------- helpers
@@ -69,9 +98,13 @@ class MonitorDaemon:
                 total += box.get()
         return total
 
-    def attach(self, mthread: threading.Thread,
-               hthreads: list[threading.Thread]) -> None:
-        self._mthread = mthread
+    def attach(self, mthread, hthreads: list[threading.Thread]) -> None:
+        """``mthread``: the Manager thread, or the list of them (one per
+        co-resident program, aligned with ``manager_crashes``)."""
+        if isinstance(mthread, (list, tuple)):
+            self._mthreads = list(mthread)
+        else:
+            self._mthreads = [mthread]
         self._hthreads = list(hthreads)
 
     # ----------------------------------------------------------------- run
@@ -82,26 +115,36 @@ class MonitorDaemon:
                 box.set(float(rng.choice(self.plan.speed_levels)))
             self.speed_changes += 1
         if rng.random() < self.plan.p_manager_crash:
-            self.manager_crash.set()
+            for ev in self.manager_crashes:
+                ev.set()
         if rng.random() < self.plan.p_handler_crash:
             for ev in self.handler_crashes:
                 ev.set()
 
     def _revive(self) -> None:
-        if (self._mthread is not None and not self._mthread.is_alive()
-                and not self.is_finished()):
-            # A dead Manager that did NOT publish the finished flag is a
-            # crash — revive it from the TS cursor (paper §6: "revives
-            # failed Manager thread using the latest checkpoint").
-            self._mthread = self.make_manager_thread()
-            self.manager_revivals += 1
+        for i, th in enumerate(self._mthreads):
+            if (th is not None and not th.is_alive()
+                    and not self.is_manager_finished(i)):
+                # A dead Manager that did NOT publish its finished flag is
+                # a crash — revive it from its TS cursor (paper §6:
+                # "revives failed Manager thread using the latest
+                # checkpoint").
+                self._mthreads[i] = self.make_manager_threads(i)
+                self.manager_revivals += 1
+                self.manager_revivals_by[i] += 1
         for i, th in enumerate(self._hthreads):
             if th is not None and not th.is_alive():
                 self._hthreads[i] = self.make_handler_thread(i)
                 self.handler_revivals += 1
 
-    def manager_alive(self) -> bool:
-        return self._mthread is not None and self._mthread.is_alive()
+    def manager_alive(self, i: int | None = None) -> bool:
+        """Is Manager ``i`` alive — or, with no index, are *all* attached
+        Managers alive (False before attach)?"""
+        if i is not None:
+            th = self._mthreads[i]
+            return th is not None and th.is_alive()
+        return bool(self._mthreads) and all(
+            th is not None and th.is_alive() for th in self._mthreads)
 
     #: Liveness-check quantum — ``Thread.is_alive`` has no event to wait
     #: on, so death detection is inherently periodic; this bounds revival

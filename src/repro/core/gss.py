@@ -26,6 +26,10 @@ class TimeoutController:
     slack: float = 1.3          # target = completion_time × slack
     grow: float = 1.6           # on an incomplete round
     ema: float = 0.5            # blend toward target on success
+    #: Cap on retained history entries (0 = unbounded). The Manager sets
+    #: this to ``ManagerConfig.history_limit`` — an uncapped list grows by
+    #: one float per pouch round for the life of the process.
+    history_limit: int = 10_000
     history: list[float] = field(default_factory=list)
 
     def update(self, all_done: bool, elapsed: float, fraction_done: float) -> float:
@@ -39,14 +43,20 @@ class TimeoutController:
             self.timeout *= 1.0 + (self.grow - 1.0) * shortfall
         self.timeout = min(max(self.timeout, self.min_timeout), self.max_timeout)
         self.history.append(self.timeout)
+        if self.history_limit and len(self.history) > self.history_limit:
+            del self.history[:-self.history_limit]
         return self.timeout
 
 
 @dataclass
 class PouchController:
     """Adaptive pouch size (paper §4 lists pouch size as a tunable; the
-    training experiments keep it fixed — so does our reproduction — but the
-    framework exposes adaptation for the host data pipeline)."""
+    training experiments keep it fixed). The Manager wires this into
+    ``_run_stage`` when ``ManagerConfig.adaptive_pouch`` is set: a fully
+    completed, well-utilised round grows the pouch (fewer barriers per
+    stage), a timed-out round shrinks it (less lost in-flight work per
+    timeout); ``benchmarks/sched_bench.py`` measures it against the fixed
+    §6 baseline. Also used for host-side microbatch dispatch sizing."""
 
     pouch: int = 100
     min_pouch: int = 8

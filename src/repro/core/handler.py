@@ -29,6 +29,22 @@ timeout/retransmission discipline must cover).
 
 ``scheduling="poll"`` preserves the pre-PR-2 single-get/50 ms-timeout
 loop as the measured baseline for ``benchmarks/sched_bench.py``.
+
+Multi-tenancy (PR 4): one handler fleet serves several co-resident
+programs on one physical space. Pass ``tenants`` — a mapping of
+namespace → :class:`HandlerTenant` (that program's
+:class:`~repro.core.space.ScopedSpace` view + op registry) — and the
+take pattern widens to :func:`~repro.core.space.task_take_pattern`,
+draining ``("task", tid)`` tuples across every served namespace in one
+``take_batch`` (FIFO in global put order, so no tenant starves). Each
+drained task is routed by :func:`~repro.core.space.key_namespace` to its
+tenant's executor and registry; done marks and result tuples land in
+that tenant's namespace; "store" re-puts keep the scoped key intact. A
+task from a namespace this handler does not serve is a capability miss —
+stored back, never a crash — so heterogeneous fleets can dedicate
+handlers to subsets of tenants. Without ``tenants`` the handler is the
+single-tenant fast path, byte-identical to the pre-PR-4 behaviour
+(fixed-subject ``("task", ANY)`` pattern, atomic bucket drains).
 """
 
 from __future__ import annotations
@@ -37,16 +53,34 @@ import threading
 import time
 from collections import defaultdict
 from dataclasses import dataclass, field
+from typing import Any
 
 from repro.core.executor import PreconditionUnmet, TaskExecutor
 from repro.core.manager import validate_scheduling
 from repro.core.program import OpRegistry, UnknownOp, ensure_builtin_ops
 from repro.core.tasks import TaskDesc, content_key
-from repro.core.space import ANY, TSTimeout, TupleSpace
+from repro.core.space import (ANY, DEFAULT_NAMESPACE, TSTimeout, TupleSpace,
+                              key_namespace, task_take_pattern)
 
 
 class HandlerCrash(Exception):
     pass
+
+
+@dataclass
+class HandlerTenant:
+    """One served program: its namespace view of the shared space and its
+    op registry (``None`` = built-in ops)."""
+    space: Any                          # TupleSpace | ScopedSpace
+    registry: OpRegistry | None = None
+
+
+@dataclass
+class _TenantRT:
+    """Per-tenant runtime the loops dispatch through."""
+    space: Any
+    registry: OpRegistry
+    executor: TaskExecutor
 
 
 @dataclass
@@ -85,6 +119,9 @@ class Handler:
     store_backoff: float = 0.02       # own-tagged re-put skip window
     scheduling: str = "event"         # "event" (batched) | "poll" (seed loop)
     registry: OpRegistry | None = None  # None -> built-in ops (MLP + MoE)
+    #: namespace -> HandlerTenant for the multi-tenant fleet; None = the
+    #: single-tenant fast path over (ts, registry).
+    tenants: dict[str, HandlerTenant] | None = None
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     tasks_done: int = 0
@@ -109,38 +146,54 @@ class Handler:
                 return
             time.sleep(min(remaining, 0.01))
 
-    def _task_cost(self, task: TaskDesc) -> float | None:
+    @staticmethod
+    def _task_cost(task: TaskDesc, registry: OpRegistry) -> float | None:
         """Registered cost of the task, or None when this handler lacks
         the op — which is a capability miss (store, don't crash)."""
         try:
-            return self.registry.cost(task)
+            return registry.cost(task)
         except UnknownOp:
             return None
 
     def run(self) -> None:
         validate_scheduling(self.scheduling)
-        if self.registry is None:
-            self.registry = ensure_builtin_ops()
-        executor = TaskExecutor(self.ts, lr=self.lr, registry=self.registry)
+        if self.tenants is None:
+            # Single-tenant fast path: fixed-subject pattern (atomic
+            # bucket drains), behaviour identical to pre-PR-4.
+            if self.registry is None:
+                self.registry = ensure_builtin_ops()
+            self._rt = {DEFAULT_NAMESPACE: _TenantRT(
+                self.ts, self.registry,
+                TaskExecutor(self.ts, lr=self.lr, registry=self.registry))}
+            self._take_pat = ("task", ANY)
+        else:
+            self._rt = {}
+            for ns, tenant in self.tenants.items():
+                reg = (tenant.registry if tenant.registry is not None
+                       else ensure_builtin_ops())
+                self._rt[ns] = _TenantRT(
+                    tenant.space, reg,
+                    TaskExecutor(tenant.space, lr=self.lr, registry=reg))
+            self._take_pat = task_take_pattern(set(self._rt))
         if self.scheduling == "poll":
-            return self._run_poll(executor)
-        return self._run_event(executor)
+            return self._run_poll()
+        return self._run_event()
 
     # --------------------------------------------------------- event loop
-    def _run_event(self, executor: TaskExecutor) -> None:
+    def _run_event(self) -> None:
         # ("task", tid) -> monotonic time until which an own-tagged re-put
         # is skipped (put straight back untouched).
         skip_until: dict[tuple, float] = {}
         while not self.stop_event.is_set():
             self._maybe_crash()
             try:
-                batch = self.ts.take_batch(("task", ANY), self.batch_size,
+                batch = self.ts.take_batch(self._take_pat, self.batch_size,
                                            timeout=self.take_timeout)
             except TSTimeout:
                 continue
             self.batches_taken += 1
             now = time.monotonic()
-            runnable: list[TaskDesc] = []
+            runnable: list[tuple[str, TaskDesc]] = []
             deferred = 0
             for key, value in batch:
                 wire, stored_by = _unpack_task(value)
@@ -150,36 +203,41 @@ class Handler:
                     self.ts.put(key, value)
                     deferred += 1
                     continue
-                task = TaskDesc.from_wire(wire)
-                cost = self._task_cost(task)
+                rt = self._rt.get(key_namespace(key))
+                cost = None
+                if rt is not None:
+                    task = TaskDesc.from_wire(wire)
+                    cost = self._task_cost(task, rt.registry)
                 if cost is None or cost > self.capacity:
-                    # "store": put it back for a more capable handler,
-                    # tagged so we skip it for one backoff cycle.
+                    # "store": an unserved namespace, unknown op, or
+                    # too-big task — put it back for a more capable
+                    # handler, tagged so we skip it for one backoff cycle.
                     self.ts.put(key, (wire, self.name))
                     skip_until[key] = now + self.store_backoff
                     self.tasks_stored += 1
                     deferred += 1
                     continue
-                runnable.append(task)
+                runnable.append((key_namespace(key), task))
             if len(skip_until) > 4 * self.batch_size:   # prune stale tids
                 skip_until = {k: t for k, t in skip_until.items() if t > now}
-            for group in self._group(runnable):
+            for ns, group in self._group(runnable):
+                rt = self._rt[ns]
                 # Emulated compute time for the whole group — proportional
                 # to summed cost, inversely to current speed (paper §6.2).
                 self._throttled_sleep(
-                    sum(self.registry.cost(t) for t in group)
+                    sum(rt.registry.cost(t) for t in group)
                     * self.time_scale
                     / max(self.speed.get(), 1e-6))
                 if self.stop_event.is_set():
                     return
                 try:
-                    executor.execute_batch(group)
+                    rt.executor.execute_batch(group)
                 except PreconditionUnmet:
                     # Inputs not in TS yet: discard the group; the
                     # Manager's timeout re-issues it (§5.1).
                     self.tasks_discarded += len(group)
                     continue
-                self.ts.put_many(
+                rt.space.put_many(
                     (("done",) + content_key(t), self.name) for t in group)
                 self.tasks_done += len(group)
             if deferred and not runnable:
@@ -188,26 +246,29 @@ class Handler:
                 self.stop_event.wait(self.store_backoff)
 
     @staticmethod
-    def _group(tasks: list[TaskDesc]) -> list[list[TaskDesc]]:
-        """Group compatible tasks for vectorized execution."""
+    def _group(tasks: list[tuple[str, TaskDesc]]) -> list[tuple[str, list[TaskDesc]]]:
+        """Group compatible tasks for vectorized execution — never across
+        namespaces (each group executes against one tenant's space)."""
         groups: dict[tuple, list[TaskDesc]] = defaultdict(list)
-        for t in tasks:
-            groups[(t.op, t.layer, t.data_id, t.step)].append(t)
-        return list(groups.values())
+        for ns, t in tasks:
+            groups[(ns, t.op, t.layer, t.data_id, t.step)].append(t)
+        return [(sig[0], group) for sig, group in groups.items()]
 
     # ---------------------------------------------------------- poll loop
-    def _run_poll(self, executor: TaskExecutor) -> None:
+    def _run_poll(self) -> None:
         """The pre-PR-2 loop: one 50 ms-timeout get per task, untagged
         stores — the measured baseline for ``benchmarks/sched_bench.py``."""
         while not self.stop_event.is_set():
             self._maybe_crash()
             try:
-                key, value = self.ts.get(("task", ANY), timeout=0.05)
+                key, value = self.ts.get(self._take_pat, timeout=0.05)
             except TSTimeout:
                 continue
             wire, _ = _unpack_task(value)
             task = TaskDesc.from_wire(wire)
-            cost = self._task_cost(task)
+            rt = self._rt.get(key_namespace(key))
+            cost = (self._task_cost(task, rt.registry)
+                    if rt is not None else None)
             if cost is None or cost > self.capacity:
                 self.ts.put(key, wire)
                 self.tasks_stored += 1
@@ -216,9 +277,9 @@ class Handler:
             self._throttled_sleep(cost * self.time_scale
                                   / max(self.speed.get(), 1e-6))
             try:
-                executor.execute(task)
+                rt.executor.execute(task)
             except PreconditionUnmet:
                 self.tasks_discarded += 1
                 continue
-            self.ts.put(("done",) + content_key(task), self.name)
+            rt.space.put(("done",) + content_key(task), self.name)
             self.tasks_done += 1

@@ -45,6 +45,17 @@ loop (covered by ``tests/test_acan_training.py``).
 ``scheduling="poll"`` preserves the pre-PR-2 fixed-cadence control plane
 — kept as the measured baseline for ``benchmarks/sched_bench.py``, not
 for production use.
+
+Multi-tenancy (PR 4): the Manager is tenant-agnostic — hand it a
+:class:`~repro.core.space.ScopedSpace` and every key it touches (tasks,
+done marks, the ``mstate`` cursor/rounds/epoch/finished records, the
+timeout history) lands in that program's namespace, so several Managers
+can share one physical space without sweeping each other's in-flight
+tasks or clobbering each other's recovery cursors. Task ids additionally
+carry a **manager epoch** (persisted in ``("mstate", "epoch")``, bumped
+on every (re)start): a revived Manager's fresh ``_task_seq`` can no
+longer mint a tid that collides with — and silently overwrites — a
+leftover task tuple of its dead predecessor.
 """
 
 from __future__ import annotations
@@ -54,7 +65,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
-from repro.core.gss import TimeoutController
+from repro.core.gss import PouchController, TimeoutController
 from repro.core.conflict import CommitWindow
 from repro.core.program import WorkloadProgram
 from repro.core.tasks import TaskDesc, content_key
@@ -95,6 +106,10 @@ class ManagerConfig:
     #: seconds, and a crash must not wait that long to fire.
     barrier_quantum: float = 0.05
     history_limit: int = 10_000      # cap on ("thist",...)/("losshist",...)
+    #: Adapt the pouch size per round through PouchController (ROADMAP
+    #: "Adaptive pouch sizing"): grow on fully-completed well-utilised
+    #: rounds, shrink on timeouts. ``pouch_size`` is the starting point.
+    adaptive_pouch: bool = False
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
@@ -109,13 +124,19 @@ class Manager:
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     controller: TimeoutController = field(default_factory=TimeoutController)
+    pouch_ctl: PouchController = field(default_factory=PouchController)
     window: CommitWindow = field(default_factory=CommitWindow)
     rounds: int = 0                  # pouch rounds (monotonic via TS)
     reissued: int = 0                # tasks re-published after a timeout
+    epoch: int = 0                   # (re)start count, persisted in TS
     _task_seq: int = 0
 
     def __post_init__(self) -> None:
         self.controller.timeout = self.cfg.initial_timeout
+        self.controller.history_limit = self.cfg.history_limit
+        self.pouch_ctl.pouch = self.cfg.pouch_size
+        self.pouch_ctl.min_pouch = min(self.pouch_ctl.min_pouch,
+                                       self.cfg.pouch_size)
 
     # ------------------------------------------------------------ lifecycle
     def _checkpoint_cursor(self, rnd: int, stage_idx: int) -> None:
@@ -123,8 +144,18 @@ class Manager:
         self.ts.put(("mstate", "cursor"), {
             "round": rnd, "stage_idx": stage_idx,
             "timeout": self.controller.timeout,
+            "pouch": self.pouch_ctl.pouch,
             "window": self.window.to_state(),
         })
+
+    def _bump_epoch(self) -> None:
+        """Increment the persisted manager epoch — called once per
+        (re)start, before any task is issued, so every tid this Manager
+        mints is distinct from every tid of its dead predecessors."""
+        hit = self.ts.try_read(("mstate", "epoch"))
+        self.epoch = (hit[1] if hit is not None else 0) + 1
+        self.ts.delete(("mstate", "epoch"))
+        self.ts.put(("mstate", "epoch"), self.epoch)
 
     def _load_cursor(self) -> tuple[int, int]:
         hit = self.ts.try_read(("mstate", "cursor"))
@@ -132,6 +163,7 @@ class Manager:
             return 0, 0
         st = hit[1]
         self.controller.timeout = st.get("timeout", self.controller.timeout)
+        self.pouch_ctl.pouch = st.get("pouch", self.pouch_ctl.pouch)
         self.window = CommitWindow.from_state(st.get("window", {}))
         # Rounds are checkpointed per pouch round (not per stage, which
         # would lose straggler rounds of the crashed stage) so the count
@@ -147,12 +179,22 @@ class Manager:
 
     # ------------------------------------------------------------- dispatch
     def _issue(self, tasks: list[TaskDesc]) -> None:
+        # The epoch prefix closes the revived-Manager collision window: a
+        # fresh Manager restarts _task_seq at 0, and without the epoch a
+        # re-minted tid would overwrite (put = replace) a distinct leftover
+        # task tuple of the dead predecessor, losing that task until the
+        # next timeout sweep. (The tid is already namespace-scoped when
+        # self.ts is a ScopedSpace.)
         items = []
         for t in tasks:
             self._task_seq += 1
-            tid = f"t{self._task_seq}-{time.monotonic_ns() & 0xFFFFFF:x}"
-            items.append((("task", tid), t.to_wire()))
+            items.append(((("task", f"e{self.epoch}t{self._task_seq}")),
+                          t.to_wire()))
         self.ts.put_many(iter(items))
+
+    def _pouch_size(self) -> int:
+        return (self.pouch_ctl.pouch if self.cfg.adaptive_pouch
+                else self.cfg.pouch_size)
 
     def _sweep_untaken(self) -> int:
         return self.ts.delete(("task", ANY))
@@ -185,6 +227,12 @@ class Manager:
         """Adapt the timeout, record history, sweep untaken task tuples."""
         done_frac = 1.0 - len(still) / max(len(pouch), 1)
         self.controller.update(not still, elapsed, done_frac)
+        if self.cfg.adaptive_pouch:
+            # Utilisation proxy: how full this pouch ran relative to the
+            # controller's current size — a stage's last pouch is usually
+            # a remainder and must not read as underutilisation.
+            self.pouch_ctl.update(
+                not still, len(pouch) / max(self.pouch_ctl.pouch, 1))
         self.rounds += 1
         self.ts.delete(("mstate", "rounds"))
         self.ts.put(("mstate", "rounds"), self.rounds)
@@ -224,7 +272,7 @@ class Manager:
             pending = self._pending(tasks)
             if not pending:
                 return
-            pouch = pending[: self.cfg.pouch_size]
+            pouch = pending[: self._pouch_size()]
             self._issue(pouch)
             # Re-issues are tasks published a second time (timeout
             # stragglers) — NOT later pouches of a stage wider than
@@ -284,7 +332,7 @@ class Manager:
             pending = self._pending_polled(tasks)
             if not pending:
                 return
-            pouch = pending[: self.cfg.pouch_size]
+            pouch = pending[: self._pouch_size()]
             self._issue(pouch)
             self.reissued += sum(
                 1 for t in pouch if content_key(t) in issued_keys)
@@ -312,6 +360,7 @@ class Manager:
     def run(self) -> None:
         prog = self.program
         prog.setup(self.ts)
+        self._bump_epoch()
         r0, s0 = self._load_cursor()
         for rnd in range(r0, prog.n_rounds()):
             if self.stop_event.is_set():

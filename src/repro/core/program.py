@@ -170,9 +170,14 @@ class WorkloadProgram(abc.ABC):
     - every op a program issues must be resolvable in ``self.registry``.
     """
 
-    #: Program name — used for reporting only; ops namespace the control
-    #: plane (done marks carry the op name), so two programs with
-    #: disjoint op vocabularies could even share one Tuple Space.
+    #: Program name — reporting, and the *namespace* a multi-tenant
+    #: ACANCloud scopes this program's keys under (de-duplicated when two
+    #: co-residents share a name). Ops additionally namespace the control
+    #: plane *within* a tenant (done marks carry the op name); true
+    #: cross-program isolation — sweeps, cursors, data-plane keys — comes
+    #: from the :class:`~repro.core.space.ScopedSpace` the Manager and
+    #: Handlers hand the program, which is transparent here: every hook
+    #: just uses ``ts`` and all keys land in this program's namespace.
     name: str = "program"
     registry: OpRegistry = GLOBAL_OPS
 

@@ -8,6 +8,9 @@ Public API:
   :class:`InstrumentedBackend`
 - selection: :func:`make_backend` / ``$REPRO_TS_BACKEND``
 - the :class:`TupleSpace` facade every ACAN component consumes
+- namespace scoping: :class:`ScopedSpace` per-program views over one
+  shared space (multi-tenant ACAN), with the :class:`NsSubject` fused
+  subject and the helpers in :mod:`repro.core.space.scoped`
 """
 
 from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
@@ -16,6 +19,10 @@ from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
 from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.local import LocalBackend
+from repro.core.space.scoped import (DEFAULT_NAMESPACE, NsSubject,
+                                     ScopedSpace, as_scoped, key_namespace,
+                                     scope_key, scope_pattern,
+                                     task_take_pattern, unscope_key)
 from repro.core.space.sharded import ShardedBackend
 
 __all__ = [
@@ -23,4 +30,7 @@ __all__ = [
     "match", "subject_is_fixed", "is_concrete", "validate_key",
     "BACKEND_ENV", "TupleSpace", "make_backend",
     "LocalBackend", "ShardedBackend", "InstrumentedBackend",
+    "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",
+    "key_namespace", "scope_key", "scope_pattern", "task_take_pattern",
+    "unscope_key",
 ]

@@ -10,6 +10,16 @@ event-driven control plane eliminates); plus blocking-specific counters
 immediately, and total blocked time). ``metrics()`` returns the full
 breakdown; ``stats()`` returns the inner backend's stats augmented with
 aggregate counters.
+
+Deletion accounting (multi-tenant isolation audit, PR 4): every
+``delete`` call is attributed to its pattern's subject —
+``delete_metrics()`` returns ``{subject: {"calls", "removed"}}`` plus a
+``"<widened>"`` row for ``ANY``/predicate-subject patterns. A
+fixed-subject delete can only ever remove tuples of that exact subject,
+so with namespace-scoped subjects (:class:`~repro.core.space.scoped
+.NsSubject`) the *only* deletes capable of crossing namespaces are the
+widened ones — ``stats()["instr_widened_deletes"]`` staying zero is the
+multi-tenant co-residency gate's "no cross-tenant deletion" evidence.
 """
 
 from __future__ import annotations
@@ -18,7 +28,11 @@ import threading
 import time
 from typing import Any, Iterable
 
-from repro.core.space.api import Journal, Key, Pattern, TSTimeout
+from repro.core.space.api import (Journal, Key, Pattern, TSTimeout,
+                                  subject_is_fixed)
+
+#: delete_metrics() row for deletes whose pattern does not pin a subject.
+WIDENED = "<widened>"
 
 #: A blocking call slower than this is counted as contended/blocked (µs).
 _BLOCKED_THRESHOLD_US = 500.0
@@ -52,6 +66,8 @@ class InstrumentedBackend:
         self.timeouts = 0
         self.blocked = 0
         self.blocked_us = 0.0
+        # subject (or WIDENED) -> [calls, removed]
+        self._deletes: dict[Any, list[int]] = {}
 
     # journal passes straight through to the wrapped backend
     @property
@@ -135,7 +151,16 @@ class InstrumentedBackend:
         return self._timed("keys", self.inner.keys, pattern)
 
     def delete(self, pattern: Pattern) -> int:
-        return self._timed("delete", self.inner.delete, pattern)
+        removed = self._timed("delete", self.inner.delete, pattern)
+        subject = pattern[0] if (pattern and subject_is_fixed(pattern[0])) \
+            else WIDENED
+        with self._lock:
+            row = self._deletes.get(subject)
+            if row is None:
+                row = self._deletes[subject] = [0, 0]
+            row[0] += 1
+            row[1] += removed
+        return removed
 
     def snapshot(self) -> dict[Key, Any]:
         return self._timed("snapshot", self.inner.snapshot)
@@ -152,6 +177,13 @@ class InstrumentedBackend:
                            "max_us": s.max_us, "misses": s.misses}
             return out
 
+    def delete_metrics(self) -> dict[Any, dict[str, int]]:
+        """Per-subject delete attribution:
+        {subject | WIDENED: {calls, removed}}."""
+        with self._lock:
+            return {s: {"calls": row[0], "removed": row[1]}
+                    for s, row in self._deletes.items()}
+
     def stats(self) -> dict[str, int]:
         inner = self.inner.stats()
         with self._lock:
@@ -159,4 +191,6 @@ class InstrumentedBackend:
             inner["instr_timeouts"] = self.timeouts
             inner["instr_blocked"] = self.blocked
             inner["instr_misses"] = sum(s.misses for s in self._ops.values())
+            widened = self._deletes.get(WIDENED)
+            inner["instr_widened_deletes"] = widened[0] if widened else 0
         return inner

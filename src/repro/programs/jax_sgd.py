@@ -24,7 +24,11 @@ registers in a **program-private** registry chained to the global one —
 two concurrent programs never collide.
 
 TS data-plane keys: ``("params", step)`` (current param tree),
-``("gpart", step, micro)`` ((loss, grad-tree) per microbatch).
+``("gpart", step, micro)`` ((loss, grad-tree) per microbatch) — scoped
+to the ``jax_sgd`` namespace when co-resident with other programs on a
+multi-tenant cloud (the op's ``ctx.ts`` is then that tenant's
+:class:`~repro.core.space.ScopedSpace`, so a handler fleet can serve
+JAX training next to the numpy programs on one space).
 """
 
 from __future__ import annotations

@@ -20,7 +20,12 @@ the §5.4 exactly-once parameter commit moved here verbatim from the
 pre-PR-3 Manager — the loss trajectory is bit-identical.
 
 TS data-plane key conventions (all per training *sample*, since the
-paper uses SGD with batch size 1):
+paper uses SGD with batch size 1). Under a multi-tenant cloud the
+program runs against a :class:`~repro.core.space.ScopedSpace`, so every
+subject below is stored as ``mlp::<subject>`` — co-resident programs
+(e.g. the MoE router) can share the physical space and the handler
+fleet without key collisions, and the §6.1 trajectory stays
+bit-identical to a single-tenant run:
 
 ==========================================  =================================
 key                                          value

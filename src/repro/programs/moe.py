@@ -25,7 +25,11 @@ commit the SGD update exactly once per (expert, round) through the §5.4
 window. The router stays frozen (the teacher shares it), so the loss
 decreases as the experts learn the teacher mixture.
 
-TS data-plane key conventions (all per *round* — one minibatch):
+TS data-plane key conventions (all per *round* — one minibatch; under a
+multi-tenant cloud every subject is scoped to ``moe_routing::<subject>``
+by the program's :class:`~repro.core.space.ScopedSpace`, so the MoE
+tenant's ``("dy", rnd)`` can never collide with e.g. the MLP tenant's
+``("dy", l, d)`` on a shared space):
 
 ==========================================  =================================
 key                                          value

@@ -130,6 +130,45 @@ def test_dead_manager_is_revived_unless_finished():
     assert d2.manager_revivals == 0
 
 
+# ------------------------------------------------------ multi-manager mode
+def test_multi_manager_fire_sets_every_crash_event():
+    events = [threading.Event() for _ in range(3)]
+    d = MonitorDaemon(
+        plan=FaultPlan(p_manager_crash=1.0, seed=0),
+        manager_crashes=events,
+        handler_crashes=[threading.Event()],
+        speed_boxes=[SpeedBox(1.0)],
+        make_manager_threads=lambda i: _live_thread(),
+        make_handler_thread=lambda i: _live_thread(),
+    )
+    d._fire_faults()
+    assert all(ev.is_set() for ev in events)
+    # the singular alias points at manager 0's event
+    assert d.manager_crash is events[0]
+
+
+def test_multi_manager_revival_is_per_tenant():
+    made = []
+    fin = [False, True]                  # tenant 1 finished, tenant 0 crashed
+    d = MonitorDaemon(
+        plan=FaultPlan(),
+        manager_crashes=[threading.Event(), threading.Event()],
+        handler_crashes=[threading.Event()],
+        speed_boxes=[SpeedBox(1.0)],
+        make_manager_threads=lambda i: (made.append(i), _live_thread())[1],
+        make_handler_thread=lambda i: _live_thread(),
+        is_manager_finished=lambda i: fin[i],
+    )
+    d.attach([_dead_thread(), _dead_thread()], [_live_thread()])
+    assert not d.manager_alive()
+    d._revive()
+    assert made == [0]                   # only the unfinished tenant revives
+    assert d.manager_revivals == 1
+    assert d.manager_revivals_by == [1, 0]
+    assert d.manager_alive(0)
+    assert not d.manager_alive(1)
+
+
 def test_daemon_run_fires_on_interval_and_stops():
     """End-to-end daemon loop: with a tiny interval the plan fires at
     least once, revival keeps the fleet populated, and stop_event exits
