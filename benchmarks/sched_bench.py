@@ -19,10 +19,20 @@ mode:
 - wallclock and the mean loss of the final epoch (trajectories must
   agree across modes — scheduling must not perturb training numerics).
 
+It also reports the **pipeline** row (PR 5): the MoE routing workload —
+whose per-expert stage DAG leaves handlers idle whenever one stage's
+pouch does not fill the fleet — run once sequentially
+(``max_inflight_stages=1``) and once under the frontier scheduler
+(``max_inflight_stages=8``), comparing **makespan** and **handler
+utilisation** (emulated busy seconds / fleet wallclock) with identical
+loss trajectories.
+
 Acceptance (exit code): event mode must use **>= 5x fewer TS ops per
 completed pouch** than poll mode, with wallclock no worse (1.15x slack
 for timer noise) and matching loss trajectories (1e-3 rtol — the batched
-executor may reassociate float reductions).
+executor may reassociate float reductions); the pipelined MoE run must
+beat the sequential makespan by **>= PIPELINE_SPEEDUP_FLOOR** with
+higher handler utilisation and a bit-identical trajectory.
 """
 
 from __future__ import annotations
@@ -36,12 +46,16 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "src"))
 
-from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec  # noqa: E402
+from repro.core import (ACANCloud, CloudConfig, FaultPlan, LayerSpec,  # noqa: E402
+                        MoERoutingProgram)
 from repro.configs.paper_mlp import PAPER_LR  # noqa: E402
 
 #: ops-per-pouch improvement the event-driven control plane must deliver.
 OPS_RATIO_FLOOR = 5.0
 WALLCLOCK_SLACK = 1.15
+#: makespan improvement the frontier scheduler must deliver on the MoE
+#: stage DAG (measured ~1.8x on 4 handlers; floor leaves CI timer slack).
+PIPELINE_SPEEDUP_FLOOR = 1.25
 
 
 def run_mode(scheduling: str, backend: str, layers, epochs: int,
@@ -68,6 +82,46 @@ def run_mode(scheduling: str, backend: str, layers, epochs: int,
         "losses": [l for _, l in res.loss_history],
         "per_op": {op: int(m["calls"]) for op, m in sorted(metrics.items())},
     }
+
+
+def run_pipeline_mode(max_inflight: int, backend: str, steps: int,
+                      seed: int) -> dict:
+    """One MoE run at the given frontier width. ``handler_batch=1`` keeps
+    handlers from draining a whole narrow stage into one thread, so the
+    comparison isolates *stage-level* concurrency (what the frontier
+    adds) from batch-drain serialisation (orthogonal, PR 2)."""
+    prog = MoERoutingProgram(steps=steps, seed=seed)
+    cfg = CloudConfig(n_handlers=4, task_cap=128.0, pouch_size=64,
+                      time_scale=2e-4, initial_timeout=0.25,
+                      handler_batch=1, fault_plan=FaultPlan(interval=1e9),
+                      wall_limit=600.0, ts_backend=backend,
+                      max_inflight_stages=max_inflight)
+    cloud = ACANCloud(cfg, program=prog)
+    res = cloud.run()
+    return {
+        "max_inflight": max_inflight,
+        "wallclock": res.wallclock,
+        "utilisation": (cloud.handler_busy_time()
+                        / max(cfg.n_handlers * res.wallclock, 1e-9)),
+        "losses": [l for _, l in res.loss_history],
+        "completed": len(res.loss_history) == steps,
+        "pouches": res.pouches,
+    }
+
+
+def pipeline_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
+    """Sequential vs pipelined MoE: the overlap-speedup acceptance gate."""
+    steps = 5 if smoke else 10
+    seq = run_pipeline_mode(1, backend, steps, seed)
+    pipe = run_pipeline_mode(8, backend, steps, seed)
+    speedup = seq["wallclock"] / max(pipe["wallclock"], 1e-9)
+    loss_ok = (seq["completed"] and pipe["completed"]
+               and seq["losses"] == pipe["losses"])   # bit-identical
+    ok = (speedup >= PIPELINE_SPEEDUP_FLOOR
+          and pipe["utilisation"] > seq["utilisation"]
+          and loss_ok)
+    return {"seq": seq, "pipe": pipe, "speedup": speedup,
+            "loss_ok": loss_ok, "ok": ok}
 
 
 def bench_rows(smoke: bool = True,
@@ -103,6 +157,17 @@ def bench_rows(smoke: bool = True,
                  f"ops_per_pouch={adap['ops_per_pouch']:.1f} "
                  f"pouches={adap['pouches']} "
                  f"(fixed: {fixed['pouches']}) loss_match={loss_ok}"))
+    # Frontier scheduler vs sequential stage execution on the MoE DAG
+    # (PR 5) — makespan + handler utilisation, trajectories bit-identical.
+    pg = pipeline_gate(smoke, backend)
+    rows.append((f"sched_pipeline_{backend}", pg["pipe"]["wallclock"] * 1e6,
+                 f"seq={pg['seq']['wallclock']:.2f}s "
+                 f"pipe={pg['pipe']['wallclock']:.2f}s "
+                 f"speedup={pg['speedup']:.2f}x "
+                 f"util={pg['seq']['utilisation']:.2f}->"
+                 f"{pg['pipe']['utilisation']:.2f} "
+                 f"loss_match={pg['loss_ok']} "
+                 f"gate>={PIPELINE_SPEEDUP_FLOOR:.2f}x pass={pg['ok']}"))
     return rows
 
 
@@ -157,17 +222,29 @@ def main() -> int:
           f"wallclock={adap['wallclock']:.2f}s, "
           f"loss_match={adap_loss_ok}")
 
+    pg = pipeline_gate(args.smoke, args.backend, args.seed)
+    print(f"\npipeline (MoE stage DAG, frontier vs sequential): "
+          f"seq={pg['seq']['wallclock']:.2f}s "
+          f"pipe={pg['pipe']['wallclock']:.2f}s "
+          f"speedup={pg['speedup']:.2f}x "
+          f"(target >= {PIPELINE_SPEEDUP_FLOOR:.2f}x), "
+          f"utilisation {pg['seq']['utilisation']:.2f} -> "
+          f"{pg['pipe']['utilisation']:.2f}, "
+          f"trajectory {'bit-identical' if pg['loss_ok'] else 'DIVERGES'}")
+
     ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
     wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
     loss_ok = (len(poll["losses"]) == len(event["losses"])
                and np.allclose(poll["losses"], event["losses"],
                                rtol=1e-3, atol=1e-5))
-    ok = ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok and adap_loss_ok
+    ok = (ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
+          and adap_loss_ok and pg["ok"])
     print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
           f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
           f"wallclock {'OK' if wall_ok else 'WORSE'}, "
           f"loss trajectories {'match' if loss_ok else 'DIVERGE'}, "
-          f"adaptive pouch {'matches' if adap_loss_ok else 'DIVERGES'} "
+          f"adaptive pouch {'matches' if adap_loss_ok else 'DIVERGES'}, "
+          f"pipeline overlap {'PASS' if pg['ok'] else 'FAIL'} "
           f"-> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

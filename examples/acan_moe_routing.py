@@ -26,11 +26,16 @@ def main() -> None:
         fault_plan=FaultPlan(interval=0.15, speed_levels=(1.0, 5.0, 10.0),
                              p_speed_change=1.0, p_handler_crash=1.0,
                              p_manager_crash=1.0, seed=1),
-        wall_limit=240.0, ts_backend=ts_backend_arg())
+        wall_limit=240.0, ts_backend=ts_backend_arg(),
+        # PR 5: per-expert stages are DAG-independent — let the frontier
+        # scheduler keep them (and adjacent rounds) in flight together,
+        # under the same fault plane (crashes resume mid-frontier).
+        max_inflight_stages=8)
     cloud = ACANCloud(cfg, program=prog)
     print(f"MoE: {prog.E} experts, top-{prog.k}, {prog.B} tokens/round, "
           f"{prog.steps} rounds; ts backend "
-          f"{type(cloud.ts.backend).__name__}")
+          f"{type(cloud.ts.backend).__name__}; "
+          f"frontier width {cfg.max_inflight_stages}")
     print("faults: speeds 1:5:10 re-drawn + Manager AND Handlers crash "
           f"every {cfg.fault_plan.interval}s (p=1.0)\n")
 

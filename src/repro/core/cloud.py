@@ -77,6 +77,16 @@ class CloudConfig:
     handler_batch: int = 16                        # tasks per take_batch
     history_limit: int = 10_000                    # thist/losshist cap
     adaptive_pouch: bool = False                   # PouchController in Manager
+    #: Frontier width of every Manager: how many DAG-independent stages
+    #: may be in flight at once (1 = sequential, bit-identical to PR 4).
+    max_inflight_stages: int = 1
+    #: Per-tenant fault plans (namespace -> FaultPlan, independent seeds)
+    #: for the MonitorDaemon; tenants not in the map stay on fault_plan.
+    fault_plans: dict | None = None
+    #: Per-tenant handler capacity caps (namespace -> max tasks of that
+    #: namespace a handler keeps per drained batch) applied to every
+    #: handler of the fleet — see HandlerTenant.max_tasks.
+    tenant_caps: dict | None = None
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
@@ -130,6 +140,24 @@ class ACANCloud:
         self.programs = list(programs)
         self.program = self.programs[0]            # single-mode convenience
         self.namespaces = self._assign_namespaces()
+        # Per-tenant config keys must name actual namespaces — a typo'd
+        # (or single-program-mode) key would otherwise be silently inert.
+        for label, mapping in (("fault_plans", cfg.fault_plans),
+                               ("tenant_caps", cfg.tenant_caps)):
+            unknown = set(mapping or {}) - set(self.namespaces)
+            if unknown:
+                raise ValueError(
+                    f"CloudConfig.{label} names unknown namespaces "
+                    f"{sorted(unknown)} — this cloud's namespaces are "
+                    f"{self.namespaces} (single-program mode uses the "
+                    f"default namespace {DEFAULT_NAMESPACE!r})")
+        bad_caps = {ns: v for ns, v in (cfg.tenant_caps or {}).items()
+                    if int(v) < 1}
+        if bad_caps:
+            raise ValueError(
+                f"CloudConfig.tenant_caps must be >= 1 (a 0 cap is a "
+                f"livelock, not a cap — drop the tenant from the fleet "
+                f"instead): {bad_caps}")
         self.ts = TupleSpace(backend=cfg.ts_backend)
         self.spaces = [as_scoped(self.ts, ns) for ns in self.namespaces]
         self.stop_event = threading.Event()
@@ -159,7 +187,8 @@ class ACANCloud:
                 initial_timeout=self.cfg.initial_timeout,
                 scheduling=self.cfg.scheduling,
                 history_limit=self.cfg.history_limit,
-                adaptive_pouch=self.cfg.adaptive_pouch),
+                adaptive_pouch=self.cfg.adaptive_pouch,
+                max_inflight_stages=self.cfg.max_inflight_stages),
             power_fn=power_fn,
             crash_event=self._manager_crashes[i],
             stop_event=self.stop_event,
@@ -178,9 +207,24 @@ class ACANCloud:
             # Manager that resumes from the TS cursor.
             return
 
+    def handler_busy_time(self) -> float:
+        """Total emulated compute seconds across the fleet, *including*
+        handler incarnations retired by crash/revival — the utilisation
+        numerator for benchmarks (busy / (n_handlers x wallclock))."""
+        return self._busy_retired + sum(
+            h.busy_time for h in self._handlers if h is not None)
+
     def _make_handler(self, i: int) -> threading.Thread:
+        old = self._handlers[i]
+        if old is not None:
+            # Revival replaces the Handler object; bank the dead
+            # incarnation's busy seconds so handler_busy_time() spans the
+            # whole run, not just the current fleet generation.
+            self._busy_retired += old.busy_time
         if self.multi:
-            tenants = {ns: HandlerTenant(space, prog.registry)
+            caps = self.cfg.tenant_caps or {}
+            tenants = {ns: HandlerTenant(space, prog.registry,
+                                         max_tasks=caps.get(ns))
                        for ns, space, prog in zip(
                            self.namespaces, self.spaces, self.programs)}
             registry = None
@@ -260,9 +304,12 @@ class ACANCloud:
         self._handler_crashes = [threading.Event() for _ in range(cfg.n_handlers)]
         self._speed_boxes = [SpeedBox(1.0) for _ in range(cfg.n_handlers)]
         self._handlers: list[Handler | None] = [None] * cfg.n_handlers
+        self._busy_retired = 0.0
 
         daemon = MonitorDaemon(
             plan=cfg.fault_plan,
+            plans=cfg.fault_plans,
+            namespaces=self.namespaces,
             manager_crashes=self._manager_crashes,
             handler_crashes=self._handler_crashes,
             speed_boxes=self._speed_boxes,

@@ -49,11 +49,30 @@ key (as the program writes it)               namespaced subject   value
                                                                   pouch barrier is one
                                                                   ``wait_count`` over that
                                                                   pattern (the done counter)
+``("mstate", "frontier")``                   ``ns::mstate``       the completed-stage
+                                                                  **frontier** (PR 5):
+                                                                  ``{base, completed}`` —
+                                                                  every round below
+                                                                  ``base`` is finished, and
+                                                                  ``completed`` lists the
+                                                                  combined ``[round,
+                                                                  stage]`` pairs at/ahead
+                                                                  of it (possibly spanning
+                                                                  two overlapped rounds); a
+                                                                  revived Manager resumes
+                                                                  exactly this frontier,
+                                                                  re-running only the
+                                                                  stages it omits
 ``("mstate", "cursor")`` / ``("mstate",``    ``ns::mstate``       Manager resume cursor
 ``  "rounds")`` / ``("mstate", "epoch")``                         ``{round, stage_idx,
 ``/ ("mstate", "finished")``                                      timeout, pouch, window}``
-                                                                  / per-round pouch counter
-                                                                  (monotonic across
+                                                                  (round/stage_idx = first
+                                                                  uncombined stage of the
+                                                                  base round — legacy
+                                                                  shape; the frontier key
+                                                                  is the resume point
+                                                                  proper) / per-round pouch
+                                                                  counter (monotonic across
                                                                   revivals) / Manager
                                                                   (re)start count (folded
                                                                   into tids) / per-program

@@ -49,7 +49,19 @@ class MonitorDaemon:
     fault plan crashes every Manager each firing (the exp3 discipline,
     applied fleet-wide) while revival and its accounting stay per tenant
     (``manager_revivals_by[i]``). The singular fields remain as the
-    one-Manager convenience API and populate index 0."""
+    one-Manager convenience API and populate index 0.
+
+    Per-tenant fault plans (PR 5): pass ``plans`` — a mapping of
+    *namespace* → :class:`FaultPlan` — together with ``namespaces`` (one
+    per Manager, aligned with ``manager_crashes``). A tenant with its
+    own plan gets an **independent RNG stream** (seeded from that plan's
+    ``seed``) and its own firing interval; its Manager is exempt from
+    the shared plan's manager-crash draw. Handler crashes and speed
+    changes stay fleet-wide on the shared plan — handlers are a shared
+    resource, so only the *Manager-crash* axis is per-tenant. Tenants
+    absent from the map fall back to the shared plan. Firing is
+    accounted per tenant in ``manager_crash_firings_by`` (revivals were
+    already per tenant in ``manager_revivals_by``)."""
 
     plan: FaultPlan
     manager_crash: threading.Event | None = None
@@ -62,6 +74,11 @@ class MonitorDaemon:
     manager_crashes: list[threading.Event] | None = None
     make_manager_threads: Callable[[int], threading.Thread] | None = None
     is_manager_finished: Callable[[int], bool] | None = None
+    #: Per-tenant fault plans: namespace -> FaultPlan, resolved against
+    #: ``namespaces`` (aligned with ``manager_crashes``). Independent
+    #: seeds/intervals; missing tenants use the shared ``plan``.
+    plans: dict[str, FaultPlan] | None = None
+    namespaces: list[str] | None = None
     stop_event: threading.Event = field(default_factory=threading.Event)
     manager_revivals: int = 0
     handler_revivals: int = 0
@@ -86,8 +103,40 @@ class MonitorDaemon:
             self.is_manager_finished = lambda i: fin()
         self.n_managers = len(self.manager_crashes)
         self.manager_revivals_by = [0] * self.n_managers
+        self.manager_crash_firings_by = [0] * self.n_managers
         self._mthreads: list[threading.Thread | None] = [None] * self.n_managers
         self._hthreads: list[threading.Thread | None] = [None] * len(self.speed_boxes)
+        # Resolve per-tenant plans to per-manager slots with their own
+        # RNG streams, so one tenant's draws never perturb another's.
+        # Misconfiguration is loud: a plan that cannot take effect
+        # (missing/short namespaces, unknown key, or per-tenant fields
+        # that only the fleet-wide plan honours) must not be silently
+        # inert.
+        self._tenant_plans: list[FaultPlan | None] = [None] * self.n_managers
+        self._tenant_rngs: dict[int, np.random.Generator] = {}
+        if self.plans:
+            ns_list = self.namespaces or []
+            if len(ns_list) != self.n_managers:
+                raise ValueError(
+                    f"plans= requires namespaces=, one per manager "
+                    f"(got {len(ns_list)} namespaces for "
+                    f"{self.n_managers} managers)")
+            unknown = set(self.plans) - set(ns_list)
+            if unknown:
+                raise ValueError(
+                    f"plans= names unknown namespaces {sorted(unknown)}; "
+                    f"supervised namespaces are {ns_list}")
+            for ns, p in self.plans.items():
+                if p.p_handler_crash or p.p_speed_change:
+                    raise ValueError(
+                        f"tenant plan for {ns!r} sets p_handler_crash/"
+                        f"p_speed_change — handlers and speeds are shared "
+                        f"resources governed only by the fleet-wide plan")
+            for i, ns in enumerate(ns_list):
+                p = self.plans.get(ns)
+                if p is not None:
+                    self._tenant_plans[i] = p
+                    self._tenant_rngs[i] = np.random.default_rng(p.seed)
 
     # ------------------------------------------------------------- helpers
     def power(self) -> float:
@@ -109,17 +158,32 @@ class MonitorDaemon:
 
     # ----------------------------------------------------------------- run
     def _fire_faults(self) -> None:
+        """One firing of the *shared* plan: fleet-wide speed/handler
+        faults plus manager crashes for every tenant **without** its own
+        plan (tenants with one draw on their own stream/interval)."""
         rng = self._rng
         if rng.random() < self.plan.p_speed_change:
             for box in self.speed_boxes:
                 box.set(float(rng.choice(self.plan.speed_levels)))
             self.speed_changes += 1
         if rng.random() < self.plan.p_manager_crash:
-            for ev in self.manager_crashes:
-                ev.set()
+            for i, ev in enumerate(self.manager_crashes):
+                if self._tenant_plans[i] is None:
+                    ev.set()
+                    self.manager_crash_firings_by[i] += 1
         if rng.random() < self.plan.p_handler_crash:
             for ev in self.handler_crashes:
                 ev.set()
+
+    def _fire_tenant_faults(self, i: int) -> None:
+        """One firing of tenant ``i``'s own plan (manager-crash axis
+        only — handlers and speeds are shared resources)."""
+        plan = self._tenant_plans[i]
+        if plan is None:
+            return
+        if self._tenant_rngs[i].random() < plan.p_manager_crash:
+            self.manager_crashes[i].set()
+            self.manager_crash_firings_by[i] += 1
 
     def _revive(self) -> None:
         for i, th in enumerate(self._mthreads):
@@ -152,13 +216,18 @@ class MonitorDaemon:
     LIVENESS_QUANTUM = 0.05
 
     def run(self) -> None:
-        last_fault = time.monotonic()
+        t0 = time.monotonic()
+        last_fault = t0
+        tenant_last = {i: t0 for i in self._tenant_rngs}
         while not self.stop_event.is_set():
             now = time.monotonic()
-            next_fault = last_fault + self.plan.interval
+            next_fault = min(
+                [last_fault + self.plan.interval]
+                + [tenant_last[i] + self._tenant_plans[i].interval
+                   for i in tenant_last])
             # Event-or-deadline wait: wakes immediately on stop, otherwise
-            # sleeps until the next fault deadline (capped by the liveness
-            # quantum) instead of a fixed cadence.
+            # sleeps until the nearest fault deadline of any plan (capped
+            # by the liveness quantum) instead of a fixed cadence.
             if self.stop_event.wait(
                     min(max(next_fault - now, 0.0), self.LIVENESS_QUANTUM)):
                 return
@@ -166,5 +235,9 @@ class MonitorDaemon:
             if now - last_fault >= self.plan.interval:
                 self._fire_faults()
                 last_fault = now
+            for i in tenant_last:
+                if now - tenant_last[i] >= self._tenant_plans[i].interval:
+                    self._fire_tenant_faults(i)
+                    tenant_last[i] = now
             self._revive()
             self.power_log.append((time.time(), self.power()))

@@ -51,22 +51,45 @@ class TimeoutController:
 @dataclass
 class PouchController:
     """Adaptive pouch size (paper §4 lists pouch size as a tunable; the
-    training experiments keep it fixed). The Manager wires this into
-    ``_run_stage`` when ``ManagerConfig.adaptive_pouch`` is set: a fully
-    completed, well-utilised round grows the pouch (fewer barriers per
-    stage), a timed-out round shrinks it (less lost in-flight work per
-    timeout); ``benchmarks/sched_bench.py`` measures it against the fixed
-    §6 baseline. Also used for host-side microbatch dispatch sizing."""
+    training experiments keep it fixed). The Manager wires this into its
+    pouch loop (``_start_pouch``/``_finish_pouch``) when
+    ``ManagerConfig.adaptive_pouch`` is set: a fully completed,
+    well-utilised round grows the pouch (fewer barriers per stage), a
+    timed-out round shrinks it (less lost in-flight work per timeout),
+    and a revived Manager calls :meth:`revive` so crash-induced timeouts
+    don't read as load; ``benchmarks/sched_bench.py`` measures it against
+    the fixed §6 baseline. Also used for host-side microbatch dispatch
+    sizing."""
 
     pouch: int = 100
     min_pouch: int = 8
     max_pouch: int = 4096
+    #: Shrink-grace countdown set by :meth:`revive` — see below.
+    shrink_grace: int = 0
 
     def update(self, all_done: bool, utilization: float) -> int:
         if all_done and utilization > 0.9:
             self.pouch = min(int(self.pouch * 1.25) + 1, self.max_pouch)
         elif not all_done:
-            self.pouch = max(int(self.pouch * 0.8), self.min_pouch)
+            if self.shrink_grace > 0:
+                self.shrink_grace -= 1
+            else:
+                self.pouch = max(int(self.pouch * 0.8), self.min_pouch)
+        if all_done:
+            self.shrink_grace = 0
+        return self.pouch
+
+    def revive(self, configured: int) -> int:
+        """Reset the controller on Manager revival. A crashed pouch reads
+        as a barrier timeout, which is a *fault* signal, not a *load*
+        signal — under a crash-heavy fault plan the persisted pouch
+        ratchets down toward ``min_pouch`` on every revival and adaptive
+        sizing collapses. Clamp the persisted size back up to the
+        configured starting point (a legitimately grown pouch survives)
+        and forgive the first post-revival shortfall, which is the
+        crash-truncated round itself."""
+        self.pouch = max(self.pouch, min(configured, self.max_pouch))
+        self.shrink_grace = 1
         return self.pouch
 
 

@@ -42,7 +42,11 @@ tenant's executor and registry; done marks and result tuples land in
 that tenant's namespace; "store" re-puts keep the scoped key intact. A
 task from a namespace this handler does not serve is a capability miss —
 stored back, never a crash — so heterogeneous fleets can dedicate
-handlers to subsets of tenants. Without ``tenants`` the handler is the
+handlers to subsets of tenants; a namespace served with a
+``HandlerTenant.max_tasks`` cap keeps at most that many of the tenant's
+tasks per drained batch (the rest stored back the same way), so big
+handlers can be pinned to big-task tenants without starving anyone
+(PR 5). Without ``tenants`` the handler is the
 single-tenant fast path, byte-identical to the pre-PR-4 behaviour
 (fixed-subject ``("task", ANY)`` pattern, atomic bucket drains).
 """
@@ -70,9 +74,19 @@ class HandlerCrash(Exception):
 @dataclass
 class HandlerTenant:
     """One served program: its namespace view of the shared space and its
-    op registry (``None`` = built-in ops)."""
+    op registry (``None`` = built-in ops).
+
+    ``max_tasks`` optionally caps how many of this namespace's tasks the
+    handler *keeps* out of one drained ``take_batch`` — tasks beyond the
+    cap are stored back (tagged, like a capability miss) for the rest of
+    the fleet. Heterogeneous fleets use asymmetric caps to pin a
+    big-task tenant to its big handlers while every handler still serves
+    (a trickle of) every namespace. ``None`` = uncapped; poll-mode
+    handlers take one task at a time, so the cap only shapes the batched
+    event loop."""
     space: Any                          # TupleSpace | ScopedSpace
     registry: OpRegistry | None = None
+    max_tasks: int | None = None
 
 
 @dataclass
@@ -127,7 +141,9 @@ class Handler:
     tasks_done: int = 0
     tasks_discarded: int = 0
     tasks_stored: int = 0
+    tasks_capped: int = 0             # stored back over a tenant max_tasks cap
     batches_taken: int = 0
+    busy_time: float = 0.0            # emulated compute seconds (utilisation)
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
@@ -135,16 +151,23 @@ class Handler:
             raise HandlerCrash(self.name)
 
     def _throttled_sleep(self, seconds: float) -> None:
-        """Sleep in small slices so crash/stop events interrupt work."""
-        deadline = time.monotonic() + seconds
-        while True:
-            self._maybe_crash()
-            if self.stop_event.is_set():
-                return
-            remaining = deadline - time.monotonic()
-            if remaining <= 0:
-                return
-            time.sleep(min(remaining, 0.01))
+        """Sleep in small slices so crash/stop events interrupt work.
+        ``busy_time`` accrues the *actual* elapsed emulated compute —
+        crash/stop-truncated work must not count in full, or the
+        utilisation proxy would read phantom busy seconds."""
+        t0 = time.monotonic()
+        deadline = t0 + seconds
+        try:
+            while True:
+                self._maybe_crash()
+                if self.stop_event.is_set():
+                    return
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return
+                time.sleep(min(remaining, 0.01))
+        finally:
+            self.busy_time += time.monotonic() - t0
 
     @staticmethod
     def _task_cost(task: TaskDesc, registry: OpRegistry) -> float | None:
@@ -166,14 +189,26 @@ class Handler:
                 self.ts, self.registry,
                 TaskExecutor(self.ts, lr=self.lr, registry=self.registry))}
             self._take_pat = ("task", ANY)
+            self._caps = {}
         else:
             self._rt = {}
+            self._caps = {}
             for ns, tenant in self.tenants.items():
                 reg = (tenant.registry if tenant.registry is not None
                        else ensure_builtin_ops())
                 self._rt[ns] = _TenantRT(
                     tenant.space, reg,
                     TaskExecutor(tenant.space, lr=self.lr, registry=reg))
+                if tenant.max_tasks is not None:
+                    if int(tenant.max_tasks) < 1:
+                        # 0 would make every handler store this tenant's
+                        # tasks back forever — a silent livelock, not a
+                        # cap. "Don't serve this tenant" is expressed by
+                        # omitting it from `tenants`.
+                        raise ValueError(
+                            f"HandlerTenant.max_tasks must be >= 1, got "
+                            f"{tenant.max_tasks!r} for namespace {ns!r}")
+                    self._caps[ns] = int(tenant.max_tasks)
             self._take_pat = task_take_pattern(set(self._rt))
         if self.scheduling == "poll":
             return self._run_poll()
@@ -194,6 +229,7 @@ class Handler:
             self.batches_taken += 1
             now = time.monotonic()
             runnable: list[tuple[str, TaskDesc]] = []
+            kept: dict[str, int] = {}     # per-namespace tasks kept (caps)
             deferred = 0
             for key, value in batch:
                 wire, stored_by = _unpack_task(value)
@@ -203,7 +239,19 @@ class Handler:
                     self.ts.put(key, value)
                     deferred += 1
                     continue
-                rt = self._rt.get(key_namespace(key))
+                ns = key_namespace(key)
+                cap = self._caps.get(ns)
+                if cap is not None and kept.get(ns, 0) >= cap:
+                    # Over this tenant's per-batch cap: store it back
+                    # (tagged like a capability miss) for a handler with
+                    # headroom on this namespace.
+                    self.ts.put(key, (wire, self.name))
+                    skip_until[key] = now + self.store_backoff
+                    self.tasks_stored += 1
+                    self.tasks_capped += 1
+                    deferred += 1
+                    continue
+                rt = self._rt.get(ns)
                 cost = None
                 if rt is not None:
                     task = TaskDesc.from_wire(wire)
@@ -217,7 +265,8 @@ class Handler:
                     self.tasks_stored += 1
                     deferred += 1
                     continue
-                runnable.append((key_namespace(key), task))
+                kept[ns] = kept.get(ns, 0) + 1
+                runnable.append((ns, task))
             if len(skip_until) > 4 * self.batch_size:   # prune stale tids
                 skip_until = {k: t for k, t in skip_until.items() if t > now}
             for ns, group in self._group(runnable):

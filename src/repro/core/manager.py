@@ -1,61 +1,70 @@
-"""The ACAN Manager (paper §4, §5.3) — a program-agnostic stage-graph
-scheduler since PR 3.
+"""The ACAN Manager (paper §4, §5.3) — a program-agnostic **frontier
+scheduler** over the stage-dependency DAG since PR 5.
 
-The Manager walks a :class:`~repro.core.program.WorkloadProgram`'s
-rounds and stages:
+The Manager schedules a :class:`~repro.core.program.WorkloadProgram`'s
+stages as an explicit dependency DAG (``stage_deps``, defaulting to a
+linear chain so pre-DAG programs run unchanged):
 
-1. asks the program for the stage's prototype tasks (possibly
-   data-dependent — derived from TS state earlier stages combined),
-   partitions them to the uniform task-size cap through the program's
-   op registry, and publishes **pouches** (≤ ``pouch_size`` task
-   descriptions) into TS with a **timeout**;
-2. waits on a **done-counter barrier** — a single blocking
-   :meth:`~repro.core.space.TupleSpace.wait_count` over the stage's
-   done-mark pattern with the GSS timeout as the *deadline* (the paper's
-   timeout discipline, minus the polling: the Manager wakes on each
-   completion event instead of re-scanning every done mark each tick);
-   upon deadline (or early completion) it evaluates completion marks,
+1. it keeps up to ``ManagerConfig.max_inflight_stages`` *independent*
+   stages in flight at once — a stage launches as soon as every
+   predecessor's done-counter has closed and its combine has run, so
+   handlers that a narrow stage would leave idle pick up work from a
+   sibling stage (or, when the program's ``round_overlap`` admits it,
+   from the **next round**: the MLP program overlaps ``upd_l`` of sample
+   *k* with ``fwd``/``act`` of sample *k+1*);
+2. each in-flight stage runs the paper's pouch/timeout discipline: the
+   program's prototype tasks are partitioned to the uniform task-size
+   cap through the op registry and published as **pouches** (≤
+   ``pouch_size`` task descriptions) with a **timeout**;
+3. the blocking ``wait_count`` done-counter barriers of all in-flight
+   stages are **multiplexed**: the Manager first closes any barrier
+   whose count already reached its target, then parks on one stage's
+   pattern for a slice of ``barrier_quantum`` (rotating which, so no
+   stage starves) — with a single stage in flight this degrades to
+   exactly the pre-PR-5 sliced blocking barrier, op for op. Upon a
+   stage's deadline (or completion) it evaluates completion marks,
    adapts the timeout (:class:`~repro.core.gss.TimeoutController`),
    sweeps untaken task tuples, and re-issues unfinished tasks;
-3. calls the program's stage-boundary ``combine`` hook (partial sums →
-   full vectors; parameter commits through the §5.4 sliding window);
-4. checkpoints its ``(round, stage)`` cursor into TS after every stage,
-   so a crashed Manager can be revived by the daemon and *continue from
-   TS state alone* — the paper's checkpoint-free recovery ("the Manager
-   restart can be programmed to read the tuple space state and
-   continue").
+4. when a stage's last task has its mark, the program's ``combine`` hook
+   fires *for that stage* (commit hooks stay scoped to per-stage
+   completion, so the §5.4 window discipline is untouched by overlap),
+   and the **completed-stage frontier** — the base round plus every
+   combined ``(round, stage)`` at or ahead of it — is checkpointed into
+   TS (``("mstate", "frontier")``, next to the legacy ``cursor``), so a
+   crashed Manager revived by the daemon resumes the *exact frontier*
+   from TS state alone — the paper's checkpoint-free recovery, now with
+   several stages (possibly of two rounds) mid-flight.
 
 Completion marks are keyed by task *content* (not attempt), so a slow
 handler finishing attempt k still satisfies attempt k+1 — redundant
 execution is harmless by construction. The barrier pattern is derived
 from the stage's tasks: every field all tasks agree on is pinned, the
-rest are wildcards — for regular stages (one ``(op, layer, data_id,
-step)`` per stage, like the MLP pipeline) that is one concrete prefix;
-for non-regular stages (the MoE expert stage spans many ``layer``\\ s)
-the op name still pins the pattern to this stage, so the count cannot
-pick up marks from other stages of the same round.
+rest are wildcards — and because ``data_id``/``step`` are among the
+pinned fields for every built-in program, two overlapping stages (even
+of consecutive rounds) can never satisfy each other's counters.
 
 Crash semantics under the blocking barrier: an injected crash set while
 the Manager is parked inside ``wait_count`` fires at the next wakeup
-(completion, arrival, or the GSS deadline — never later than the current
-timeout), the thread dies mid-pouch, and the daemon revives a fresh
-Manager that resumes from the TS cursor exactly as under the old poll
-loop (covered by ``tests/test_acan_training.py``).
+(completion, arrival, or the sliced quantum — never later), the thread
+dies mid-frontier, and the daemon revives a fresh Manager that re-runs
+every not-yet-combined stage from the done marks already in TS (covered
+by ``tests/test_acan_training.py`` and ``tests/test_pipeline.py``).
 
-``scheduling="poll"`` preserves the pre-PR-2 fixed-cadence control plane
-— kept as the measured baseline for ``benchmarks/sched_bench.py``, not
-for production use.
+``scheduling="poll"`` preserves the fixed-cadence control plane — kept
+as the measured baseline for ``benchmarks/sched_bench.py``, not for
+production use; it drives the same frontier, re-scanning each in-flight
+pouch every ``poll_quantum``.
 
 Multi-tenancy (PR 4): the Manager is tenant-agnostic — hand it a
 :class:`~repro.core.space.ScopedSpace` and every key it touches (tasks,
-done marks, the ``mstate`` cursor/rounds/epoch/finished records, the
-timeout history) lands in that program's namespace, so several Managers
-can share one physical space without sweeping each other's in-flight
-tasks or clobbering each other's recovery cursors. Task ids additionally
-carry a **manager epoch** (persisted in ``("mstate", "epoch")``, bumped
-on every (re)start): a revived Manager's fresh ``_task_seq`` can no
-longer mint a tid that collides with — and silently overwrites — a
-leftover task tuple of its dead predecessor.
+done marks, the ``mstate`` cursor/frontier/rounds/epoch/finished
+records, the timeout history) lands in that program's namespace, so
+several Managers can share one physical space without sweeping each
+other's in-flight tasks or clobbering each other's recovery cursors.
+Task ids additionally carry a **manager epoch** (persisted in
+``("mstate", "epoch")``, bumped on every (re)start): a revived Manager's
+fresh ``_task_seq`` can no longer mint a tid that collides with — and
+silently overwrites — a leftover task tuple of its dead predecessor.
 """
 
 from __future__ import annotations
@@ -99,20 +108,51 @@ class ManagerConfig:
     poll_quantum: float = 0.004      # poll-mode only: done-scan cadence
     strict_timeout: bool = False     # True = always wait the full timeout
     scheduling: str = "event"        # "event" (blocking barrier) | "poll"
-    #: Upper bound on one blocking slice of the pouch barrier. The barrier
-    #: is event-driven (completion arrivals end it immediately); this only
-    #: bounds how stale a pending crash/stop event can go unnoticed while
-    #: the Manager is parked — the GSS timeout can grow to tens of
-    #: seconds, and a crash must not wait that long to fire.
+    #: Upper bound on one blocking slice of a pouch barrier. Barriers are
+    #: event-driven (completion arrivals end them immediately); this only
+    #: bounds (a) how stale a pending crash/stop event can go unnoticed
+    #: while the Manager is parked, and (b) how long a *sibling* in-flight
+    #: stage's completion can go unnoticed while the Manager is parked on
+    #: another stage's pattern (the slice is divided among in-flight
+    #: stages, so the bound holds for the whole frontier).
     barrier_quantum: float = 0.05
     history_limit: int = 10_000      # cap on ("thist",...)/("losshist",...)
     #: Adapt the pouch size per round through PouchController (ROADMAP
     #: "Adaptive pouch sizing"): grow on fully-completed well-utilised
     #: rounds, shrink on timeouts. ``pouch_size`` is the starting point.
     adaptive_pouch: bool = False
+    #: Frontier width: how many DAG-independent stages may be in flight at
+    #: once. 1 (default) executes the DAG sequentially in ``stage_names``
+    #: order — bit-identical to the pre-PR-5 scheduler on any program and
+    #: to the pipelined run on any program whose combines are pure
+    #: functions of complete stage results (all built-ins).
+    max_inflight_stages: int = 1
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
+        if self.max_inflight_stages < 1:
+            raise ValueError("max_inflight_stages must be >= 1, got "
+                             f"{self.max_inflight_stages}")
+
+
+@dataclass
+class _StageRun:
+    """One in-flight stage's pouch state machine."""
+
+    rnd: int
+    name: str
+    order: int                       # index in stage_names(rnd): priority
+    tasks: list                     # partitioned TaskDescs of the stage
+    done_pat: tuple = ()
+    issued: set = field(default_factory=set)    # content keys ever pouched
+    tids: set = field(default_factory=set)      # tids this stage issued
+    # per-pouch barrier state
+    pouch: list = field(default_factory=list)
+    target: int = 0
+    t0: float = 0.0
+    deadline: float = 0.0
+    waiting: bool = False            # pouch issued, barrier open
+    met_early: bool = False          # barrier met under strict_timeout
 
 
 @dataclass
@@ -137,17 +177,14 @@ class Manager:
         self.pouch_ctl.pouch = self.cfg.pouch_size
         self.pouch_ctl.min_pouch = min(self.pouch_ctl.min_pouch,
                                        self.cfg.pouch_size)
+        self._base = 0                           # lowest unfinished round
+        self._completed: set[tuple[int, str]] = set()
+        self._inflight: dict[tuple[int, str], _StageRun] = {}
+        self._names_cache: dict[int, list[str]] = {}
+        self._deps_cache: dict[int, dict] = {}
+        self._wait_rr = 0                        # barrier park rotation
 
     # ------------------------------------------------------------ lifecycle
-    def _checkpoint_cursor(self, rnd: int, stage_idx: int) -> None:
-        self.ts.delete(("mstate", "cursor"))
-        self.ts.put(("mstate", "cursor"), {
-            "round": rnd, "stage_idx": stage_idx,
-            "timeout": self.controller.timeout,
-            "pouch": self.pouch_ctl.pouch,
-            "window": self.window.to_state(),
-        })
-
     def _bump_epoch(self) -> None:
         """Increment the persisted manager epoch — called once per
         (re)start, before any task is issued, so every tid this Manager
@@ -157,82 +194,264 @@ class Manager:
         self.ts.delete(("mstate", "epoch"))
         self.ts.put(("mstate", "epoch"), self.epoch)
 
-    def _load_cursor(self) -> tuple[int, int]:
+    def _checkpoint(self) -> None:
+        """Persist the completed-stage frontier plus controller state.
+
+        ``("mstate", "frontier")`` holds the resume point proper (base
+        round + combined stages at/ahead of it); ``("mstate", "cursor")``
+        keeps the legacy ``{round, stage_idx}`` shape (pointing at the
+        first *uncombined* stage of the base round) for external readers,
+        and carries the timeout/pouch/window state as before."""
+        names = (self._names(self._base)
+                 if self._base < self.program.n_rounds() else [])
+        idx = next((i for i, n in enumerate(names)
+                    if (self._base, n) not in self._completed), len(names))
+        self.ts.delete(("mstate", "cursor"))
+        self.ts.put(("mstate", "cursor"), {
+            "round": self._base, "stage_idx": idx,
+            "timeout": self.controller.timeout,
+            "pouch": self.pouch_ctl.pouch,
+            "window": self.window.to_state(),
+        })
+        self.ts.delete(("mstate", "frontier"))
+        self.ts.put(("mstate", "frontier"), {
+            "base": self._base,
+            "completed": sorted([r, n] for r, n in self._completed),
+        })
+
+    def _load_frontier(self) -> None:
         hit = self.ts.try_read(("mstate", "cursor"))
-        if hit is None:
-            return 0, 0
-        st = hit[1]
-        self.controller.timeout = st.get("timeout", self.controller.timeout)
-        self.pouch_ctl.pouch = st.get("pouch", self.pouch_ctl.pouch)
-        self.window = CommitWindow.from_state(st.get("window", {}))
+        if hit is not None:
+            st = hit[1]
+            self.controller.timeout = st.get("timeout",
+                                             self.controller.timeout)
+            self.pouch_ctl.pouch = st.get("pouch", self.pouch_ctl.pouch)
+            self.window = CommitWindow.from_state(st.get("window", {}))
+            # This is a *revival*: the pouch the predecessor persisted may
+            # have collapsed under crash-induced barrier timeouts (a
+            # crashed pouch reads as a timeout) — clamp it back up and
+            # forgive the first post-revival shortfall.
+            if self.cfg.adaptive_pouch:
+                self.pouch_ctl.revive(self.cfg.pouch_size)
+            # Fallback base for TS state written before the frontier key
+            # existed: resume at the cursor round.
+            self._base = int(st.get("round", 0))
         # Rounds are checkpointed per pouch round (not per stage, which
-        # would lose straggler rounds of the crashed stage) so the count
+        # would lose straggler rounds of a crashed stage) so the count
         # stays monotonic across revivals — CloudResult.pouches reads it.
         rounds = self.ts.try_read(("mstate", "rounds"))
         self.rounds = rounds[1] if rounds is not None else 0
-        return st["round"], st["stage_idx"]
+        fr = self.ts.try_read(("mstate", "frontier"))
+        if fr is not None:
+            self._base = int(fr[1].get("base", self._base))
+            self._completed = {(int(r), str(n))
+                               for r, n in fr[1].get("completed", [])}
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
             self.crash_event.clear()
             raise ManagerCrash()
 
+    # ----------------------------------------------------------- DAG access
+    def _names(self, rnd: int) -> list[str]:
+        names = self._names_cache.get(rnd)
+        if names is None:
+            names = list(self.program.stage_names(rnd))
+            self._names_cache[rnd] = names
+        return names
+
+    def _deps(self, rnd: int) -> dict[str, list[tuple[str, int]]]:
+        """Round ``rnd``'s deps, normalized to ``name -> [(name, round)]``
+        with every edge validated against the declaring rounds' stage
+        lists (a typo'd dep must fail loudly, not deadlock quietly)."""
+        cached = self._deps_cache.get(rnd)
+        if cached is not None:
+            return cached
+        names = self._names(rnd)
+        nameset = set(names)
+        raw = self.program.stage_deps(rnd)
+        unknown = set(raw) - nameset
+        if unknown:
+            raise ValueError(
+                f"stage_deps({rnd}) names unknown stages {sorted(unknown)}")
+        out: dict[str, list[tuple[str, int]]] = {}
+        for name in names:
+            edges: list[tuple[str, int]] = []
+            for dep in raw.get(name, ()):  # absent stage = no predecessors
+                if isinstance(dep, str):
+                    dname, delta = dep, 0
+                else:
+                    dname, delta = dep
+                    delta = int(delta)
+                if delta > 0:
+                    raise ValueError(
+                        f"stage_deps({rnd})[{name!r}]: dep {dname!r} has "
+                        f"delta {delta} — deps must point backwards")
+                if delta == 0 and dname == name:
+                    raise ValueError(
+                        f"stage_deps({rnd})[{name!r}] depends on itself")
+                drnd = rnd + delta
+                if drnd < 0:
+                    continue               # before round 0: satisfied
+                if delta != 0 and drnd < self._base:
+                    # Backward edge into an already-finished round: the
+                    # dep is permanently satisfied (base only advances),
+                    # so drop it — validating it would re-populate the
+                    # names cache for a round whose eviction already ran,
+                    # leaking one entry per round on long jobs.
+                    continue
+                dnames = nameset if delta == 0 else set(self._names(drnd))
+                if dname not in dnames:
+                    raise ValueError(
+                        f"stage_deps({rnd})[{name!r}]: dep {dname!r} not a "
+                        f"stage of round {drnd}")
+                edges.append((dname, drnd))
+            out[name] = edges
+        self._deps_cache[rnd] = out
+        return out
+
+    def _deps_met(self, rnd: int, name: str) -> bool:
+        for dname, drnd in self._deps(rnd)[name]:
+            if drnd < self._base:
+                continue                   # that round fully finished
+            if (drnd, dname) not in self._completed:
+                return False
+        return True
+
+    def _next_ready(self, n_rounds: int, overlap: int):
+        """Lowest-priority ``(rnd, name, order)`` whose deps are all
+        combined — deterministic, so ``max_inflight_stages=1`` replays
+        the sequential ``stage_names`` order exactly."""
+        for rnd in range(self._base, min(self._base + overlap, n_rounds)):
+            for order, name in enumerate(self._names(rnd)):
+                key = (rnd, name)
+                if key in self._completed or key in self._inflight:
+                    continue
+                if self._deps_met(rnd, name):
+                    return rnd, name, order
+        return None
+
     # ------------------------------------------------------------- dispatch
-    def _issue(self, tasks: list[TaskDesc]) -> None:
+    def _issue(self, tasks: list[TaskDesc]) -> list[str]:
         # The epoch prefix closes the revived-Manager collision window: a
         # fresh Manager restarts _task_seq at 0, and without the epoch a
         # re-minted tid would overwrite (put = replace) a distinct leftover
         # task tuple of the dead predecessor, losing that task until the
         # next timeout sweep. (The tid is already namespace-scoped when
         # self.ts is a ScopedSpace.)
-        items = []
+        items, tids = [], []
         for t in tasks:
             self._task_seq += 1
-            items.append(((("task", f"e{self.epoch}t{self._task_seq}")),
-                          t.to_wire()))
+            tid = f"e{self.epoch}t{self._task_seq}"
+            tids.append(tid)
+            items.append((("task", tid), t.to_wire()))
         self.ts.put_many(iter(items))
+        return tids
 
     def _pouch_size(self) -> int:
         return (self.pouch_ctl.pouch if self.cfg.adaptive_pouch
                 else self.cfg.pouch_size)
 
-    def _sweep_untaken(self) -> int:
-        return self.ts.delete(("task", ANY))
+    def _sweep_untaken(self, run: _StageRun | None = None) -> int:
+        """Remove task tuples nobody took before re-issuing stragglers.
+
+        With one stage in flight the whole (namespace-confined) task
+        subject is this stage's — one widened delete, as before PR 5.
+        With a frontier of several stages, sweep only the tids *this*
+        stage issued (a predicate on the tid field — still one delete
+        call), so a timing-out stage cannot yank a sibling's untaken
+        pouch out from under its barrier."""
+        if run is None or len(self._inflight) <= 1:
+            return self.ts.delete(("task", ANY))
+        tids = run.tids
+        return self.ts.delete(("task", lambda tid: tid in tids))
 
     @staticmethod
     def _stage_done_pattern(tasks: list[TaskDesc]) -> tuple:
         """Done-mark pattern covering every task of this stage: fields all
         tasks agree on are pinned, the rest are wildcards. Regular stages
         pin the whole (op, layer, data_id, step) prefix; non-regular
-        stages (e.g. per-expert tasks, one per ``layer``) stay pinned by
-        op + data_id + step, which no other stage of the round shares."""
+        stages (e.g. the MoE route stage spanning block slices) stay
+        pinned by op + data_id + step, which no other stage of the round
+        — nor the same stage of an overlapped round — shares."""
         heads = {(t.op, t.layer, t.data_id, t.step) for t in tasks}
         pinned = tuple(
             vals[0] if len(set(vals)) == 1 else ANY
             for vals in zip(*heads))
         return ("done",) + pinned + (ANY, ANY, ANY, ANY)
 
-    def _pending(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
+    def _pending(self, tasks: list[TaskDesc],
+                 pat: tuple | None = None) -> list[TaskDesc]:
         """Tasks (all from ONE stage) without a done mark. One ``keys()``
         scan over the stage pattern replaces the seed's N concrete
-        ``try_read`` calls per evaluation."""
+        ``try_read`` calls per evaluation. ``pat`` may supply the stage's
+        cached pattern (any superset pattern is correct — membership is
+        checked per exact content key)."""
         if not tasks:
             return []
-        done = set(self.ts.keys(self._stage_done_pattern(tasks)))
+        done = set(self.ts.keys(pat or self._stage_done_pattern(tasks)))
         return [t for t in tasks
                 if ("done",) + content_key(t) not in done]
 
-    def _finish_round(self, pouch: list[TaskDesc], still: list[TaskDesc],
-                      elapsed: float) -> None:
-        """Adapt the timeout, record history, sweep untaken task tuples."""
-        done_frac = 1.0 - len(still) / max(len(pouch), 1)
+    def _pending_polled(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
+        """Seed-style pending scan: one concrete try_read per task."""
+        return [t for t in tasks
+                if self.ts.try_read(("done",) + content_key(t)) is None]
+
+    def _scan_pending(self, tasks: list[TaskDesc],
+                      pat: tuple | None = None) -> list[TaskDesc]:
+        return (self._pending(tasks, pat) if self.cfg.scheduling == "event"
+                else self._pending_polled(tasks))
+
+    # ------------------------------------------------- pouch round lifecycle
+    def _start_pouch(self, run: _StageRun) -> None:
+        """Evaluate the stage; complete it, or issue its next pouch."""
+        pending = self._scan_pending(run.tasks, run.done_pat)
+        if not pending:
+            self._complete_stage(run)
+            return
+        pouch = pending[: self._pouch_size()]
+        run.tids.update(self._issue(pouch))
+        # Re-issues are tasks published a second time (timeout
+        # stragglers) — NOT later pouches of a stage wider than
+        # pouch_size, whose tasks are being published for the first time.
+        self.reissued += sum(
+            1 for t in pouch if content_key(t) in run.issued)
+        run.issued.update(content_key(t) for t in pouch)
+        # Barrier target: stage done-marks already present + this pouch.
+        # In-flight stragglers from a previous round are always at the
+        # front of `pending` (order is preserved), hence inside this
+        # pouch — the stage count cannot overshoot the target.
+        run.pouch = pouch
+        run.target = (len(run.tasks) - len(pending)) + len(pouch)
+        run.t0 = time.monotonic()
+        run.deadline = run.t0 + self.controller.timeout
+        run.waiting = True
+        run.met_early = False
+
+    def _finish_pouch(self, run: _StageRun, barrier_met: bool) -> None:
+        """One pouch round ended (barrier met or deadline): adapt the
+        timeout, record history, sweep, leave the stage re-evaluable."""
+        # A crash that landed during the final slice fires here — mid-
+        # frontier, resumed from the persisted frontier by the revived
+        # Manager.
+        self._maybe_crash()
+        elapsed = time.monotonic() - run.t0
+        # Barrier reached == stage count hit the target == every pouch
+        # task has its mark (the count cannot overshoot, see above) — no
+        # need to re-scan. Poll mode re-scans, as the baseline always did.
+        if barrier_met and self.cfg.scheduling == "event":
+            still: list[TaskDesc] = []
+        else:
+            still = self._scan_pending(run.pouch, run.done_pat)
+        done_frac = 1.0 - len(still) / max(len(run.pouch), 1)
         self.controller.update(not still, elapsed, done_frac)
         if self.cfg.adaptive_pouch:
             # Utilisation proxy: how full this pouch ran relative to the
             # controller's current size — a stage's last pouch is usually
             # a remainder and must not read as underutilisation.
             self.pouch_ctl.update(
-                not still, len(pouch) / max(self.pouch_ctl.pouch, 1))
+                not still, len(run.pouch) / max(self.pouch_ctl.pouch, 1))
         self.rounds += 1
         self.ts.delete(("mstate", "rounds"))
         self.ts.put(("mstate", "rounds"), self.rounds)
@@ -250,141 +469,180 @@ class Manager:
             if extra > 0:
                 for k in sorted(self.ts.keys(("thist", ANY, ANY)))[:extra]:
                     self.ts.delete(k)
-        # Sweep task tuples nobody took before re-issuing stragglers.
-        self._sweep_untaken()
+        self._sweep_untaken(run)
+        run.waiting = False
+        run.met_early = False
 
-    def _run_stage(self, tasks: list[TaskDesc]) -> None:
-        """Pouch-dispatch until every task in the stage has a done mark.
+    def _complete_stage(self, run: _StageRun) -> None:
+        """Every task of the stage has its mark: combine, advance the
+        frontier (running ``finish_round`` for each round whose stages
+        are all combined — rounds finish strictly in order), checkpoint."""
+        self._inflight.pop((run.rnd, run.name), None)
+        # Stage-boundary combine ("the Manager updates the relevant TS
+        # entries as a checkpoint", §5.3) — scoped to THIS stage's
+        # completion, wherever the rest of the frontier is.
+        self.program.combine(self.ts, run.rnd, run.name, self)
+        self._completed.add((run.rnd, run.name))
+        prog = self.program
+        n_rounds = prog.n_rounds()
+        while (self._base < n_rounds
+               and all((self._base, n) in self._completed
+                       for n in self._names(self._base))):
+            prog.finish_round(self.ts, self._base)
+            for n in self._names(self._base):
+                self._completed.discard((self._base, n))
+            self._names_cache.pop(self._base, None)
+            self._deps_cache.pop(self._base, None)
+            self._base += 1
+        self._checkpoint()
 
-        Event mode (default): one blocking ``wait_count`` on the stage's
-        done-mark count per pouch, with the GSS timeout as the deadline —
-        the Manager wakes on each completion arrival, not on a cadence.
-        """
-        if self.cfg.scheduling == "poll":
-            return self._run_stage_poll(tasks)
-        if not tasks:
+    # -------------------------------------------------------- the scheduler
+    def _priority(self) -> list[_StageRun]:
+        return sorted(self._inflight.values(),
+                      key=lambda r: (r.rnd, r.order))
+
+    def _launch_ready(self, n_rounds: int) -> bool:
+        """Fill the frontier with ready stages (deps combined), lowest
+        ``(round, stage_names order)`` first. Zero-task stages are pure
+        combine barriers — completed inline, never occupying a slot."""
+        launched = False
+        overlap = max(1, int(self.program.round_overlap()))
+        while len(self._inflight) < self.cfg.max_inflight_stages:
+            nxt = self._next_ready(n_rounds, overlap)
+            if nxt is None:
+                break
+            rnd, name, order = nxt
+            tasks: list[TaskDesc] = []
+            for proto in self.program.stage_tasks(self.ts, rnd, name):
+                tasks.extend(
+                    self.program.registry.partition(proto, self.cfg.task_cap))
+            run = _StageRun(rnd=rnd, name=name, order=order, tasks=tasks)
+            launched = True
+            if not tasks:
+                self._complete_stage(run)
+                continue
+            run.done_pat = self._stage_done_pattern(tasks)
+            self._inflight[(rnd, name)] = run
+        return launched
+
+    def _event_tick(self) -> None:
+        """Multiplex the in-flight blocking barriers: close any barrier
+        already met, evaluate any stage past its GSS deadline, else park
+        on one stage's pattern (rotating) for a slice of
+        ``barrier_quantum`` — a completion arrival on that stage ends the
+        wait immediately; a sibling's completion is noticed within one
+        slice. With one stage in flight this is op-for-op the pre-PR-5
+        sliced barrier (no extra counts on the fast path)."""
+        runs = [r for r in self._priority() if r.waiting]
+        if not runs:
             return
-        done_pat = self._stage_done_pattern(tasks)
-        total = len(tasks)
-        issued_keys: set[tuple] = set()
-        while not self.stop_event.is_set():
-            self._maybe_crash()
-            pending = self._pending(tasks)
-            if not pending:
-                return
-            pouch = pending[: self._pouch_size()]
-            self._issue(pouch)
-            # Re-issues are tasks published a second time (timeout
-            # stragglers) — NOT later pouches of a stage wider than
-            # pouch_size, whose tasks are being published for the first
-            # time.
-            self.reissued += sum(
-                1 for t in pouch if content_key(t) in issued_keys)
-            issued_keys.update(content_key(t) for t in pouch)
-            # Barrier target: stage done-marks already present + this
-            # pouch. In-flight stragglers from a previous round are always
-            # at the front of `pending` (order is preserved), hence inside
-            # this pouch — the stage count cannot overshoot the target.
-            target = (total - len(pending)) + len(pouch)
-            timeout = self.controller.timeout
-            t0 = time.monotonic()
-            deadline = t0 + timeout
-            # Blocking barrier, sliced at barrier_quantum: a completion
-            # arrival ends the wait immediately (event), while a crash
-            # injected mid-wait fires within one quantum instead of
-            # lingering until the (possibly tens-of-seconds) GSS deadline
-            # — that lingering would stall recovery, since lost in-flight
-            # tasks are only re-issued by a fresh round.
-            barrier_met = False
-            while not self.stop_event.is_set():
-                self._maybe_crash()
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    break                 # deadline: evaluate what landed
-                try:
-                    self.ts.wait_count(
-                        done_pat, target,
-                        timeout=min(remaining, self.cfg.barrier_quantum))
-                    barrier_met = True
-                    break
-                except TSTimeout:
-                    continue
-            if self.cfg.strict_timeout:
-                rest = deadline - time.monotonic()
-                if rest > 0:
-                    self.stop_event.wait(rest)
-            # A crash that landed during the final slice fires here —
-            # mid-pouch, resumed from the cursor by the revived Manager.
-            self._maybe_crash()
-            elapsed = time.monotonic() - t0
-            # Barrier reached == stage count hit the target == every pouch
-            # task has its mark (the count cannot overshoot, see above) —
-            # no need to re-scan.
-            still = [] if barrier_met else self._pending(pouch)
-            self._finish_round(pouch, still, elapsed)
+        now = time.monotonic()
+        if len(runs) > 1:
+            # We can only park on one pattern — close already-met sibling
+            # barriers non-blockingly first so no completion waits a slice.
+            for run in runs:
+                if (not run.met_early
+                        and self.ts.count(run.done_pat) >= run.target):
+                    if self.cfg.strict_timeout:
+                        run.met_early = True
+                    else:
+                        return self._finish_pouch(run, barrier_met=True)
+        for run in runs:
+            if now >= run.deadline:
+                return self._finish_pouch(run, barrier_met=run.met_early)
+        candidates = [r for r in runs if not r.met_early]
+        horizon = min(r.deadline for r in runs) - now
+        if not candidates:
+            # strict_timeout with every open barrier met: sleep out the
+            # nearest deadline (the paper's "always wait the timeout").
+            self.stop_event.wait(min(horizon, self.cfg.barrier_quantum))
+            return
+        run = candidates[self._wait_rr % len(candidates)]
+        self._wait_rr += 1
+        park = min(horizon, self.cfg.barrier_quantum / len(candidates))
+        try:
+            self.ts.wait_count(run.done_pat, run.target,
+                               timeout=max(park, 1e-4))
+        except TSTimeout:
+            return
+        if self.cfg.strict_timeout:
+            run.met_early = True
+        else:
+            self._finish_pouch(run, barrier_met=True)
 
-    def _run_stage_poll(self, tasks: list[TaskDesc]) -> None:
-        """The pre-PR-2 fixed-cadence loop (``poll_quantum`` re-scans) —
-        the measured baseline for ``benchmarks/sched_bench.py``."""
-        issued_keys: set[tuple] = set()
-        while not self.stop_event.is_set():
-            self._maybe_crash()
-            pending = self._pending_polled(tasks)
-            if not pending:
+    def _poll_tick(self) -> None:
+        """The fixed-cadence baseline: sleep one ``poll_quantum``, then
+        re-scan each in-flight pouch (one concrete try_read per task, as
+        the seed loop did) and evaluate the first stage that completed or
+        timed out."""
+        time.sleep(self.cfg.poll_quantum)
+        self._maybe_crash()
+        now = time.monotonic()
+        for run in self._priority():
+            if not run.waiting:
+                continue
+            still = self._pending_polled(run.pouch)
+            if (not still and not self.cfg.strict_timeout) \
+                    or now >= run.deadline:
+                self._finish_pouch(run, barrier_met=False)
                 return
-            pouch = pending[: self._pouch_size()]
-            self._issue(pouch)
-            self.reissued += sum(
-                1 for t in pouch if content_key(t) in issued_keys)
-            issued_keys.update(content_key(t) for t in pouch)
-            timeout = self.controller.timeout
-            t0 = time.monotonic()
-            while True:
-                self._maybe_crash()
-                time.sleep(self.cfg.poll_quantum)
-                elapsed = time.monotonic() - t0
-                still = self._pending_polled(pouch)
-                if not still and not self.cfg.strict_timeout:
-                    break
-                if elapsed >= timeout:
-                    break
-            elapsed = time.monotonic() - t0
-            self._finish_round(pouch, self._pending_polled(pouch), elapsed)
-
-    def _pending_polled(self, tasks: list[TaskDesc]) -> list[TaskDesc]:
-        """Seed-style pending scan: one concrete try_read per task."""
-        return [t for t in tasks
-                if self.ts.try_read(("done",) + content_key(t)) is None]
 
     # ------------------------------------------------------------------ run
     def run(self) -> None:
         prog = self.program
         prog.setup(self.ts)
         self._bump_epoch()
-        r0, s0 = self._load_cursor()
-        for rnd in range(r0, prog.n_rounds()):
+        self._load_frontier()
+        n_rounds = prog.n_rounds()
+        self._inflight = {}
+        # Reclaim every untaken task tuple of dead predecessor epochs up
+        # front (nothing of OUR epoch is issued yet, and the subject is
+        # namespace-confined). The per-stage sweeps below are scoped to
+        # each stage's own tids whenever the frontier holds siblings, so
+        # without this a predecessor's orphans could outlive the whole
+        # job and be executed arbitrarily late.
+        self._sweep_untaken()
+        # The frontier (possibly just-loaded) must be visible before the
+        # first barrier parks: a crash inside the very first pouch wait
+        # still finds a resume point in TS.
+        self._checkpoint()
+        while not self.stop_event.is_set():
+            self._maybe_crash()
+            if self._base >= n_rounds and not self._inflight:
+                break
+            launched = self._launch_ready(n_rounds)
+            if not self._inflight:
+                if self._base >= n_rounds:
+                    break
+                if launched:
+                    continue           # inline-completed stages moved us
+                raise RuntimeError(
+                    f"stage-DAG deadlock: round {self._base} has no ready "
+                    f"stage (completed={sorted(self._completed)}) — check "
+                    f"{type(prog).__name__}.stage_deps for a cycle")
+            # Re-evaluate stages whose pouch round ended: complete them or
+            # issue the next pouch. A completion can unblock dependents —
+            # return to the launch loop before blocking again.
+            progressed = False
+            for run in self._priority():
+                if not run.waiting:
+                    self._start_pouch(run)
+                    if (run.rnd, run.name) not in self._inflight:
+                        progressed = True
+                        break
+            if progressed:
+                continue
             if self.stop_event.is_set():
+                # Frontier aborted (wall limit / shutdown): combining
+                # partial results would record bogus state (e.g. a loss
+                # scatter-added from the few tiles that landed). The
+                # frontier still omits the in-flight stages, so a revived
+                # Manager redoes them from the done marks.
                 return
-            names = prog.stage_names(rnd)
-            st0 = s0 if rnd == r0 else 0
-            for stage_idx in range(st0, len(names)):
-                name = names[stage_idx]
-                self._checkpoint_cursor(rnd, stage_idx)
-                tasks: list[TaskDesc] = []
-                for proto in prog.stage_tasks(self.ts, rnd, name):
-                    tasks.extend(
-                        prog.registry.partition(proto, self.cfg.task_cap))
-                self._run_stage(tasks)
-                if self.stop_event.is_set():
-                    # Stage aborted (wall limit / shutdown): combining
-                    # partial results would record bogus state (e.g. a
-                    # loss scatter-added from the few tiles that landed).
-                    # The cursor still points at this stage, so a revived
-                    # Manager redoes it from the done marks.
-                    return
-                # Stage-boundary combine ("the Manager updates the
-                # relevant TS entries as a checkpoint", §5.3).
-                prog.combine(self.ts, rnd, name, self)
-            prog.finish_round(self.ts, rnd)
-            self._checkpoint_cursor(rnd + 1, 0)
+            if self.cfg.scheduling == "poll":
+                self._poll_tick()
+            else:
+                self._event_tick()
+        if self.stop_event.is_set():
+            return
         self.ts.put(("mstate", "finished"), True)

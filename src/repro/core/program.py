@@ -21,11 +21,19 @@ This module is the split point:
   output (the MoE routing program derives expert tasks from routing
   decisions — irregular task sizes on the same plane).
 
-The generic :class:`~repro.core.manager.Manager` walks the program's
-rounds/stages with the paper's pouch/timeout/barrier discipline,
-checkpointing a ``(round, stage)`` cursor into TS so a revived Manager
-resumes from TS state alone. Everything a program writes must therefore
-be either idempotent or guarded by the Manager's §5.4 commit window.
+The generic :class:`~repro.core.manager.Manager` schedules the
+program's stages as a **dependency DAG** (PR 5): ``stage_deps`` names
+each stage's predecessors (defaulting to a linear chain over
+``stage_names``, so every pre-DAG program is source-compatible), and
+the Manager's frontier scheduler keeps up to
+``ManagerConfig.max_inflight_stages`` independent stages in flight —
+including stages of *consecutive rounds* when the program opts in via
+``round_overlap`` — each driven by the paper's pouch/timeout/barrier
+discipline. The completed-stage frontier is checkpointed into TS
+(``("mstate", "frontier")``) so a revived Manager resumes the exact
+frontier from TS state alone. Everything a program writes must
+therefore be either idempotent or guarded by the Manager's §5.4 commit
+window.
 
 Built-in programs: :mod:`repro.programs.mlp` (the paper §6 workload),
 :mod:`repro.programs.jax_sgd` (real JAX training), and
@@ -163,10 +171,20 @@ class WorkloadProgram(abc.ABC):
     - ``setup`` must be **idempotent** — a revived Manager calls it again;
     - ``stage_tasks`` must be a pure function of ``(ts, round, stage)``
       — it may read TS (data-dependent stages) but only state produced
-      by *earlier, combined* stages of the same round or committed
+      by *combined predecessor* stages (per ``stage_deps``) or committed
       earlier rounds;
     - ``combine`` must be idempotent or guarded by ``mgr.window`` (the
-      §5.4 sliding commit window) — it can run twice around a crash;
+      §5.4 sliding commit window) — it can run twice around a crash.
+      Under the frontier scheduler it fires on *that stage's*
+      completion, possibly while other stages (even of the next round)
+      are still in flight — it must only touch state its own stage and
+      its declared predecessors own;
+    - ``stage_deps`` must name every true data dependency: the frontier
+      scheduler runs any two stages with no dependency path between
+      them **concurrently**. A program that declares
+      ``round_overlap() > 1`` additionally guarantees that
+      ``finish_round(r)`` cleanup cannot clobber keys still read by
+      rounds ``> r`` that its cross-round deps admit in flight;
     - every op a program issues must be resolvable in ``self.registry``.
     """
 
@@ -190,11 +208,44 @@ class WorkloadProgram(abc.ABC):
 
     @abc.abstractmethod
     def stage_names(self, rnd: int) -> list[str]:
-        """Dependency-ordered stage names for round ``rnd``."""
+        """Dependency-ordered stage names for round ``rnd``. Order is the
+        frontier scheduler's deterministic tie-break among ready stages
+        (and the sequential execution order at
+        ``max_inflight_stages=1``)."""
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        """The stage-dependency DAG for round ``rnd``: stage name → list
+        of predecessors. A predecessor is either a stage name of the
+        *same* round, or a ``(name, delta)`` pair with ``delta <= 0``
+        naming a stage of round ``rnd + delta`` (cross-round pipelining;
+        deps reaching before round 0 are trivially satisfied). A stage
+        absent from the mapping has no predecessors.
+
+        Default: the linear chain over ``stage_names(rnd)`` — exactly
+        the pre-DAG sequential contract, so existing programs are
+        source-compatible and (with a pure chain) bit-identical.
+        """
+        names = self.stage_names(rnd)
+        return {name: ([names[i - 1]] if i else [])
+                for i, name in enumerate(names)}
+
+    def round_overlap(self) -> int:
+        """How many consecutive rounds the frontier scheduler may hold
+        open at once (1 = strict round-at-a-time, the default). A
+        program returning ``k > 1`` promises that its ``stage_deps``
+        cross-round entries express every inter-round hazard for rounds
+        up to ``k - 1`` apart — including ``finish_round`` cleanup (the
+        MLP program, whose cleanup is per ``data_id = rnd % n_samples``,
+        only overlaps when ``n_samples >= 2``)."""
+        return 1
 
     @abc.abstractmethod
     def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
-        """Prototype tasks of one stage (pre-partition). May read TS."""
+        """Prototype tasks of one stage (pre-partition). May read TS.
+        An empty list is a **pure combine barrier**: the stage completes
+        immediately and only its ``combine`` hook runs (the MoE program
+        uses one to fuse per-expert forward results into the shared
+        ``dy``)."""
 
     def combine(self, ts, rnd: int, stage: str, mgr: "Manager") -> None:
         """Stage-boundary combine/commit hook ("the Manager updates the

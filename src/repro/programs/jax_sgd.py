@@ -99,6 +99,14 @@ class JAXSGDProgram(WorkloadProgram):
     def stage_names(self, rnd: int) -> list[str]:
         return ["grad"]
 
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        # The true dependency is a pure chain: the grad op reads
+        # ("params", step), which only exists once the previous round's
+        # combine committed it — there is nothing for a frontier
+        # scheduler to overlap (synchronous SGD), and declaring the edge
+        # keeps that explicit rather than an accident of the default.
+        return {"grad": [("grad", -1)]}
+
     def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
         return [TaskDesc(JAXGRAD, 0, rnd, rnd, 0, 0, m, m + 1)
                 for m in range(self.n_micro)]

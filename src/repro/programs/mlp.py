@@ -15,9 +15,15 @@ fixed-size** tasks so pouch/timeout tuning is handler-agnostic
 
 One round = one training sample at one SGD step (``data_id = round %
 n_samples``, ``step = round``); the stage graph is the sample's forward
-→ loss → backward → update pipeline. The stage-boundary combines and
-the §5.4 exactly-once parameter commit moved here verbatim from the
-pre-PR-3 Manager — the loss trajectory is bit-identical.
+→ loss → backward → update pipeline, declared since PR 5 as the *real*
+dependency DAG (:func:`stage_dag`): each ``fwd_l`` depends on the
+previous layer's activation **and, across rounds, on the previous
+sample's ``upd_l`` commit** — so a pipelined Manager overlaps round
+*k*'s update sweep with round *k+1*'s forward pass while every stage
+still reads exactly the tuples the sequential order gave it (the loss
+trajectory stays bit-identical at any ``max_inflight_stages``). The
+stage-boundary combines and the §5.4 exactly-once parameter commit
+moved here verbatim from the pre-PR-3 Manager.
 
 TS data-plane key conventions (all per training *sample*, since the
 paper uses SGD with batch size 1). Under a multi-tenant cloud the
@@ -132,6 +138,40 @@ def stage_order(n_layers: int) -> list[str]:
     for l in range(n_layers):
         order.append(f"upd_{l}")
     return order
+
+
+def stage_dag(n_layers: int) -> dict[str, list]:
+    """The *real* dependency DAG of one sample's pipeline (PR 5) — what
+    each stage actually reads, not the linear order it used to run in:
+
+    - ``fwd_l`` reads layer ``l``'s committed weights — i.e. the
+      **previous round's** ``upd_l`` commit — plus the previous layer's
+      combined activation (``act_{l-1}``);
+    - ``act_l`` reads ``fwd_l``'s combined pre-activation;
+    - ``loss`` reads the last layer's pre-activation;
+    - ``bwd_l`` reads ``dy_l`` (from ``loss`` for the head, else from
+      ``bwd_{l+1}``'s combine) plus this round's forward state;
+    - ``upd_l`` reads ``bwd_l``'s combined gradients.
+
+    Crucially, ``upd_l`` of sample *k* is **independent** of sample
+    *k+1*'s ``fwd_{l'}`` for every ``l' != l``: the frontier scheduler
+    overlaps the tail of round *k*'s update sweep with the head of round
+    *k+1*'s forward pass, and the trajectory stays bit-identical — every
+    ``fwd_l`` still sees exactly the version-*k+1* weights, because its
+    cross-round edge pins ``upd_l`` of round *k*."""
+    deps: dict[str, list] = {}
+    for l in range(n_layers):
+        d: list = [f"act_{l - 1}"] if l > 0 else []
+        d.append((f"upd_{l}", -1))
+        deps[f"fwd_{l}"] = d
+        if l < n_layers - 1:
+            deps[f"act_{l}"] = [f"fwd_{l}"]
+    deps["loss"] = [f"fwd_{n_layers - 1}"]
+    for l in reversed(range(n_layers)):
+        deps[f"bwd_{l}"] = ["loss"] if l == n_layers - 1 else [f"bwd_{l + 1}"]
+    for l in range(n_layers):
+        deps[f"upd_{l}"] = [f"bwd_{l}"]
+    return deps
 
 
 # --------------------------------------------------------------------------
@@ -314,6 +354,7 @@ class MLPProgram(WorkloadProgram):
         self.data_noise = data_noise
         self.make_data = make_data
         self._order = stage_order(len(self.layers))
+        self._dag = stage_dag(len(self.layers))
 
     # ---------------------------------------------------------------- setup
     def setup(self, ts) -> None:
@@ -340,6 +381,15 @@ class MLPProgram(WorkloadProgram):
 
     def stage_names(self, rnd: int) -> list[str]:
         return self._order
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        return self._dag
+
+    def round_overlap(self) -> int:
+        # finish_round cleanup is keyed by data_id = rnd % n_samples, so
+        # two adjacent rounds only have disjoint partials/done marks when
+        # the dataset has at least two samples.
+        return 2 if self.n_samples >= 2 else 1
 
     def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
         data_id = rnd % self.n_samples

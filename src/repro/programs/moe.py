@@ -12,18 +12,34 @@ GSS timeout adaptation, and the multi-size tasks exercise partitioning
 and the Handler capability ("store") path, all on the *same*
 Manager/Handler plane as the paper's MLP.
 
-Stage graph per round (minibatch)::
+Stage DAG per round (minibatch) — **per-expert stages** since PR 5::
 
-    route   — regular:  one task per token block, computes top-k + gates
-    expert  — IRREGULAR: one prototype task per expert with ≥1 routed
-              token, sized by that expert's data-dependent dispatch list
-    grad    — IRREGULAR: same shape; expert weight gradients
+    route                       — regular: one task per token block,
+      |                           computes top-k + gates; depends on
+      |                           NOTHING of the previous round (the
+      |                           router is frozen), so round k+1's
+      |                           routing overlaps round k's tail
+    expert_0 ... expert_{E-1}   — IRREGULAR, mutually INDEPENDENT: one
+      |                           stage per expert with ≥1 routed token,
+      |                           sized by its data-dependent dispatch
+      |                           list; expert_e of round k+1 depends
+      |                           only on grad_e of round k (its own
+      |                           weight commit)
+    dy                          — a zero-task pure COMBINE BARRIER:
+      |                           scatter-adds the gate-weighted expert
+      |                           outputs into the shared loss + dY
+    grad_0 ... grad_{E-1}       — IRREGULAR, mutually INDEPENDENT:
+                                  expert weight gradients; each commits
+                                  its own expert's SGD update exactly
+                                  once per (expert, round) through the
+                                  §5.4 window
 
-Combines: ``route`` → per-expert dispatch lists; ``expert`` → scatter-add
-the gate-weighted expert outputs, loss + dY; ``grad`` → sum partials and
-commit the SGD update exactly once per (expert, round) through the §5.4
-window. The router stays frozen (the teacher shares it), so the loss
-decreases as the experts learn the teacher mixture.
+Under a sequential Manager (``max_inflight_stages=1``) the DAG executes
+in ``stage_names`` order; a pipelined Manager runs the per-expert
+stages concurrently and overlaps adjacent rounds — same combines, same
+trajectory (``benchmarks/sched_bench.py``'s "pipeline" row gates the
+makespan win). The router stays frozen (the teacher shares it), so the
+loss decreases as the experts learn the teacher mixture.
 
 TS data-plane key conventions (all per *round* — one minibatch; under a
 multi-tenant cloud every subject is scoped to ``moe_routing::<subject>``
@@ -242,37 +258,66 @@ class MoERoutingProgram(WorkloadProgram):
         return self.steps
 
     def stage_names(self, rnd: int) -> list[str]:
-        return ["route", "expert", "grad"]
+        return (["route"]
+                + [f"expert_{e}" for e in range(self.E)]
+                + ["dy"]
+                + [f"grad_{e}" for e in range(self.E)])
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        deps: dict[str, list] = {"route": []}   # frozen router: no deps
+        for e in range(self.E):
+            # expert_e needs this round's dispatch AND its own expert's
+            # previous-round weight commit — nothing from sibling experts.
+            deps[f"expert_{e}"] = ["route", (f"grad_{e}", -1)]
+        deps["dy"] = [f"expert_{e}" for e in range(self.E)]
+        for e in range(self.E):
+            deps[f"grad_{e}"] = ["dy"]
+        return deps
+
+    def round_overlap(self) -> int:
+        # Every data-plane key is rnd-keyed, so adjacent rounds are
+        # disjoint by construction; the cross-round expert_e -> grad_e
+        # edges express the only true inter-round hazard.
+        return 2
 
     def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
         if stage == "route":
             return [TaskDesc(ROUTE, 0, rnd, rnd, 0, 0,
                              lo, min(lo + self.block, self.B))
                     for lo in range(0, self.B, self.block)]
-        # expert / grad: one prototype per expert, sized by its dispatch
+        if stage == "dy":
+            return []                    # pure combine barrier
+        # expert_e / grad_e: one prototype sized by expert e's dispatch
         # list — DATA-DEPENDENT (read from TS, written by the route
-        # combine; a revived Manager re-derives identical tasks).
-        op = EXPERT_FWD if stage == "expert" else EXPERT_GRAD
-        tasks = []
-        for e in range(self.E):
-            hit = ts.try_read(("disp", rnd, e))
-            if hit is None:
-                raise RuntimeError(
-                    f"dispatch for expert {e} missing in round {rnd} — "
-                    f"stage {stage!r} scheduled before route combined")
-            n_e = len(hit[1]["ids"])
-            if n_e:
-                tasks.append(TaskDesc(op, e, rnd, rnd, 0, 0, 0, n_e))
-        return tasks
+        # combine; a revived Manager re-derives identical tasks). An
+        # expert nothing routed to this round is an empty stage.
+        kind, _, e_s = stage.partition("_")
+        op = EXPERT_FWD if kind == "expert" else EXPERT_GRAD
+        e = int(e_s)
+        hit = ts.try_read(("disp", rnd, e))
+        if hit is None:
+            raise RuntimeError(
+                f"dispatch for expert {e} missing in round {rnd} — "
+                f"stage {stage!r} scheduled before route combined")
+        n_e = len(hit[1]["ids"])
+        return [TaskDesc(op, e, rnd, rnd, 0, 0, 0, n_e)] if n_e else []
+
+    def expert_stage_tasks(self, ts, rnd: int) -> list[TaskDesc]:
+        """All per-expert forward prototypes of one round (the pre-PR-5
+        single 'expert' stage) — the irregularity probe's unit."""
+        return [t for e in range(self.E)
+                for t in self.stage_tasks(ts, rnd, f"expert_{e}")]
 
     # -------------------------------------------------------------- combine
     def combine(self, ts, rnd: int, stage: str, mgr) -> None:
         if stage == "route":
             self._combine_route(ts, rnd)
-        elif stage == "expert":
+        elif stage == "dy":
             self._combine_expert(ts, rnd, mgr.cfg.history_limit)
-        elif stage == "grad":
-            self._commit_experts(ts, rnd, mgr.window)
+        elif stage.startswith("grad_"):
+            self._commit_expert(ts, rnd, int(stage[5:]), mgr.window)
+        # expert_<e>: nothing to combine — the dy barrier fuses the
+        # per-expert forward partials once every expert stage closed.
 
     def _combine_route(self, ts, rnd: int) -> None:
         if ts.try_read(("disp", rnd, 0)) is not None:
@@ -316,33 +361,35 @@ class MoERoutingProgram(WorkloadProgram):
         record_loss(ts, rnd, loss, history_limit)
         ts.put(("dy", rnd), (2.0 * diff / denom).astype(np.float32))
 
-    def _commit_experts(self, ts, rnd: int, window) -> None:
-        """Sum gradient partials and SGD-update each routed expert exactly
-        once per (expert, round) — the §5.4 window keyed by expert."""
-        for e in range(self.E):
-            hit = ts.try_read(("disp", rnd, e))
-            if hit is None or len(hit[1]["ids"]) == 0:
-                continue
-            if not window.can_commit(e, rnd):
-                continue
-            n_e = len(hit[1]["ids"])
-            k1 = ts.keys(("gw1", rnd, e, ANY, ANY))
-            if not tiles_cover([(k[3], k[4]) for k in k1], 0, n_e):
-                continue
-            gW1 = np.zeros((self.d_h, self.d_in), dtype=np.float32)
-            for k in sorted(k1):
-                gW1 += ts.try_read(k)[1]
-            gW2 = np.zeros((self.d_out, self.d_h), dtype=np.float32)
-            for k in sorted(ts.keys(("gw2", rnd, e, ANY, ANY))):
-                gW2 += ts.try_read(k)[1]
-            W1 = ts.try_read(("we1", e))[1] - self.lr * gW1
-            W2 = ts.try_read(("we2", e))[1] - self.lr * gW2
-            if window.commit(e, rnd):
-                ts.delete(("we1", e)); ts.put(("we1", e), W1.astype(np.float32))
-                ts.delete(("we2", e)); ts.put(("we2", e), W2.astype(np.float32))
-                ver = ts.try_read(("wever", e))
-                ts.delete(("wever", e))
-                ts.put(("wever", e), (ver[1] if ver else 0) + 1)
+    def _commit_expert(self, ts, rnd: int, e: int, window) -> None:
+        """Sum expert ``e``'s gradient partials and SGD-update it exactly
+        once per (expert, round) — the §5.4 window keyed by expert. Runs
+        in ``grad_<e>``'s combine, so a pipelined Manager commits each
+        expert the moment its own grad stage closes, independent of
+        sibling experts still in flight."""
+        hit = ts.try_read(("disp", rnd, e))
+        if hit is None or len(hit[1]["ids"]) == 0:
+            return
+        if not window.can_commit(e, rnd):
+            return
+        n_e = len(hit[1]["ids"])
+        k1 = ts.keys(("gw1", rnd, e, ANY, ANY))
+        if not tiles_cover([(k[3], k[4]) for k in k1], 0, n_e):
+            return
+        gW1 = np.zeros((self.d_h, self.d_in), dtype=np.float32)
+        for k in sorted(k1):
+            gW1 += ts.try_read(k)[1]
+        gW2 = np.zeros((self.d_out, self.d_h), dtype=np.float32)
+        for k in sorted(ts.keys(("gw2", rnd, e, ANY, ANY))):
+            gW2 += ts.try_read(k)[1]
+        W1 = ts.try_read(("we1", e))[1] - self.lr * gW1
+        W2 = ts.try_read(("we2", e))[1] - self.lr * gW2
+        if window.commit(e, rnd):
+            ts.delete(("we1", e)); ts.put(("we1", e), W1.astype(np.float32))
+            ts.delete(("we2", e)); ts.put(("we2", e), W2.astype(np.float32))
+            ver = ts.try_read(("wever", e))
+            ts.delete(("wever", e))
+            ts.put(("wever", e), (ver[1] if ver else 0) + 1)
 
     # ------------------------------------------------------------ probing
     def probe_expert_tasks(self, rnd: int = 0) -> list[TaskDesc]:
@@ -358,7 +405,7 @@ class MoERoutingProgram(WorkloadProgram):
         # The route combine touches neither the commit window nor the
         # manager config, so no Manager is needed here.
         self._combine_route(ts, rnd)
-        return self.stage_tasks(ts, rnd, "expert")
+        return self.expert_stage_tasks(ts, rnd)
 
     # -------------------------------------------------------------- cleanup
     def finish_round(self, ts, rnd: int) -> None:

@@ -187,3 +187,91 @@ def test_daemon_run_fires_on_interval_and_stops():
     assert d.handler_revivals >= 1
     assert len(d.power_log) > 0
     assert all(np.isfinite(p) for _, p in d.power_log)
+
+
+# ------------------------------------------------- per-tenant fault plans
+def _tenant_daemon(shared: FaultPlan, plans: dict, n: int = 2,
+                   namespaces=("a", "b")) -> MonitorDaemon:
+    return MonitorDaemon(
+        plan=shared,
+        plans=plans,
+        namespaces=list(namespaces),
+        manager_crashes=[threading.Event() for _ in range(n)],
+        handler_crashes=[threading.Event()],
+        speed_boxes=[SpeedBox(1.0)],
+        make_manager_threads=lambda i: _live_thread(),
+        make_handler_thread=lambda i: _live_thread(),
+    )
+
+
+def test_tenant_plan_exempts_manager_from_shared_crash_draw():
+    """A tenant with its own plan is crashed only by its own plan: the
+    shared p=1.0 draw fires every *other* Manager, and the tenant's own
+    p=0.0 plan never fires it."""
+    d = _tenant_daemon(FaultPlan(p_manager_crash=1.0, seed=0),
+                       {"a": FaultPlan(p_manager_crash=0.0, seed=9)})
+    d._fire_faults()
+    assert not d.manager_crashes[0].is_set()        # tenant a: own plan
+    assert d.manager_crashes[1].is_set()            # tenant b: shared plan
+    assert d.manager_crash_firings_by == [0, 1]
+    d._fire_tenant_faults(0)                        # a's own p=0.0 draw
+    assert not d.manager_crashes[0].is_set()
+    assert d.manager_crash_firings_by == [0, 1]
+
+
+def test_tenant_plan_fires_independently_with_own_seed():
+    d = _tenant_daemon(FaultPlan(p_manager_crash=0.0, seed=0),
+                       {"a": FaultPlan(p_manager_crash=1.0, seed=7)})
+    d._fire_faults()                                # shared plan: nothing
+    assert not any(ev.is_set() for ev in d.manager_crashes)
+    d._fire_tenant_faults(0)
+    assert d.manager_crashes[0].is_set()
+    assert not d.manager_crashes[1].is_set()
+    assert d.manager_crash_firings_by == [1, 0]
+    # tenants without their own plan have no tenant stream at all
+    d._fire_tenant_faults(1)
+    assert not d.manager_crashes[1].is_set()
+
+
+def test_tenant_plan_seed_gives_independent_stream():
+    """Two tenants with identical p=0.5 plans but different seeds must
+    draw independently — same-seed tenants fire in lockstep."""
+    fired = {"same": 0, "diff": 0}
+    for trial in range(100):
+        d_same = _tenant_daemon(
+            FaultPlan(), {"a": FaultPlan(p_manager_crash=0.5, seed=trial),
+                          "b": FaultPlan(p_manager_crash=0.5, seed=trial)})
+        d_same._fire_tenant_faults(0)
+        d_same._fire_tenant_faults(1)
+        fired["same"] += (d_same.manager_crashes[0].is_set()
+                          == d_same.manager_crashes[1].is_set())
+        d_diff = _tenant_daemon(
+            FaultPlan(), {"a": FaultPlan(p_manager_crash=0.5, seed=trial),
+                          "b": FaultPlan(p_manager_crash=0.5,
+                                         seed=trial + 5000)})
+        d_diff._fire_tenant_faults(0)
+        d_diff._fire_tenant_faults(1)
+        fired["diff"] += (d_diff.manager_crashes[0].is_set()
+                          == d_diff.manager_crashes[1].is_set())
+    assert fired["same"] == 100                     # lockstep
+    assert 25 < fired["diff"] < 75                  # independent draws
+
+
+def test_daemon_run_fires_tenant_plans_on_their_own_interval():
+    """End-to-end loop: tenant a's 30 ms p=1.0 plan fires repeatedly
+    while the shared plan (astronomical interval) never does — so only
+    tenant a's Manager accumulates crash firings."""
+    d = _tenant_daemon(FaultPlan(interval=1e9, p_manager_crash=1.0, seed=0),
+                       {"a": FaultPlan(interval=0.03, p_manager_crash=1.0,
+                                       seed=3)})
+    d.attach([_live_thread(), _live_thread()], [_live_thread()])
+    th = threading.Thread(target=d.run, daemon=True)
+    th.start()
+    threading.Event().wait(0.3)
+    d.stop_event.set()
+    th.join(timeout=2.0)
+    assert not th.is_alive()
+    assert d.manager_crash_firings_by[0] >= 2
+    assert d.manager_crash_firings_by[1] == 0
+    assert d.manager_crashes[0].is_set()
+    assert not d.manager_crashes[1].is_set()

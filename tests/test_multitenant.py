@@ -390,3 +390,48 @@ def test_adaptive_pouch_grows_and_shrinks_and_persists():
     assert len(res.loss_history) == 4
     cursor = cloud.spaces[0].try_read(("mstate", "cursor"))[1]
     assert cursor["pouch"] >= 1                   # persisted for revival
+
+
+def test_per_tenant_fault_plans_crash_only_the_planned_tenant():
+    """CloudConfig.fault_plans: tenant-scoped crash plans ride the same
+    daemon — only the MoE tenant's Manager is crashed (on its own
+    seed/interval), the MLP tenant runs fault-free and stays
+    bit-identical to the single-tenant reference, and the firing stats
+    are accounted per tenant."""
+    single = ACANCloud(_base()).run()
+    ref = [l for _, l in single.loss_history]
+
+    cfg = _base(
+        time_scale=2e-5,
+        fault_plan=FaultPlan(interval=1e9),       # shared plan: inert
+        fault_plans={"moe_routing": FaultPlan(interval=0.1,
+                                              p_manager_crash=1.0, seed=2)})
+    cloud = ACANCloud(cfg, programs=_programs(cfg))
+    multi = cloud.run()
+    mlp = multi.per_program["mlp"]
+    moe = multi.per_program["moe_routing"]
+    assert [l for _, l in mlp.loss_history] == ref
+    assert len(moe.loss_history) == 8             # completed via revivals
+    assert mlp.manager_revivals == 0              # never crashed
+    assert moe.manager_revivals >= 1
+    assert multi.handler_revivals == 0            # fleet untouched
+
+
+def test_per_tenant_config_keys_must_name_real_namespaces():
+    """A typo'd (or single-program-mode) fault_plans/tenant_caps key must
+    fail loudly at construction, not be silently inert."""
+    cfg = _base(fault_plans={"mlp": FaultPlan(p_manager_crash=1.0)})
+    with pytest.raises(ValueError, match="unknown namespaces"):
+        ACANCloud(cfg)                            # single-program: ns ""
+    cfg2 = _base(tenant_caps={"moe-routing": 2})  # typo for moe_routing
+    with pytest.raises(ValueError, match="moe-routing"):
+        ACANCloud(cfg2, programs=_programs(cfg2))
+    # correctly-keyed maps construct fine
+    cfg3 = _base(tenant_caps={"moe_routing": 2})
+    ACANCloud(cfg3, programs=_programs(cfg3))
+
+
+def test_zero_tenant_cap_is_rejected():
+    cfg = _base(tenant_caps={"moe_routing": 0})
+    with pytest.raises(ValueError, match="livelock"):
+        ACANCloud(cfg, programs=_programs(cfg))

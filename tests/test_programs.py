@@ -99,10 +99,10 @@ def test_moe_dispatch_is_revival_deterministic():
     from repro.core.executor import TaskExecutor
     TaskExecutor(ts).execute_batch(prog.stage_tasks(ts, 0, "route"))
     prog.combine(ts, 0, "route", mgr)
-    first = prog.stage_tasks(ts, 0, "expert")
+    first = prog.expert_stage_tasks(ts, 0)
     prog2 = MoERoutingProgram(steps=2, seed=3)     # the revived instance
     prog2.combine(ts, 0, "route", mgr)             # idempotent re-run
-    assert prog2.stage_tasks(ts, 0, "expert") == first
+    assert prog2.expert_stage_tasks(ts, 0) == first
 
 
 def test_mlp_program_equals_legacy_cloud_path():
@@ -138,7 +138,7 @@ def test_moe_route_combine_resumes_after_partial_crash():
     prog._combine_route(ts, 0)          # the revived Manager's re-run
     for e in range(prog.E):
         assert ts.try_read(("disp", 0, e)) is not None
-    assert len(prog.stage_tasks(ts, 0, "expert")) >= 1
+    assert len(prog.expert_stage_tasks(ts, 0)) >= 1
 
 
 def test_mlp_backward_combine_resumes_after_partial_crash():
