@@ -26,6 +26,10 @@ Acceptance (exit code): every selected program's loss must decrease,
 manager revival, ≥ 1 handler revival, and **zero cross-namespace task
 deletions** (no widened-subject deletes, nothing removed under an
 unscoped task subject — InstrumentedBackend delete accounting).
+
+Every leg additionally runs under the ``CheckedBackend`` protocol
+sanitizer (PR 6) and gates on **zero schema/role violations and zero
+tuple leaks** at shutdown.
 """
 
 from __future__ import annotations
@@ -51,6 +55,17 @@ def _ts_ops(res) -> int:
     return s.get("puts", 0) + s.get("takes", 0) + s.get("reads", 0)
 
 
+def _checked(spec: str | None) -> str:
+    """Stack the protocol sanitizer onto ``spec`` (idempotent)."""
+    inner = spec or os.environ.get("REPRO_TS_BACKEND", "") or "local"
+    return inner if "checked" in inner else f"checked+{inner}"
+
+
+def _ts_clean(res) -> bool:
+    """Zero protocol violations, zero tuple leaks (CheckedBackend)."""
+    return res.ts_violations == 0 and not res.ts_leaks
+
+
 def run_mlp(smoke: bool, backend: str | None) -> dict:
     # The exp1 CI geometry (SGD bs=1 is noisy — single epochs over few
     # samples do not give a stable first/last comparison).
@@ -60,7 +75,7 @@ def run_mlp(smoke: bool, backend: str | None) -> dict:
                       task_cap=256.0, pouch_size=100, lr=0.01,
                       time_scale=1e-6, initial_timeout=0.12,
                       fault_plan=FaultPlan(interval=1e9), seed=0,
-                      wall_limit=240.0, ts_backend=backend)
+                      wall_limit=240.0, ts_backend=_checked(backend))
     res = ACANCloud(cfg).run()
     losses = [l for _, l in res.loss_history]
     half = len(losses) // 2
@@ -69,7 +84,9 @@ def run_mlp(smoke: bool, backend: str | None) -> dict:
             "first": float(np.mean(losses[:half])),
             "last": float(np.mean(losses[half:])),
             "completed": len(losses) == epochs * n_samples,
-            "ok": bool(np.mean(losses[half:]) < np.mean(losses[:half]))}
+            "ts_clean": _ts_clean(res),
+            "ok": bool(np.mean(losses[half:]) < np.mean(losses[:half]))
+            and _ts_clean(res)}
 
 
 def _moe_cost_spread(prog: MoERoutingProgram) -> tuple[float, float]:
@@ -93,7 +110,8 @@ def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
     time_scale = 2e-5 if faults else 1e-6
     cfg = CloudConfig(n_handlers=4, task_cap=256.0, pouch_size=64,
                       time_scale=time_scale, initial_timeout=0.1,
-                      fault_plan=plan, wall_limit=240.0, ts_backend=backend)
+                      fault_plan=plan, wall_limit=240.0,
+                      ts_backend=_checked(backend))
     res = ACANCloud(cfg, program=prog).run()
     losses = [l for _, l in res.loss_history]
     lo, hi = _moe_cost_spread(prog)
@@ -106,12 +124,13 @@ def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
            "last": float(np.mean(losses[-3:])), "completed": completed,
            "cost_min": lo, "cost_max": hi,
            "mgr_revive": res.manager_revivals,
-           "hdl_revive": res.handler_revivals}
+           "hdl_revive": res.handler_revivals,
+           "ts_clean": _ts_clean(res)}
     if faults:
         out["ok"] = (completed and decreased and res.manager_revivals >= 1
-                     and res.handler_revivals >= 1)
+                     and res.handler_revivals >= 1 and _ts_clean(res))
     else:
-        out["ok"] = completed and decreased and hi > lo
+        out["ok"] = completed and decreased and hi > lo and _ts_clean(res)
     return out
 
 
@@ -123,7 +142,7 @@ def run_multi(smoke: bool, backend: str | None) -> dict:
     # samples does not give a stable first-half/second-half comparison.
     epochs, n_samples = (2, 8) if smoke else (2, 24)
     moe_steps = 10 if smoke else 20
-    inner = backend or os.environ.get("REPRO_TS_BACKEND", "") or "local"
+    inner = _checked(backend)
     cfg = CloudConfig(layers=[LayerSpec(32, 32), LayerSpec(32, 1)],
                       n_handlers=4, epochs=epochs, n_samples=n_samples,
                       task_cap=256.0, pouch_size=64, lr=0.01,
@@ -132,7 +151,7 @@ def run_multi(smoke: bool, backend: str | None) -> dict:
                           interval=0.1, speed_levels=(1.0, 5.0, 10.0),
                           p_speed_change=1.0, p_handler_crash=1.0,
                           p_manager_crash=1.0, seed=1),
-                      wall_limit=240.0, ts_backend=f"instrumented:{inner}")
+                      wall_limit=240.0, ts_backend=f"instrumented+{inner}")
     programs = [MLPProgram(cfg.layers, epochs=epochs, n_samples=n_samples,
                            seed=0),
                 MoERoutingProgram(steps=moe_steps, seed=0)]
@@ -165,9 +184,10 @@ def run_multi(smoke: bool, backend: str | None) -> dict:
             "mgr_revive": res.manager_revivals,
             "hdl_revive": res.handler_revivals,
             "cross_ns_free": cross_free,
+            "ts_clean": _ts_clean(res),
             "ok": (completed and decreased and cross_free
                    and res.manager_revivals >= 1
-                   and res.handler_revivals >= 1)}
+                   and res.handler_revivals >= 1 and _ts_clean(res))}
 
 
 def run_jax(smoke: bool, backend: str | None) -> dict:
@@ -178,7 +198,8 @@ def run_jax(smoke: bool, backend: str | None) -> dict:
         get_config("smollm_360m", reduced=True),
         ACANTrainConfig(n_handlers=3, n_micro=3, micro_batch=2, seq=32,
                         steps=steps, lr=0.05, timeout=20.0,
-                        handler_crash_prob=0.25, seed=0, ts_backend=backend))
+                        handler_crash_prob=0.25, seed=0,
+                        ts_backend=_checked(backend)))
     t0 = time.perf_counter()
     res = runner.run()
     wall = time.perf_counter() - t0
@@ -186,8 +207,10 @@ def run_jax(smoke: bool, backend: str | None) -> dict:
             "pouches": res.param_versions, "first": res.losses[0],
             "last": res.losses[-1], "completed": len(res.losses) == steps,
             "crashes": res.crashes, "reissues": res.reissues,
+            "ts_clean": _ts_clean(res),
             "ok": bool(len(res.losses) == steps
-                       and res.losses[-1] < res.losses[0])}
+                       and res.losses[-1] < res.losses[0])
+            and _ts_clean(res)}
 
 
 def run_programs(programs: list[str], smoke: bool,
@@ -227,6 +250,8 @@ def bench_rows(smoke: bool = True, backend: str | None = None,
                         f"hdl_revive={r['hdl_revive']}")
         if "cross_ns_free" in r:
             derived += f" cross_ns_free={r['cross_ns_free']}"
+        if "ts_clean" in r:
+            derived += f" ts_clean={r['ts_clean']}"
         rows.append((r["name"], r["wall"] * 1e6, derived))
     return rows
 
@@ -253,7 +278,8 @@ def main() -> int:
               f"{r['first']:>11.3f} ->{r['last']:>7.3f}{str(r['ok']):>5}")
         extras = {k: r[k] for k in
                   ("cost_min", "cost_max", "mgr_revive", "hdl_revive",
-                   "crashes", "reissues", "cross_ns_free") if k in r}
+                   "crashes", "reissues", "cross_ns_free", "ts_clean")
+                  if k in r}
         if extras:
             print(f"{'':<22}{extras}")
     ok = all(r["ok"] for r in results)

@@ -11,5 +11,25 @@ def ts_backend_arg(argv: list[str] | None = None) -> str | None:
     idx = argv.index("--ts-backend") + 1
     if idx >= len(argv):
         sys.exit("--ts-backend requires a value "
-                 "(local | sharded[:n] | instrumented[:spec])")
+                 "(local | sharded[:n] | instrumented[:spec] | "
+                 "checked+spec)")
     return argv[idx]
+
+
+def protocol_audit(backend, res) -> None:
+    """Print the CheckedBackend shutdown report when the protocol
+    sanitizer is stacked (``--ts-backend checked+local`` etc.): every
+    run must end with zero schema/role violations and zero tuple leaks.
+    Silent when no sanitizer is in the backend stack."""
+    from repro.core.space import find_checked
+    if find_checked(backend) is None:
+        return
+    n_leaks = sum(e["count"] for e in res.ts_leaks.values())
+    print(f"protocol audit : violations {res.ts_violations}, "
+          f"leaked tuples {n_leaks} (both must be 0 — every key "
+          f"schema-clean, every non-persistent tuple swept)")
+    for sample in getattr(res, "ts_violation_samples", [])[:3]:
+        print(f"  {sample}")
+    for label, entry in list(res.ts_leaks.items())[:3]:
+        print(f"  leak {label}: {entry['count']}x {entry['lifecycle']} "
+              f"e.g. {entry['sample'][0]}")

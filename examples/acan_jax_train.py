@@ -11,7 +11,7 @@ The coordination substrate is pluggable: pass ``--ts-backend sharded``
 sharded high-throughput tuple-space backend.
 """
 
-from _example_args import ts_backend_arg
+from _example_args import protocol_audit, ts_backend_arg
 from repro.configs import get_config
 from repro.ts_exec.step_runner import ACANStepRunner, ACANTrainConfig
 
@@ -36,6 +36,7 @@ def main() -> None:
     assert res.losses[-1] < res.losses[0]
     print("loss decreased through crashes — ACAN semantics hold for real "
           "JAX training.")
+    protocol_audit(runner.ts.backend, res)
 
 
 if __name__ == "__main__":

@@ -3,7 +3,8 @@ tuple-space runtime with heterogeneous, crash-prone handlers — and watch
 the adaptive timeout track handler power inversely (Figures 1-4).
 
     PYTHONPATH=src python examples/acan_mlp_train.py \
-        [--paper-scale] [--ts-backend local|sharded[:n]|instrumented[:spec]]
+        [--paper-scale] \
+        [--ts-backend local|sharded[:n]|instrumented[:spec]|checked+spec]
 
 Default runs a compressed variant (N=64, shorter intervals) in ~30 s;
 ``--paper-scale`` runs the exact paper setup (N=256, 100 samples ×
@@ -16,7 +17,7 @@ import sys
 
 import numpy as np
 
-from _example_args import ts_backend_arg
+from _example_args import protocol_audit, ts_backend_arg
 from repro.configs import paper_mlp
 from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec
 
@@ -62,6 +63,7 @@ def main() -> None:
               f"{np.corrcoef(t[m], p[m])[0, 1]:.3f}  (paper: inverse)")
     print(f"ledger intact   : {res.ledger_ok}   "
           f"pouches: {res.pouches}   wall: {res.wallclock:.1f}s")
+    protocol_audit(cloud.ts.backend, res)
 
 
 if __name__ == "__main__":

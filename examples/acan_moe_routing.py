@@ -13,7 +13,7 @@ watch the cost spread and the GSS timeout absorb it.
 
 import numpy as np
 
-from _example_args import ts_backend_arg
+from _example_args import protocol_audit, ts_backend_arg
 from repro.core import (ACANCloud, CloudConfig, FaultPlan, GLOBAL_OPS,
                         MoERoutingProgram)
 
@@ -58,6 +58,7 @@ def main() -> None:
           f"irregular")
     print(f"ledger intact    : {res.ledger_ok}   pouches: {res.pouches}   "
           f"wall: {res.wallclock:.1f}s")
+    protocol_audit(cloud.ts.backend, res)
 
 
 if __name__ == "__main__":

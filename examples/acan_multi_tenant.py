@@ -12,12 +12,14 @@ recovery cursors and data-plane tuples cannot collide; the handlers
 drain tasks across both namespaces in a single take_batch and route each
 one to its tenant's executor. Pass ``--ts-backend instrumented:local``
 (or ``instrumented:sharded``) to also print the isolation audit: zero
-deletes capable of crossing a namespace.
+deletes capable of crossing a namespace — and ``checked+local`` /
+``instrumented+checked+sharded`` for the protocol audit: zero schema
+violations and zero leaked tuples at shutdown.
 """
 
 import numpy as np
 
-from _example_args import ts_backend_arg
+from _example_args import protocol_audit, ts_backend_arg
 from repro.core import (ACANCloud, CloudConfig, FaultPlan, LayerSpec,
                         MLPProgram, MoERoutingProgram)
 
@@ -62,6 +64,7 @@ def main() -> None:
         print(f"isolation audit: widened-subject deletes {widened}, "
               f"unscoped task removals {plain_task} "
               f"(both must be 0 — no delete can cross a namespace)")
+    protocol_audit(cloud.ts.backend, res)
 
 
 if __name__ == "__main__":

@@ -44,8 +44,9 @@ from repro.core.faults import FaultPlan, MonitorDaemon
 from repro.core.handler import Handler, HandlerTenant, SpeedBox
 from repro.core.manager import Manager, ManagerConfig, validate_scheduling
 from repro.core.program import WorkloadProgram
-from repro.core.space import (ANY, DEFAULT_NAMESPACE, TSTimeout, TupleSpace,
-                              as_scoped)
+from repro.core.space import (ANY, CONTROL_SCHEMAS, DEFAULT_NAMESPACE,
+                              TSTimeout, TupleSpace, as_scoped, find_checked,
+                              role)
 
 __all__ = ["ACANCloud", "CloudConfig", "CloudResult", "MultiCloudResult"]
 
@@ -103,6 +104,14 @@ class CloudResult:
     ts_stats: dict
     ledger_ok: bool
     pouches: int
+    #: PR 6 protocol-sanitizer outcome (zeros/empty when the backend
+    #: stack carries no CheckedBackend). ``ts_violations`` counts every
+    #: recorded protocol violation on the *shared* space;
+    #: ``ts_leaks`` is the shutdown orphan scan filtered to this
+    #: program's namespace (subject label -> {lifecycle, count, sample}).
+    ts_violations: int = 0
+    ts_violation_samples: list = field(default_factory=list)
+    ts_leaks: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -117,6 +126,10 @@ class MultiCloudResult:
     wallclock: float
     ts_stats: dict
     ledger_ok: bool
+    #: PR 6: the whole shared space's sanitizer outcome (all namespaces).
+    ts_violations: int = 0
+    ts_violation_samples: list = field(default_factory=list)
+    ts_leaks: dict = field(default_factory=dict)
 
 
 class ACANCloud:
@@ -161,6 +174,19 @@ class ACANCloud:
         self.ts = TupleSpace(backend=cfg.ts_backend)
         self.spaces = [as_scoped(self.ts, ns) for ns in self.namespaces]
         self.stop_event = threading.Event()
+        # PR 6: when the selected backend stack carries a CheckedBackend
+        # sanitizer, declare each program's key protocol under its
+        # namespace — control-plane schemas plus the program's own. A
+        # program whose ``key_schemas()`` is empty opts out: nothing is
+        # registered under its namespace, which stays lenient (custom/
+        # ad-hoc programs are not flagged).
+        checked = find_checked(self.ts.backend)
+        if checked is not None:
+            for ns, prog in zip(self.namespaces, self.programs):
+                schemas = tuple(prog.key_schemas())
+                if schemas:
+                    checked.registry.register_many(
+                        CONTROL_SCHEMAS + schemas, namespace=ns)
 
     def _assign_namespaces(self) -> list[str]:
         """Single program → the default passthrough namespace (bit-
@@ -257,9 +283,23 @@ class ACANCloud:
     def _finished(self, i: int) -> bool:
         return self.spaces[i].try_read(("mstate", "finished")) is not None
 
+    def _ns_leaks(self, report: dict | None, ns: str) -> dict:
+        """The shutdown leak scan filtered to one namespace (labels are
+        ``ns::subject`` for scoped tenants, bare ``subject`` in the
+        default namespace)."""
+        if report is None:
+            return {}
+        out = {}
+        for label, entry in report["leaks"].items():
+            label_ns = label.split("::", 1)[0] if "::" in label else ""
+            if label_ns == ns:
+                out[label] = entry
+        return out
+
     def _collect(self, i: int, daemon: MonitorDaemon, wall: float,
                  ts_stats: dict | None = None,
-                 ledger_ok: bool | None = None) -> CloudResult:
+                 ledger_ok: bool | None = None,
+                 report: dict | None = None) -> CloudResult:
         """One program's result from its namespace view. Every history
         read is guarded: a tuple listed by ``keys()`` can vanish (history
         trimming by a still-running revived Manager) before ``try_read``
@@ -294,10 +334,21 @@ class ACANCloud:
             ledger_ok=(self.ts.ledger.verify() if ledger_ok is None
                        else ledger_ok),
             pouches=total_rounds,
+            ts_violations=0 if report is None else report["violations"],
+            ts_violation_samples=([] if report is None
+                                  else list(report["violation_samples"])),
+            ts_leaks=self._ns_leaks(report, self.namespaces[i]),
         )
 
     # ----------------------------------------------------------------- run
     def run(self) -> CloudResult | MultiCloudResult:
+        # The cloud's own TS ops (the blocking finished reads, the result
+        # collection) run on the caller's thread — tag it for the
+        # CheckedBackend role checks, restoring whatever it had.
+        with role("cloud"):
+            return self._run()
+
+    def _run(self) -> CloudResult | MultiCloudResult:
         cfg = self.cfg
         n_programs = len(self.programs)
         self._manager_crashes = [threading.Event() for _ in range(n_programs)]
@@ -352,6 +403,11 @@ class ACANCloud:
                     break               # wall limit hit — stop everything
         self.stop_event.set()
         dthread.join(timeout=2.0)
+        # Quiesce the fleet before the shutdown protocol scan: a handler
+        # (or manager) still mid-write would race the leak snapshot. The
+        # daemon holds the *latest* thread incarnations (post-revival).
+        for th in daemon.threads():
+            th.join(timeout=2.0)
         wall = time.monotonic() - t0
 
         # Verify the shared hash chain and snapshot stats ONCE — the
@@ -359,7 +415,12 @@ class ACANCloud:
         # tenant of the shared space.
         ts_stats = self.ts.stats()
         ledger_ok = self.ts.ledger.verify()
-        results = [self._collect(i, daemon, wall, ts_stats, ledger_ok)
+        # PR 6 shutdown gate: violation tally + LSan-style orphan scan
+        # (None when no CheckedBackend is stacked).
+        checked = find_checked(self.ts.backend)
+        report = checked.protocol_report() if checked is not None else None
+        results = [self._collect(i, daemon, wall, ts_stats, ledger_ok,
+                                 report)
                    for i in range(n_programs)]
         if not self.multi:
             return results[0]
@@ -371,4 +432,8 @@ class ACANCloud:
             wallclock=wall,
             ts_stats=ts_stats,
             ledger_ok=ledger_ok,
+            ts_violations=0 if report is None else report["violations"],
+            ts_violation_samples=([] if report is None
+                                  else list(report["violation_samples"])),
+            ts_leaks={} if report is None else dict(report["leaks"]),
         )

@@ -96,7 +96,7 @@ import numpy as np
 
 from repro.core.program import OpRegistry, ensure_builtin_ops
 from repro.core.tasks import TaskDesc
-from repro.core.space import TupleSpace
+from repro.core.space import TupleSpace, role
 
 
 class PreconditionUnmet(Exception):
@@ -148,10 +148,10 @@ class TaskExecutor:
         self.ctx = ExecContext(ts, e)
 
     # ------------------------------------------------------------- dispatch
-    def execute(self, task: TaskDesc) -> None:
-        self._run_group([task])
+    def execute(self, task: TaskDesc) -> list[tuple[tuple, Any]]:
+        return self._run_group([task])
 
-    def execute_batch(self, tasks: list[TaskDesc]) -> None:
+    def execute_batch(self, tasks: list[TaskDesc]) -> list[tuple[tuple, Any]]:
         """Execute a batch vectorized per compatible *group* (same op,
         layer, data_id, step): shared inputs are read from TS once,
         uniform tiles are stacked, and each group's outputs land through
@@ -161,9 +161,14 @@ class TaskExecutor:
         :class:`PreconditionUnmet` before writing anything — the whole
         group is discarded atomically, exactly as each task would be
         individually. A heterogeneous list is split into its groups.
+
+        Returns every ``(key, value)`` written, so the Handler can
+        compensate (delete its own writes) when a fence check shows the
+        result landed after the Manager already finished the round
+        (PR 6 leak closure).
         """
         if not tasks:
-            return
+            return []
         groups: list[list[TaskDesc]] = []
         index: dict[tuple, int] = {}
         for t in tasks:
@@ -172,11 +177,15 @@ class TaskExecutor:
                 index[sig] = len(groups)
                 groups.append([])
             groups[index[sig]].append(t)
+        written: list[tuple[tuple, Any]] = []
         for group in groups:
-            self._run_group(group)
+            written.extend(self._run_group(group))
+        return written
 
-    def _run_group(self, group: list[TaskDesc]) -> None:
+    def _run_group(self, group: list[TaskDesc]) -> list[tuple[tuple, Any]]:
         spec = self.registry.resolve(group[0].op)
-        items = list(spec.batch_fn(self.ctx, group))
-        if items:
-            self.ts.put_many(items)
+        with role("executor"):
+            items = list(spec.batch_fn(self.ctx, group))
+            if items:
+                self.ts.put_many(items)
+        return items

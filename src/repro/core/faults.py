@@ -97,10 +97,10 @@ class MonitorDaemon:
         if self.make_manager_threads is None:
             mk = self.make_manager_thread
             if mk is not None:
-                self.make_manager_threads = lambda i: mk()
+                self.make_manager_threads = lambda _i: mk()
         if self.is_manager_finished is None:
             fin = self.is_finished
-            self.is_manager_finished = lambda i: fin()
+            self.is_manager_finished = lambda _i: fin()
         self.n_managers = len(self.manager_crashes)
         self.manager_revivals_by = [0] * self.n_managers
         self.manager_crash_firings_by = [0] * self.n_managers
@@ -201,6 +201,12 @@ class MonitorDaemon:
                 self._hthreads[i] = self.make_handler_thread(i)
                 self.handler_revivals += 1
 
+    def threads(self) -> list[threading.Thread]:
+        """The *latest* supervised thread incarnations (post-revival) —
+        the cloud joins them before its shutdown protocol/leak scan."""
+        return [th for th in self._mthreads + self._hthreads
+                if th is not None]
+
     def manager_alive(self, i: int | None = None) -> bool:
         """Is Manager ``i`` alive — or, with no index, are *all* attached
         Managers alive (False before attach)?"""
@@ -216,6 +222,13 @@ class MonitorDaemon:
     LIVENESS_QUANTUM = 0.05
 
     def run(self) -> None:
+        # Tag the daemon thread for the CheckedBackend role checks: its
+        # is_manager_finished callback reads ("mstate", "finished").
+        from repro.core.space import role
+        with role("daemon"):
+            self._run()
+
+    def _run(self) -> None:
         t0 = time.monotonic()
         last_fault = t0
         tenant_last = {i: t0 for i in self._tenant_rngs}

@@ -64,7 +64,7 @@ from repro.core.manager import validate_scheduling
 from repro.core.program import OpRegistry, UnknownOp, ensure_builtin_ops
 from repro.core.tasks import TaskDesc, content_key
 from repro.core.space import (ANY, DEFAULT_NAMESPACE, TSTimeout, TupleSpace,
-                              key_namespace, task_take_pattern)
+                              key_namespace, role, task_take_pattern)
 
 
 class HandlerCrash(Exception):
@@ -142,6 +142,7 @@ class Handler:
     tasks_discarded: int = 0
     tasks_stored: int = 0
     tasks_capped: int = 0             # stored back over a tenant max_tasks cap
+    tasks_fenced: int = 0             # dropped/undone: round already finished
     batches_taken: int = 0
     busy_time: float = 0.0            # emulated compute seconds (utilisation)
 
@@ -178,7 +179,67 @@ class Handler:
         except UnknownOp:
             return None
 
+    # ------------------------------------------------- finished-round fence
+    @staticmethod
+    def _fence_base(rt: _TenantRT) -> float:
+        """The tenant's finished-round fence: every round strictly below
+        the returned base is over (``inf`` once the whole job is), read
+        from the Manager's persisted frontier. Every built-in program's
+        tasks carry their round in ``step``, so ``task.step < base``
+        means the task's results can never be combined again — executing
+        it would only write partials nobody will clean (the PR 6 leak).
+        No frontier in the space (bare-Handler tests, no Manager) = -inf:
+        the fence never fires."""
+        if rt.space.try_read(("mstate", "finished")) is not None:
+            return float("inf")
+        hit = rt.space.try_read(("mstate", "frontier"))
+        if hit is None:
+            return float("-inf")
+        return float(hit[1].get("base", 0))
+
+    def _unstore_if_stale(self, key, value, task, rt) -> None:
+        """Put-back compensation (PR 6): a "store" re-put can land after
+        the Manager's *final* untaken-task sweep (the one right before
+        ``("mstate", "finished")``) and would then outlive the job as a
+        leaked task tuple. Re-read the fence *after* the put: if the
+        task's round is finished by now, take our own re-put back. The
+        delete is value-identity-guarded — a fresh Manager re-issue under
+        the same tid is a different object and survives."""
+        if rt is None or task is None:
+            return
+        if task.step >= self._fence_base(rt):
+            return
+        hit = self.ts.try_read(key)
+        if hit is not None and hit[1] is value:
+            self.ts.delete(key)
+            self.tasks_fenced += 1
+
+    def _undo_stale(self, rt: _TenantRT, group: list[TaskDesc],
+                    written: list[tuple[tuple, Any]]) -> None:
+        """The group's round finished while we were executing (the
+        Manager's cleanup passes may both have run already): delete our
+        own writes so they cannot outlive the round as orphans. Result
+        deletes are value-identity-guarded — if a later round
+        legitimately re-wrote the same key (step-less keys like the MLP
+        ``fpart`` alias across rounds), the stored object is not ours
+        and stays. Done marks are content-keyed (``step`` included), so
+        the concrete deletes cannot touch a live round's marks."""
+        for key, value in written:
+            hit = rt.space.try_read(key)
+            if hit is not None and hit[1] is value:
+                rt.space.delete(key)
+        for t in group:
+            rt.space.delete(("done",) + content_key(t))
+        self.tasks_fenced += len(group)
+
     def run(self) -> None:
+        # Thread-local role tag for the CheckedBackend's producer/consumer
+        # checks (PR 6); the executor narrows it to "executor" around op
+        # kernels, and the context form restores it for borrowed threads.
+        with role("handler"):
+            self._run()
+
+    def _run(self) -> None:
         validate_scheduling(self.scheduling)
         if self.tenants is None:
             # Single-tenant fast path: fixed-subject pattern (atomic
@@ -230,37 +291,58 @@ class Handler:
             now = time.monotonic()
             runnable: list[tuple[str, TaskDesc]] = []
             kept: dict[str, int] = {}     # per-namespace tasks kept (caps)
+            fences: dict[str, float] = {}  # per-namespace frontier base
             deferred = 0
             for key, value in batch:
                 wire, stored_by = _unpack_task(value)
+                ns = key_namespace(key)
+                rt = self._rt.get(ns)
+                task: TaskDesc | None = None
+                if rt is not None:
+                    task = TaskDesc.from_wire(wire)
+                    base = fences.get(ns)
+                    if base is None:
+                        base = fences[ns] = self._fence_base(rt)
+                    if task.step < base:
+                        # Classification fence (PR 6): this task's round
+                        # is already finished — executing it would write
+                        # partials nobody will ever clean, and re-putting
+                        # it would leak the task tuple. We hold the
+                        # drained tuple, so dropping it here IS the
+                        # delete. (A cached base only ever under-reads —
+                        # the frontier is monotonic — and the post-write
+                        # fence below catches whatever slips through.)
+                        self.tasks_fenced += 1
+                        continue
                 if stored_by == self.name and now < skip_until.get(key, 0.0):
                     # Own fresh re-put: hand it back untouched and let
                     # another handler reach it first.
                     self.ts.put(key, value)
+                    self._unstore_if_stale(key, value, task, rt)
                     deferred += 1
                     continue
-                ns = key_namespace(key)
                 cap = self._caps.get(ns)
                 if cap is not None and kept.get(ns, 0) >= cap:
                     # Over this tenant's per-batch cap: store it back
                     # (tagged like a capability miss) for a handler with
                     # headroom on this namespace.
-                    self.ts.put(key, (wire, self.name))
+                    stored = (wire, self.name)
+                    self.ts.put(key, stored)
+                    self._unstore_if_stale(key, stored, task, rt)
                     skip_until[key] = now + self.store_backoff
                     self.tasks_stored += 1
                     self.tasks_capped += 1
                     deferred += 1
                     continue
-                rt = self._rt.get(ns)
-                cost = None
-                if rt is not None:
-                    task = TaskDesc.from_wire(wire)
-                    cost = self._task_cost(task, rt.registry)
+                cost = (None if task is None
+                        else self._task_cost(task, rt.registry))
                 if cost is None or cost > self.capacity:
                     # "store": an unserved namespace, unknown op, or
                     # too-big task — put it back for a more capable
                     # handler, tagged so we skip it for one backoff cycle.
-                    self.ts.put(key, (wire, self.name))
+                    stored = (wire, self.name)
+                    self.ts.put(key, stored)
+                    self._unstore_if_stale(key, stored, task, rt)
                     skip_until[key] = now + self.store_backoff
                     self.tasks_stored += 1
                     deferred += 1
@@ -279,8 +361,14 @@ class Handler:
                     / max(self.speed.get(), 1e-6))
                 if self.stop_event.is_set():
                     return
+                if group[0].step < self._fence_base(rt):
+                    # Fence re-check after the emulated compute sleep:
+                    # the round may have finished while we slept — don't
+                    # write partials into a round that is over.
+                    self.tasks_fenced += len(group)
+                    continue
                 try:
-                    rt.executor.execute_batch(group)
+                    written = rt.executor.execute_batch(group)
                 except PreconditionUnmet:
                     # Inputs not in TS yet: discard the group; the
                     # Manager's timeout re-issues it (§5.1).
@@ -289,6 +377,12 @@ class Handler:
                 rt.space.put_many(
                     (("done",) + content_key(t), self.name) for t in group)
                 self.tasks_done += len(group)
+                if group[0].step < self._fence_base(rt):
+                    # The round closed between the pre-execute fence and
+                    # our writes: undo them (see _undo_stale — together
+                    # with the Manager's post-checkpoint second cleanup
+                    # pass this closes the last late-write window).
+                    self._undo_stale(rt, group, written)
             if deferred and not runnable:
                 # Nothing but own/too-big tasks in the space: back off
                 # instead of spinning on our own re-puts.
@@ -316,6 +410,9 @@ class Handler:
             wire, _ = _unpack_task(value)
             task = TaskDesc.from_wire(wire)
             rt = self._rt.get(key_namespace(key))
+            if rt is not None and task.step < self._fence_base(rt):
+                self.tasks_fenced += 1    # finished round: drop, don't run
+                continue
             cost = (self._task_cost(task, rt.registry)
                     if rt is not None else None)
             if cost is None or cost > self.capacity:
@@ -326,9 +423,11 @@ class Handler:
             self._throttled_sleep(cost * self.time_scale
                                   / max(self.speed.get(), 1e-6))
             try:
-                rt.executor.execute(task)
+                written = rt.executor.execute(task)
             except PreconditionUnmet:
                 self.tasks_discarded += 1
                 continue
             rt.space.put(("done",) + content_key(task), self.name)
             self.tasks_done += 1
+            if task.step < self._fence_base(rt):
+                self._undo_stale(rt, [task], written)

@@ -78,7 +78,7 @@ from repro.core.gss import PouchController, TimeoutController
 from repro.core.conflict import CommitWindow
 from repro.core.program import WorkloadProgram
 from repro.core.tasks import TaskDesc, content_key
-from repro.core.space import ANY, TSTimeout, TupleSpace
+from repro.core.space import ANY, TSTimeout, TupleSpace, role
 
 
 class ManagerCrash(Exception):
@@ -485,6 +485,7 @@ class Manager:
         self._completed.add((run.rnd, run.name))
         prog = self.program
         n_rounds = prog.n_rounds()
+        finished: list[int] = []
         while (self._base < n_rounds
                and all((self._base, n) in self._completed
                        for n in self._names(self._base))):
@@ -493,8 +494,19 @@ class Manager:
                 self._completed.discard((self._base, n))
             self._names_cache.pop(self._base, None)
             self._deps_cache.pop(self._base, None)
+            finished.append(self._base)
             self._base += 1
         self._checkpoint()
+        # Second cleanup pass AFTER the frontier is persisted (PR 6 leak
+        # closure): a straggler handler that passed its pre-execute fence
+        # before the frontier advanced may still write a finished round's
+        # partials. Either that write lands before this pass (deleted
+        # here) or after it — in which case the handler's own post-write
+        # fence re-read observes the already-persisted frontier and undoes
+        # the write. Both orderings leave the space clean; no timing
+        # window survives.
+        for r in finished:
+            prog.finish_round(self.ts, r)
 
     # -------------------------------------------------------- the scheduler
     def _priority(self) -> list[_StageRun]:
@@ -589,6 +601,13 @@ class Manager:
 
     # ------------------------------------------------------------------ run
     def run(self) -> None:
+        # The role tag is thread-local; Manager.run() may execute on a
+        # borrowed thread (step_runner drives it on the caller's), so the
+        # context manager form restores whatever role that thread had.
+        with role("manager"):
+            self._run()
+
+    def _run(self) -> None:
         prog = self.program
         prog.setup(self.ts)
         self._bump_epoch()
@@ -645,4 +664,11 @@ class Manager:
                 self._event_tick()
         if self.stop_event.is_set():
             return
+        # Last reclaim before declaring completion: a handler "store"
+        # re-put can land a task tuple back *after* the final stage's
+        # sweep ran (the re-put races the barrier close). The job is
+        # over — nothing of ours is in flight — so the widened
+        # namespace-confined sweep is safe and leaves the task subject
+        # empty at shutdown (PR 6 leak gate).
+        self._sweep_untaken()
         self.ts.put(("mstate", "finished"), True)

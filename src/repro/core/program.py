@@ -51,6 +51,11 @@ from repro.core.tasks import TaskDesc, split_out_halves
 if TYPE_CHECKING:  # pragma: no cover - type-only imports
     from repro.core.executor import ExecContext
     from repro.core.manager import Manager
+    from repro.core.space import ScopedSpace, TupleSpace
+    from repro.core.space.schema import KeySchema
+
+    #: Hooks accept the shared facade or a tenant's namespace view.
+    SpaceLike = TupleSpace | ScopedSpace
 
 
 #: Batch executor: reads inputs from ``ctx.ts``, returns the (key, value)
@@ -199,7 +204,7 @@ class WorkloadProgram(abc.ABC):
     name: str = "program"
     registry: OpRegistry = GLOBAL_OPS
 
-    def setup(self, ts) -> None:
+    def setup(self, ts: "SpaceLike") -> None:
         """Publish initial TS state (params, data, config) — idempotent."""
 
     @abc.abstractmethod
@@ -240,17 +245,35 @@ class WorkloadProgram(abc.ABC):
         return 1
 
     @abc.abstractmethod
-    def stage_tasks(self, ts, rnd: int, stage: str) -> list[TaskDesc]:
+    def stage_tasks(self, ts: "SpaceLike", rnd: int,
+                    stage: str) -> list[TaskDesc]:
         """Prototype tasks of one stage (pre-partition). May read TS.
         An empty list is a **pure combine barrier**: the stage completes
         immediately and only its ``combine`` hook runs (the MoE program
         uses one to fuse per-expert forward results into the shared
         ``dy``)."""
 
-    def combine(self, ts, rnd: int, stage: str, mgr: "Manager") -> None:
+    def combine(self, ts: "SpaceLike", rnd: int, stage: str,
+                mgr: "Manager") -> None:
         """Stage-boundary combine/commit hook ("the Manager updates the
         relevant TS entries as a checkpoint", §5.3). ``mgr`` exposes
         ``window`` (commit dedup) and ``cfg.history_limit``."""
 
-    def finish_round(self, ts, rnd: int) -> None:
+    def finish_round(self, ts: "SpaceLike", rnd: int) -> None:
         """Per-round TS cleanup (delete partials + done marks)."""
+
+    def key_schemas(self) -> "tuple[KeySchema, ...]":
+        """The program's declared data-plane key protocol: one
+        :class:`~repro.core.space.schema.KeySchema` per subject the
+        program puts/reads/deletes (PR 6).
+
+        A multi-tenant cloud registers these (plus the control-plane
+        schemas) under the program's namespace, and the
+        :class:`~repro.core.space.checked.CheckedBackend` sanitizer then
+        validates every op against them — arity, field types,
+        producer/consumer roles — and reports any non-``persistent``
+        tuple still live at shutdown as a leak. Programs returning the
+        default empty tuple opt out: their namespace stays lenient
+        (nothing is registered under it, so nothing is flagged).
+        """
+        return ()

@@ -5,8 +5,11 @@ Public API:
 - data model: :data:`ANY`, :func:`match`, :class:`TSTimeout`
 - the :class:`SpaceBackend` protocol (:mod:`repro.core.space.api`)
 - backends: :class:`LocalBackend`, :class:`ShardedBackend`,
-  :class:`InstrumentedBackend`
+  :class:`InstrumentedBackend`, :class:`CheckedBackend`
 - selection: :func:`make_backend` / ``$REPRO_TS_BACKEND``
+- the declared key protocol: :class:`KeySchema` / :class:`SchemaRegistry`
+  (:mod:`repro.core.space.schema`) and the runtime sanitizer
+  (:mod:`repro.core.space.checked`)
 - the :class:`TupleSpace` facade every ACAN component consumes
 - namespace scoping: :class:`ScopedSpace` per-program views over one
   shared space (multi-tenant ACAN), with the :class:`NsSubject` fused
@@ -16,8 +19,12 @@ Public API:
 from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
                                   TSTimeout, is_concrete, match,
                                   subject_is_fixed, validate_key)
+from repro.core.space.checked import (CheckedBackend, Violation, find_checked,
+                                      get_role, role, set_role)
 from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
 from repro.core.space.instrumented import InstrumentedBackend
+from repro.core.space.schema import (CONTROL_SCHEMAS, FieldSpec, KeySchema,
+                                     LIFECYCLES, ROLES, SchemaRegistry)
 from repro.core.space.local import LocalBackend
 from repro.core.space.scoped import (DEFAULT_NAMESPACE, NsSubject,
                                      ScopedSpace, as_scoped, key_namespace,
@@ -30,6 +37,10 @@ __all__ = [
     "match", "subject_is_fixed", "is_concrete", "validate_key",
     "BACKEND_ENV", "TupleSpace", "make_backend",
     "LocalBackend", "ShardedBackend", "InstrumentedBackend",
+    "CheckedBackend", "Violation", "find_checked", "get_role", "role",
+    "set_role",
+    "CONTROL_SCHEMAS", "FieldSpec", "KeySchema", "LIFECYCLES", "ROLES",
+    "SchemaRegistry",
     "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",
     "key_namespace", "scope_key", "scope_pattern", "task_take_pattern",
     "unscope_key",

@@ -12,7 +12,10 @@ it is chosen per instance::
 
 ``REPRO_TS_BACKEND`` accepts the same spec strings as
 :func:`make_backend`: ``local`` (default), ``sharded``,
-``sharded:<n_shards>``, and ``instrumented[:<inner spec>]``.
+``sharded:<n_shards>``, and the stackable wrappers ``instrumented`` and
+``checked`` — either legacy colon form (``instrumented:sharded:4``) or
+``+``-stacked (``checked+sharded:4``, ``instrumented+checked+local``);
+the leftmost wrapper is outermost.
 
 The facade owns the hash-chained :class:`~repro.core.ledger.Ledger`
 (paper §4: "all updates can be logged in an immutable blockchain") and
@@ -28,12 +31,17 @@ from typing import Any, Iterable
 
 from repro.core.ledger import Ledger
 from repro.core.space.api import Key, Pattern, SpaceBackend
+from repro.core.space.checked import CheckedBackend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.local import LocalBackend
 from repro.core.space.sharded import ShardedBackend
 
 #: Environment variable consulted when no backend is passed explicitly.
 BACKEND_ENV = "REPRO_TS_BACKEND"
+
+#: Stackable transparent wrappers accepted in wrapper specs (colon or
+#: ``+``-stacked form). The leftmost name in a stack is the outermost.
+_WRAPPERS = {"instrumented": InstrumentedBackend, "checked": CheckedBackend}
 
 
 def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
@@ -45,18 +53,29 @@ def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
         spec = os.environ.get(BACKEND_ENV, "") or "local"
     head, _, rest = spec.partition(":")
     head = head.strip().lower()
+    if "+" in head:
+        # Wrapper stack: "checked+sharded:4" / "instrumented+checked+local".
+        parts = [p.strip() for p in head.split("+") if p.strip()]
+        backend = make_backend(parts[-1] + ((":" + rest) if rest else ""),
+                               journal=journal)
+        for name in reversed(parts[:-1]):
+            if name not in _WRAPPERS:
+                raise ValueError(f"unknown tuple-space wrapper {name!r} "
+                                 f"in spec {spec!r}")
+            backend = _WRAPPERS[name](backend)
+        return backend
     if head == "local":
         return LocalBackend(journal=journal)
     if head == "sharded":
         if rest:
             return ShardedBackend(n_shards=int(rest), journal=journal)
         return ShardedBackend(journal=journal)
-    if head == "instrumented":
-        return InstrumentedBackend(make_backend(rest or "local",
-                                                journal=journal))
+    if head in _WRAPPERS:
+        return _WRAPPERS[head](make_backend(rest or "local", journal=journal))
     raise ValueError(
         f"unknown tuple-space backend {spec!r} "
-        f"(expected local | sharded[:n] | instrumented[:spec])")
+        f"(expected local | sharded[:n] | instrumented[:spec] | "
+        f"checked[+spec])")
 
 
 class TupleSpace:

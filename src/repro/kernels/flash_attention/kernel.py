@@ -106,11 +106,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         kern,
         grid=(BH, Tq // bq, Tkv // bk),
         in_specs=[
-            pl.BlockSpec((1, G, bq, D), lambda bh, iq, ik: (bh, 0, iq, 0)),
-            pl.BlockSpec((1, bk, D), lambda bh, iq, ik: (bh, ik, 0)),
-            pl.BlockSpec((1, bk, D), lambda bh, iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, G, bq, D), lambda bh, iq, _ik: (bh, 0, iq, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, _iq, ik: (bh, ik, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, _iq, ik: (bh, ik, 0)),
         ],
-        out_specs=pl.BlockSpec((1, G, bq, D), lambda bh, iq, ik: (bh, 0, iq, 0)),
+        out_specs=pl.BlockSpec((1, G, bq, D),
+                               lambda bh, iq, _ik: (bh, 0, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, G, Tq, D), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((G, bq), jnp.float32),

@@ -84,14 +84,14 @@ def ssd_scan(x, dt, a, b, c, d, *, chunk: int = 128,
         in_specs=[
             pl.BlockSpec((1, Q, P), lambda bh, ic: (bh, ic, 0)),
             pl.BlockSpec((1, Q), lambda bh, ic: (bh, ic)),
-            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+            pl.BlockSpec((1,), lambda bh, _ic: (bh,)),
             pl.BlockSpec((1, Q, N), lambda bh, ic: (bh, ic, 0)),
             pl.BlockSpec((1, Q, N), lambda bh, ic: (bh, ic, 0)),
-            pl.BlockSpec((1,), lambda bh, ic: (bh,)),
+            pl.BlockSpec((1,), lambda bh, _ic: (bh,)),
         ],
         out_specs=[
             pl.BlockSpec((1, Q, P), lambda bh, ic: (bh, ic, 0)),
-            pl.BlockSpec((1, N, P), lambda bh, ic: (bh, 0, 0)),
+            pl.BlockSpec((1, N, P), lambda bh, _ic: (bh, 0, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((BH, T, P), x.dtype),

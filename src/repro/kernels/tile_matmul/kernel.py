@@ -80,11 +80,11 @@ def tile_matmul(x, w, b=None, *, activation: str = "none",
         kern,
         grid=(M // bm, N // bn, K // bk),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((bm, bk), lambda i, _j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda _i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda _i, j, _k: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, _k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         compiler_params=_CompilerParams(

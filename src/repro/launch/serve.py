@@ -24,6 +24,21 @@ from repro.launch.steps import make_decode_step, make_prefill_step
 from repro.models import model as M
 
 
+def _pick(logits: jnp.ndarray, greedy: bool, rng) -> jnp.ndarray:
+    """Next-token choice over the last axis: argmax, or (``greedy=False``)
+    softmax sampling on host — serving throughput is decode-step bound,
+    not sampler bound."""
+    if greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = np.asarray(logits, np.float64)
+    lg -= lg.max(axis=-1, keepdims=True)
+    p = np.exp(lg)
+    p /= p.sum(axis=-1, keepdims=True)
+    flat = p.reshape(-1, p.shape[-1])
+    toks = np.array([rng.choice(flat.shape[-1], p=row) for row in flat])
+    return jnp.asarray(toks.reshape(lg.shape[:-1]), jnp.int32)
+
+
 def serve(arch: str, *, reduced: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, cache_len: int = 128,
           seed: int = 0, greedy: bool = True, log=print) -> dict:
@@ -71,9 +86,9 @@ def serve(arch: str, *, reduced: bool = True, batch: int = 4,
     for i in range(gen):
         if cfg.frontend == "codebooks":
             lg = logits.reshape(batch, cfg.n_codebooks, cfg.vocab)
-            tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+            tok = _pick(lg, greedy, rng)
         else:
-            tok = jnp.argmax(logits[:, :cfg.vocab], axis=-1).astype(jnp.int32)
+            tok = _pick(logits[:, :cfg.vocab], greedy, rng)
         tokens_out.append(np.asarray(tok))
         step_in = ({"embed": jnp.asarray(rng.standard_normal(
             (batch, cfg.d_model)).astype(np.float32))}
@@ -97,9 +112,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--sample", action="store_true",
+                    help="softmax-sample instead of greedy argmax")
     args = ap.parse_args()
     serve(args.arch, batch=args.batch, prompt_len=args.prompt_len,
-          gen=args.gen, cache_len=args.cache_len)
+          gen=args.gen, cache_len=args.cache_len, greedy=not args.sample)
 
 
 if __name__ == "__main__":

@@ -112,7 +112,7 @@ def param_axes(cfg: ModelConfig):
     return tree_axes(param_specs(cfg))
 
 
-def _head_matrix(params, cfg: ModelConfig):
+def _head_matrix(params, _cfg: ModelConfig):
     if "head" in params:
         return params["head"]
     return params["embed"]["tok"].T

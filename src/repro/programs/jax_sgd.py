@@ -43,11 +43,29 @@ from repro.core.executor import ExecContext, PreconditionUnmet
 from repro.core.program import (OpRegistry, OpSpec, WorkloadProgram,
                                 ensure_builtin_ops, record_loss)
 from repro.core.space import ANY
+from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import model as M
 
 JAXGRAD = "jaxgrad"
+
+# Declared data-plane key protocol (PR 6). ("params", steps) — the final
+# committed version — intentionally survives shutdown: persistent.
+KEY_SCHEMAS: tuple[KeySchema, ...] = (
+    KeySchema(subject="params", fields=(int_field("step"),),
+              producers=frozenset({"manager"}),
+              consumers=frozenset({"manager", "executor"}),
+              deleters=frozenset({"manager"}), lifecycle="persistent",
+              description="committed param tree at version step"),
+    KeySchema(subject="gpart", fields=(int_field("step"),
+                                       int_field("micro")),
+              producers=frozenset({"executor"}),
+              consumers=frozenset({"manager"}),
+              deleters=frozenset({"manager", "handler"}),
+              lifecycle="round_scoped",
+              description="(loss, grad tree) per microbatch"),
+)
 
 
 class JAXSGDProgram(WorkloadProgram):
@@ -161,3 +179,7 @@ class JAXSGDProgram(WorkloadProgram):
     def finish_round(self, ts, rnd: int) -> None:
         ts.delete(("gpart", rnd, ANY))
         ts.delete(("done", ANY, ANY, rnd, ANY, ANY, ANY, ANY, ANY))
+
+    # ------------------------------------------------------------- protocol
+    def key_schemas(self) -> tuple[KeySchema, ...]:
+        return KEY_SCHEMAS

@@ -71,6 +71,7 @@ from repro.core.executor import (ExecContext, activation,
 from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
                                 record_loss)
 from repro.core.space import ANY
+from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc, split_out_halves, split_quadrants
 
 # The five prototype op names (open strings — new programs add their own).
@@ -310,6 +311,92 @@ for _spec in (
 
 
 # --------------------------------------------------------------------------
+# Declared data-plane key protocol (PR 6) — the docstring table, checkable
+# --------------------------------------------------------------------------
+
+_MGR = frozenset({"manager"})
+_MGR_HDL = frozenset({"manager", "handler"})     # handler: late-write undo
+_EXEC = frozenset({"executor"})
+_RW = frozenset({"manager", "executor"})
+
+
+def _ks(subject: str, fields: list, producers: frozenset,
+        consumers: frozenset, lifecycle: str,
+        deleters: frozenset = _MGR, description: str = "") -> KeySchema:
+    return KeySchema(subject=subject, fields=tuple(fields),
+                     producers=producers, consumers=consumers,
+                     deleters=deleters, lifecycle=lifecycle,
+                     description=description)
+
+
+KEY_SCHEMAS: tuple[KeySchema, ...] = (
+    _ks("w", [int_field("layer")], _MGR, _RW, "persistent",
+        description="committed weight matrix"),
+    _ks("b", [int_field("layer")], _MGR, _RW, "persistent",
+        description="committed bias"),
+    _ks("wver", [int_field("layer")], _MGR,
+        frozenset({"manager", "executor", "cloud"}), "persistent",
+        description="committed weight version"),
+    _ks("x", [int_field("data_id")], _MGR, _RW, "persistent",
+        description="input vector"),
+    _ks("label", [int_field("data_id")], _MGR, _RW, "persistent",
+        description="target vector"),
+    _ks("pre", [int_field("layer"), int_field("data_id")], _MGR, _RW,
+        "round_scoped", description="combined pre-activation"),
+    _ks("act", [int_field("layer"), int_field("data_id")], _MGR, _RW,
+        "round_scoped", description="combined post-activation"),
+    _ks("fpart", [int_field("layer"), int_field("data_id"),
+                  int_field("out_lo"), int_field("out_hi"),
+                  int_field("in_lo"), int_field("in_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="forward partial W[ol:oh,il:ih]·x"),
+    _ks("actpart", [int_field("layer"), int_field("data_id"),
+                    int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="activation slice"),
+    _ks("losspart", [int_field("data_id"), int_field("lo"),
+                     int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="loss over output slice"),
+    _ks("dypart", [int_field("layer"), int_field("data_id"),
+                   int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="dLoss/dpre slice (last layer)"),
+    _ks("dy", [int_field("layer"), int_field("data_id")], _MGR, _RW,
+        "round_scoped", description="combined dLoss/dpre"),
+    _ks("gw", [int_field("layer"), int_field("data_id"),
+               int_field("out_lo"), int_field("out_hi"),
+               int_field("in_lo"), int_field("in_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="dW tile"),
+    _ks("gb", [int_field("layer"), int_field("data_id"),
+               int_field("out_lo"), int_field("out_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="db slice"),
+    _ks("bpart", [int_field("layer"), int_field("data_id"),
+                  int_field("in_lo"), int_field("in_hi"),
+                  int_field("out_lo"), int_field("out_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="dx partial"),
+    _ks("gW", [int_field("layer"), int_field("data_id")], _MGR, _RW,
+        "round_scoped", description="combined weight gradient"),
+    _ks("gB", [int_field("layer"), int_field("data_id")], _MGR, _RW,
+        "round_scoped", description="combined bias gradient"),
+    _ks("wnew", [int_field("layer"), int_field("step"),
+                 int_field("out_lo"), int_field("out_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="updated W rows (pre-commit)"),
+    _ks("bnew", [int_field("layer"), int_field("step"),
+                 int_field("out_lo"), int_field("out_hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="updated bias rows (pre-commit)"),
+    _ks("loss", [int_field("data_id"), int_field("step")], _MGR,
+        frozenset({"manager", "cloud"}), "round_scoped",
+        description="per-sample loss (losshist carries the trajectory)"),
+)
+
+
+# --------------------------------------------------------------------------
 # Teacher data (paper §6.1)
 # --------------------------------------------------------------------------
 
@@ -479,6 +566,14 @@ class MLPProgram(WorkloadProgram):
         """§5.4: overwrite W only when all row tiles are present, exactly
         once per (layer, step)."""
         if not window.can_commit(l, step):
+            # Already committed (revived-Manager re-run, or a straggler
+            # re-issue finishing after the commit): the re-executed update
+            # stage may have re-published identical wnew/bnew tiles. They
+            # are step-keyed, so finish_round's data_id-keyed sweep never
+            # matches them — without this cleanup every such re-run leaked
+            # them forever (found by the PR 6 CheckedBackend leak gate).
+            ts.delete(("wnew", l, step, ANY, ANY))
+            ts.delete(("bnew", l, step, ANY, ANY))
             return
         keys = ts.keys(("wnew", l, step, ANY, ANY))
         if not tiles_cover([(k[3], k[4]) for k in keys], 0, spec.n_out):
@@ -514,6 +609,15 @@ class MLPProgram(WorkloadProgram):
                     # per-sample loss tuples: nothing reads them after the
                     # combine (losshist carries the trajectory) — leaving
                     # them was unbounded TS garbage, one per sample-step.
-                    ("loss", data_id, ANY)]:
+                    ("loss", data_id, ANY),
+                    # step-keyed commit staging (step == rnd): normally
+                    # removed by _commit_update, but a commit interleaved
+                    # with a crash can strand tiles — belt over braces.
+                    ("wnew", ANY, rnd, ANY, ANY),
+                    ("bnew", ANY, rnd, ANY, ANY)]:
             ts.delete(pat)
         ts.delete(("done", ANY, ANY, data_id, ANY, ANY, ANY, ANY, ANY))
+
+    # ------------------------------------------------------------- protocol
+    def key_schemas(self) -> tuple[KeySchema, ...]:
+        return KEY_SCHEMAS

@@ -79,6 +79,7 @@ from repro.core.executor import ExecContext
 from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
                                 record_loss)
 from repro.core.space import ANY
+from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc
 
 ROUTE = "moe_route"
@@ -191,6 +192,63 @@ for _spec in (
            lambda t: EXPERT_COST_PER_SLOT * t.n),
 ):
     GLOBAL_OPS.register(_spec)
+
+
+# --------------------------------------------------------------------------
+# Declared data-plane key protocol (PR 6) — the docstring table, checkable
+# --------------------------------------------------------------------------
+
+_MGR = frozenset({"manager"})
+_MGR_HDL = frozenset({"manager", "handler"})     # handler: late-write undo
+_EXEC = frozenset({"executor"})
+_RW = frozenset({"manager", "executor"})
+
+
+def _ks(subject: str, fields: list, producers: frozenset,
+        consumers: frozenset, lifecycle: str,
+        deleters: frozenset = _MGR, description: str = "") -> KeySchema:
+    return KeySchema(subject=subject, fields=tuple(fields),
+                     producers=producers, consumers=consumers,
+                     deleters=deleters, lifecycle=lifecycle,
+                     description=description)
+
+
+KEY_SCHEMAS: tuple[KeySchema, ...] = (
+    _ks("moecfg", [], _MGR, _RW, "persistent",
+        description="program geometry dict"),
+    _ks("xtok", [], _MGR, _RW, "persistent",
+        description="token inputs (T, d_in)"),
+    _ks("ylab", [], _MGR, _RW, "persistent",
+        description="teacher targets (T, d_out)"),
+    _ks("wr", [], _MGR, _RW, "persistent",
+        description="frozen router (E, d_in)"),
+    _ks("we1", [int_field("expert")], _MGR, _RW, "persistent",
+        description="expert FFN W1 (d_h, d_in)"),
+    _ks("we2", [int_field("expert")], _MGR, _RW, "persistent",
+        description="expert FFN W2 (d_out, d_h)"),
+    _ks("wever", [int_field("expert")], _MGR,
+        frozenset({"manager", "executor", "cloud"}), "persistent",
+        description="committed expert version"),
+    _ks("route", [int_field("round"), int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="block routing: top-k ids + gates"),
+    _ks("disp", [int_field("round"), int_field("expert")], _MGR, _RW,
+        "round_scoped", description="per-expert dispatch list"),
+    _ks("efwd", [int_field("round"), int_field("expert"),
+                 int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="gate-weighted expert outputs"),
+    _ks("gw1", [int_field("round"), int_field("expert"),
+                int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="dW1 partial"),
+    _ks("gw2", [int_field("round"), int_field("expert"),
+                int_field("lo"), int_field("hi")],
+        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        description="dW2 partial"),
+    _ks("dy", [int_field("round")], _MGR, _RW, "round_scoped",
+        description="combined dLoss/dYhat (B, d_out)"),
+)
 
 
 # --------------------------------------------------------------------------
@@ -415,3 +473,7 @@ class MoERoutingProgram(WorkloadProgram):
                     ("gw2", rnd, ANY, ANY, ANY), ("dy", rnd)]:
             ts.delete(pat)
         ts.delete(("done", ANY, ANY, rnd, ANY, ANY, ANY, ANY, ANY))
+
+    # ------------------------------------------------------------- protocol
+    def key_schemas(self) -> tuple[KeySchema, ...]:
+        return KEY_SCHEMAS

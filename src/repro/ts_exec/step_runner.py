@@ -15,12 +15,12 @@ This is the bridge between ``core/`` (the paper) and the arch zoo: any
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 from repro.core.gss import TimeoutController
 from repro.core.handler import Handler, SpeedBox
 from repro.core.manager import Manager, ManagerConfig
-from repro.core.space import ANY, TupleSpace
+from repro.core.space import ANY, CONTROL_SCHEMAS, TupleSpace, find_checked
 from repro.models import model as M
 from repro.programs.jax_sgd import JAXSGDProgram
 
@@ -46,6 +46,9 @@ class ACANTrainResult:
     reissues: int
     crashes: int
     param_versions: int
+    #: PR 6 sanitizer outcome (zeros/empty without a CheckedBackend).
+    ts_violations: int = 0
+    ts_leaks: dict = field(default_factory=dict)
 
 
 class ACANStepRunner:
@@ -58,6 +61,12 @@ class ACANStepRunner:
             micro_batch=tcfg.micro_batch, seq=tcfg.seq, lr=tcfg.lr,
             handler_crash_prob=tcfg.handler_crash_prob,
             data_mode=tcfg.data_mode, seed=tcfg.seed)
+        # PR 6: declare the key protocol when a CheckedBackend is stacked
+        # (single-tenant runner — default namespace).
+        checked = find_checked(self.ts.backend)
+        if checked is not None:
+            checked.registry.register_many(
+                CONTROL_SCHEMAS + tuple(self.program.key_schemas()))
 
     # ------------------------------------------------------------------ run
     def run(self) -> ACANTrainResult:
@@ -90,7 +99,11 @@ class ACANStepRunner:
             t.join(timeout=1.0)
         losses = [self.ts.try_read(k)[1]
                   for k in sorted(self.ts.keys(("losshist", ANY)))]
+        checked = find_checked(self.ts.backend)
+        report = checked.protocol_report() if checked is not None else None
         return ACANTrainResult(
             losses=losses, reissues=mgr.reissued,
             crashes=self.program.crashes,
-            param_versions=mgr.window.committed_step.get(0, -1) + 1)
+            param_versions=mgr.window.committed_step.get(0, -1) + 1,
+            ts_violations=0 if report is None else report["violations"],
+            ts_leaks={} if report is None else dict(report["leaks"]))

@@ -86,6 +86,43 @@ def test_plain_tuple_subject_cannot_alias_scoped_subject(ts):
     assert mlp.count(("task", ANY)) == 1
 
 
+def test_scope_helpers_edge_cases(ts):
+    from repro.core.space import match, scope_pattern
+    # non-tuple / empty keys pass through untouched for the backend's
+    # canonical validate_key error, never wrapped
+    assert scope_key("a", "not-a-tuple") == "not-a-tuple"
+    assert scope_key("a", ()) == ()
+    assert scope_pattern("a", ()) == ()
+    assert unscope_key(()) == ()
+    assert key_namespace(()) == DEFAULT_NAMESPACE
+    # a callable (predicate) subject stays namespace-pinned AND keeps the
+    # inner predicate's verdict
+    a = ScopedSpace(ts, "a")
+    a.put(("task", "t1"), "wa")
+    ScopedSpace(ts, "b").put(("task", "t1"), "wb")
+    hit = scope_pattern("a", (lambda s: s == "task", ANY))
+    miss = scope_pattern("a", (lambda s: s == "done", ANY))
+    assert match(hit, scope_key("a", ("task", "t1")))
+    assert not match(hit, scope_key("b", ("task", "t1")))
+    assert not match(hit, ("task", "t1"))       # raw key: other tenant
+    assert not match(miss, scope_key("a", ("task", "t1")))
+    assert a.count((lambda s: s == "task", ANY)) == 1
+    assert a.count((lambda s: s == "done", ANY)) == 0
+    # ANY subject in a scoped view widens within the namespace only
+    assert a.count((ANY, ANY)) == 1
+    assert a.take_batch((ANY, ANY), 8)[0] == (("task", "t1"), "wa")
+
+
+def test_scoped_try_get_and_put_many_roundtrip(ts):
+    a, b = ScopedSpace(ts, "a"), ScopedSpace(ts, "b")
+    a.put_many([(("act", i), i * 10) for i in range(3)])
+    assert b.try_get(("act", ANY)) is None
+    k, v = a.try_get(("act", 1))
+    assert (k, v) == (("act", 1), 10)            # returned key unscoped
+    assert a.count(("act", ANY)) == 2            # try_get was destructive
+    assert ts.count(("act", ANY)) == 0           # raw view sees nothing
+
+
 def test_scoped_mstate_cursors_do_not_collide(ts):
     a, b = ScopedSpace(ts, "a"), ScopedSpace(ts, "b")
     a.put(("mstate", "cursor"), {"round": 3})

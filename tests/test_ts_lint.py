@@ -1,0 +1,63 @@
+"""Static tuple-space lint pass (PR 6): the sources must resolve clean
+against the key-schema registry, and every seeded-violation fixture must
+be flagged with exactly the kind it seeds.
+"""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.ts_lint import (DOC_END, DOC_START, doc_table,  # noqa: E402
+                           lint_paths, main)
+
+FIXTURES = REPO / "tools" / "ts_lint_fixtures"
+
+#: fixture file -> the single violation kind it seeds
+EXPECTED = {
+    "fx_unknown_subject.py": "unknown-subject",
+    "fx_arity_mismatch.py": "arity-mismatch",
+    "fx_wildcard_in_put.py": "wildcard-in-put",
+    "fx_role_violation.py": "role-violation",
+    "fx_widened_delete.py": "widened-delete",
+    "fx_bad_literal_type.py": "bad-literal-type",
+}
+
+
+def test_sources_lint_clean():
+    findings = lint_paths([REPO / "src" / "repro"])
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_every_fixture_flagged_with_expected_kind():
+    findings = lint_paths([FIXTURES])
+    by_file = {}
+    for f in findings:
+        by_file.setdefault(Path(f.path).name, []).append(f)
+    assert set(by_file) == set(EXPECTED)
+    for name, kind in EXPECTED.items():
+        kinds = [f.kind for f in by_file[name]]
+        assert kinds == [kind], f"{name}: {kinds}"
+
+
+def test_cli_exit_codes():
+    assert main([str(REPO / "src" / "repro")]) == 0
+    assert main([str(FIXTURES)]) == 1
+
+
+def test_doc_table_covers_control_and_program_planes():
+    table = doc_table()
+    for subject in ("task", "done", "mstate", "fpart", "efwd",
+                    "params", "gpart"):
+        assert f'"{subject}"' in table
+    for lifecycle in ("persistent", "round_scoped", "taken_once"):
+        assert lifecycle in table
+
+
+def test_readme_table_is_current():
+    readme = REPO / "README.md"
+    text = readme.read_text()
+    assert DOC_START in text and DOC_END in text
+    assert main(["--check-doc", str(readme)]) == 0

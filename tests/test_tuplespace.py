@@ -17,7 +17,8 @@ from repro.core import ANY, Ledger, TSTimeout, TupleSpace, match
 from repro.core.space import (InstrumentedBackend, LocalBackend,
                               ShardedBackend, make_backend)
 
-BACKEND_SPECS = ["local", "sharded", "sharded:3", "instrumented:sharded:4"]
+BACKEND_SPECS = ["local", "sharded", "sharded:3", "instrumented:sharded:4",
+                 "checked+local", "checked+sharded"]
 
 
 @pytest.fixture(params=BACKEND_SPECS)

@@ -1,0 +1,5 @@
+"""Repo tooling — static analysis over the tuple-space protocol.
+
+``python -m tools.ts_lint`` is the entry point (see
+:mod:`tools.ts_lint`).
+"""

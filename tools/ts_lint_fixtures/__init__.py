@@ -1,0 +1,6 @@
+"""Seeded ts_lint violations — exactly ONE finding per fixture module.
+
+These files are never imported at runtime; the linter parses them as
+source. ``tests/test_ts_lint.py`` asserts each is flagged with the
+expected kind (the lint pass's negative test).
+"""

@@ -1,0 +1,5 @@
+"""Fixture: mstate pattern with the name field missing."""
+
+
+def f(ts):
+    return ts.read(("mstate",))

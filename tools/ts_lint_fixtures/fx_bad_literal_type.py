@@ -1,0 +1,5 @@
+"""Fixture: task id must be a string, not an int."""
+
+
+def f(ts):
+    ts.put(("task", 42), "x")

@@ -1,0 +1,7 @@
+"""Fixture: a handler deleting the Manager's private cursor."""
+
+TS_LINT_ROLE = "handler"
+
+
+def f(ts):
+    ts.delete(("mstate", "cursor"))

@@ -1,0 +1,5 @@
+"""Fixture: put under a subject no KeySchema declares."""
+
+
+def f(ts):
+    ts.put(("zzz_bogus", 1), "v")

@@ -1,0 +1,7 @@
+"""Fixture: a subject-widened delete (the PR 4 corruption class)."""
+
+from repro.core.space import ANY
+
+
+def f(ts):
+    return ts.delete((ANY, ANY))

@@ -1,0 +1,7 @@
+"""Fixture: a wildcard inside a put key (keys must be concrete)."""
+
+from repro.core.space import ANY
+
+
+def f(ts):
+    ts.put(("task", ANY), "x")
