@@ -1,5 +1,10 @@
 """Benchmark harness — one entry per paper table/figure plus framework
-benches. Prints ``name,us_per_call,derived`` CSV rows.
+benches. Prints ``name,us_per_call,derived`` CSV rows and persists the
+same rows machine-readably to ``runs/bench/BENCH_<n>.json`` (next free
+``n`` — one immutable artifact per invocation, so regressions can be
+diffed across runs without scraping stdout; each row records the
+metric, the raw derived string, and the parsed ``pass=`` gate verdict
+where the row carries one).
 
     PYTHONPATH=src python -m benchmarks.run [--paper-scale]
 
@@ -11,8 +16,50 @@ The roofline rows summarise the multi-pod dry-run artifacts if present
 
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
 import time
+
+#: Where the per-invocation JSON artifacts land (repo-relative).
+BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "runs", "bench")
+
+
+def _row_record(us: float, derived: str) -> dict:
+    """One row's machine-readable record. ``gate_pass`` is the parsed
+    ``pass=True/False`` verdict for gate rows, None for plain metrics."""
+    m = re.search(r"\bpass=(True|False)\b", derived)
+    return {"us_per_call": round(us, 1), "derived": derived,
+            "gate_pass": None if m is None else m.group(1) == "True"}
+
+
+def write_bench_json(rows: list[tuple[str, float, str]],
+                     scale: str, out_dir: str = BENCH_DIR) -> str:
+    """Persist rows to the next free ``BENCH_<n>.json`` and return its
+    path. ``n`` is one past the highest existing artifact number, so
+    artifacts are append-only across invocations."""
+    os.makedirs(out_dir, exist_ok=True)
+    taken = []
+    for fn in os.listdir(out_dir):
+        m = re.fullmatch(r"BENCH_(\d+)\.json", fn)
+        if m is not None:
+            taken.append(int(m.group(1)))
+    path = os.path.join(out_dir, f"BENCH_{max(taken, default=0) + 1}.json")
+    doc = {
+        "scale": scale,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "rows": {name: _row_record(us, derived)
+                 for name, us, derived in rows},
+        "gates_passed": all(
+            r["gate_pass"] is not False
+            for r in (_row_record(us, d) for _, us, d in rows)),
+    }
+    with open(path, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return path
 
 
 def main() -> None:
@@ -93,6 +140,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    path = write_bench_json(rows, scale)
+    print(f"# wrote {os.path.relpath(path)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

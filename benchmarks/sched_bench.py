@@ -27,12 +27,22 @@ pouch does not fill the fleet — run once sequentially
 utilisation** (emulated busy seconds / fleet wallclock) with identical
 loss trajectories.
 
+And the **autotune** row (PR 7): the same MoE workload on a
+heterogeneous fleet (speeds ``AUTOTUNE_SPEEDS``), static frontier-8
+knobs vs the online cost model (``CloudConfig.autotune=True`` — learned
+per-(op, handler) latencies drive drain order, slow-handler deferral,
+frontier width and pouch sizing), with ``--autotune-only`` running just
+that gate (the CI checked-backend leg).
+
 Acceptance (exit code): event mode must use **>= 5x fewer TS ops per
 completed pouch** than poll mode, with wallclock no worse (1.15x slack
 for timer noise) and matching loss trajectories (1e-3 rtol — the batched
 executor may reassociate float reductions); the pipelined MoE run must
 beat the sequential makespan by **>= PIPELINE_SPEEDUP_FLOOR** with
-higher handler utilisation and a bit-identical trajectory.
+higher handler utilisation and a bit-identical trajectory; the autotune
+run must beat the static heterogeneous-fleet makespan by
+**>= AUTOTUNE_SPEEDUP_FLOOR** with an identical trajectory and (under a
+checked backend) zero protocol violations and zero leaks.
 """
 
 from __future__ import annotations
@@ -56,6 +66,16 @@ WALLCLOCK_SLACK = 1.15
 #: makespan improvement the frontier scheduler must deliver on the MoE
 #: stage DAG (measured ~1.8x on 4 handlers; floor leaves CI timer slack).
 PIPELINE_SPEEDUP_FLOOR = 1.25
+#: makespan improvement the online cost model must deliver on the MoE DAG
+#: over the static frontier-8 baseline when the fleet is heterogeneous
+#: (speed ratios drawn from the paper's §6 1:5:10 palette): LPT drain
+#: ordering plus slow-handler deferral keep the expert groups off the
+#: slow boxes (measured 1.25–1.6x over 8 runs on both backends).
+AUTOTUNE_SPEEDUP_FLOOR = 1.2
+#: Heterogeneous speed ratios used by the autotune gate. Three slow
+#: boxes + one 10x box maximises how much FIFO draining hurts the static
+#: baseline, which is exactly the placement problem the model solves.
+AUTOTUNE_SPEEDS = [1.0, 1.0, 1.0, 10.0]
 
 
 def run_mode(scheduling: str, backend: str, layers, epochs: int,
@@ -107,6 +127,57 @@ def run_pipeline_mode(max_inflight: int, backend: str, steps: int,
         "completed": len(res.loss_history) == steps,
         "pouches": res.pouches,
     }
+
+
+def run_autotune_mode(autotune: bool, backend: str, steps: int,
+                      seed: int) -> dict:
+    """One MoE run on the heterogeneous fleet, static frontier-8 knobs vs
+    the online cost model. ``handler_batch=4`` gives the drain-order and
+    deferral levers room to act (a 1-task batch has nothing to reorder);
+    both runs share it, so the comparison isolates the model."""
+    prog = MoERoutingProgram(steps=steps, seed=seed)
+    cfg = CloudConfig(n_handlers=4, task_cap=128.0, pouch_size=64,
+                      time_scale=2e-4, initial_timeout=0.25,
+                      handler_batch=4, fault_plan=FaultPlan(interval=1e9),
+                      wall_limit=600.0, ts_backend=backend,
+                      max_inflight_stages=8,
+                      handler_speeds=list(AUTOTUNE_SPEEDS),
+                      autotune=autotune)
+    cloud = ACANCloud(cfg, program=prog)
+    res = cloud.run()
+    return {
+        "autotune": autotune,
+        "wallclock": res.wallclock,
+        "utilisation": (cloud.handler_busy_time()
+                        / max(cfg.n_handlers * res.wallclock, 1e-9)),
+        "losses": [l for _, l in res.loss_history],
+        "completed": len(res.loss_history) == steps,
+        "pouches": res.pouches,
+        "deferred": res.cost_report.get("tasks_deferred", 0),
+        "ts_violations": res.ts_violations,
+        "ts_leaks": res.ts_leaks,
+    }
+
+
+def autotune_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
+    """Static frontier-8 vs cost-model autotune on the 1:1:1:10 fleet:
+    the learned-latency acceptance gate. The trajectory must stay
+    identical (the model only reorders/right-sizes scheduling; MoE is
+    width-invariant), and under a checked backend the new cstats traffic
+    must be violation- and leak-free."""
+    # More steps than the pipeline gate: the model needs a few batches to
+    # fit before deferral bites, and the amortised contrast is what the
+    # floor protects — 5 steps is cold-start-dominated and noisy.
+    steps = 10 if smoke else 15
+    static = run_autotune_mode(False, backend, steps, seed)
+    auto = run_autotune_mode(True, backend, steps, seed)
+    speedup = static["wallclock"] / max(auto["wallclock"], 1e-9)
+    loss_ok = (static["completed"] and auto["completed"]
+               and static["losses"] == auto["losses"])   # identical
+    clean = auto["ts_violations"] == 0 and not auto["ts_leaks"]
+    ok = speedup >= AUTOTUNE_SPEEDUP_FLOOR and loss_ok and clean
+    return {"static": static, "auto": auto, "speedup": speedup,
+            "loss_ok": loss_ok, "clean": clean, "ok": ok}
 
 
 def pipeline_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
@@ -168,6 +239,17 @@ def bench_rows(smoke: bool = True,
                  f"{pg['pipe']['utilisation']:.2f} "
                  f"loss_match={pg['loss_ok']} "
                  f"gate>={PIPELINE_SPEEDUP_FLOOR:.2f}x pass={pg['ok']}"))
+    # Online cost model vs static knobs on the heterogeneous fleet (PR 7)
+    # — learned latencies drive drain order, deferral, width and pouch.
+    ag = autotune_gate(smoke, backend)
+    rows.append((f"sched_autotune_{backend}",
+                 ag["auto"]["wallclock"] * 1e6,
+                 f"static={ag['static']['wallclock']:.2f}s "
+                 f"auto={ag['auto']['wallclock']:.2f}s "
+                 f"speedup={ag['speedup']:.2f}x "
+                 f"deferred={ag['auto']['deferred']} "
+                 f"loss_match={ag['loss_ok']} clean={ag['clean']} "
+                 f"gate>={AUTOTUNE_SPEEDUP_FLOOR:.2f}x pass={ag['ok']}"))
     return rows
 
 
@@ -185,7 +267,25 @@ def main() -> int:
                          "comparison to be representative), 1 epoch, "
                          "8 samples")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--autotune-only", action="store_true",
+                    help="run only the cost-model autotune gate (the CI "
+                         "checked-backend leg: speedup + identical "
+                         "trajectory + zero ts violations/leaks)")
     args = ap.parse_args()
+
+    if args.autotune_only:
+        ag = autotune_gate(args.smoke, args.backend, args.seed)
+        print(f"autotune (MoE, speeds {AUTOTUNE_SPEEDS}): "
+              f"static={ag['static']['wallclock']:.2f}s "
+              f"auto={ag['auto']['wallclock']:.2f}s "
+              f"speedup={ag['speedup']:.2f}x "
+              f"(target >= {AUTOTUNE_SPEEDUP_FLOOR:.2f}x), "
+              f"deferred={ag['auto']['deferred']}, "
+              f"trajectory {'identical' if ag['loss_ok'] else 'DIVERGES'}, "
+              f"ts_violations={ag['auto']['ts_violations']}, "
+              f"ts_leaks={len(ag['auto']['ts_leaks'])} "
+              f"-> {'PASS' if ag['ok'] else 'FAIL'}")
+        return 0 if ag["ok"] else 1
 
     if args.smoke:
         args.epochs, args.samples = 1, 8
@@ -232,19 +332,29 @@ def main() -> int:
           f"{pg['pipe']['utilisation']:.2f}, "
           f"trajectory {'bit-identical' if pg['loss_ok'] else 'DIVERGES'}")
 
+    ag = autotune_gate(args.smoke, args.backend, args.seed)
+    print(f"autotune (MoE, heterogeneous speeds {AUTOTUNE_SPEEDS}): "
+          f"static={ag['static']['wallclock']:.2f}s "
+          f"auto={ag['auto']['wallclock']:.2f}s "
+          f"speedup={ag['speedup']:.2f}x "
+          f"(target >= {AUTOTUNE_SPEEDUP_FLOOR:.2f}x), "
+          f"deferred={ag['auto']['deferred']}, "
+          f"trajectory {'identical' if ag['loss_ok'] else 'DIVERGES'}")
+
     ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
     wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
     loss_ok = (len(poll["losses"]) == len(event["losses"])
                and np.allclose(poll["losses"], event["losses"],
                                rtol=1e-3, atol=1e-5))
     ok = (ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
-          and adap_loss_ok and pg["ok"])
+          and adap_loss_ok and pg["ok"] and ag["ok"])
     print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
           f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
           f"wallclock {'OK' if wall_ok else 'WORSE'}, "
           f"loss trajectories {'match' if loss_ok else 'DIVERGE'}, "
           f"adaptive pouch {'matches' if adap_loss_ok else 'DIVERGES'}, "
-          f"pipeline overlap {'PASS' if pg['ok'] else 'FAIL'} "
+          f"pipeline overlap {'PASS' if pg['ok'] else 'FAIL'}, "
+          f"autotune {'PASS' if ag['ok'] else 'FAIL'} "
           f"-> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

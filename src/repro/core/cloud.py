@@ -88,9 +88,31 @@ class CloudConfig:
     #: namespace a handler keeps per drained batch) applied to every
     #: handler of the fleet — see HandlerTenant.max_tasks.
     tenant_caps: dict | None = None
+    #: Online cost-model autotuning (PR 7): handlers report per-op
+    #: compute stats to TS, every Manager fits an OnlineCostModel from
+    #: them and lets it set frontier width / pouch size / the published
+    #: drain-priority backlog, and handlers drain longest-predicted-work-
+    #: first and defer ops they are fitted as far slower than the fleet's
+    #: best at. Off (default) = byte-identical scheduling to PR 6.
+    autotune: bool = False
+    #: Autotune frontier-width ceiling (see ManagerConfig).
+    autotune_max_width: int = 16
+    #: Initial per-handler speed ratios (paper §6: e.g. [1, 1, 5, 10]).
+    #: Must have exactly ``n_handlers`` entries; None = all 1.0. The
+    #: MonitorDaemon's speed re-draws still apply on top.
+    handler_speeds: list | None = None
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
+        if self.handler_speeds is not None:
+            if len(self.handler_speeds) != self.n_handlers:
+                raise ValueError(
+                    f"handler_speeds must have n_handlers="
+                    f"{self.n_handlers} entries, got "
+                    f"{len(self.handler_speeds)}")
+            if any(float(s) <= 0.0 for s in self.handler_speeds):
+                raise ValueError(
+                    f"handler_speeds must be > 0, got {self.handler_speeds}")
 
 
 @dataclass
@@ -112,6 +134,11 @@ class CloudResult:
     ts_violations: int = 0
     ts_violation_samples: list = field(default_factory=list)
     ts_leaks: dict = field(default_factory=dict)
+    #: PR 7 autotune surface (empty with autotune off): the fitted
+    #: cost-model report of this program's Manager
+    #: (op -> handler -> {n, units, secs, unit_secs}) plus fleet-level
+    #: counters (tasks deferred by the slow-handler rule).
+    cost_report: dict = field(default_factory=dict)
 
 
 @dataclass
@@ -214,11 +241,16 @@ class ACANCloud:
                 scheduling=self.cfg.scheduling,
                 history_limit=self.cfg.history_limit,
                 adaptive_pouch=self.cfg.adaptive_pouch,
-                max_inflight_stages=self.cfg.max_inflight_stages),
+                max_inflight_stages=self.cfg.max_inflight_stages,
+                autotune=self.cfg.autotune,
+                autotune_max_width=self.cfg.autotune_max_width),
             power_fn=power_fn,
             crash_event=self._manager_crashes[i],
             stop_event=self.stop_event,
         )
+        # Keep the latest incarnation: a revival replaces the Manager
+        # object, and the cost_report surface must read the live model.
+        self._managers[i] = mgr
         suffix = f"-{self.namespaces[i]}" if self.multi else ""
         th = threading.Thread(target=self._manager_body, args=(mgr,),
                               name=f"acan-manager{suffix}", daemon=True)
@@ -264,6 +296,7 @@ class ACANCloud:
                     scheduling=self.cfg.scheduling,
                     registry=registry,
                     tenants=tenants,
+                    autotune=self.cfg.autotune,
                     crash_event=self._handler_crashes[i],
                     stop_event=self.stop_event)
         self._handlers[i] = h
@@ -323,6 +356,18 @@ class ACANCloud:
         thist.sort()
         rounds_hit = space.try_read(("mstate", "rounds"))
         total_rounds = rounds_hit[1] if rounds_hit is not None else 0
+        cost_report: dict = {}
+        if self.cfg.autotune:
+            mgr = self._managers[i]
+            model = mgr.cost_model if mgr is not None else None
+            cost_report = {
+                "ops": model.report() if model is not None else {},
+                "fleet_units_per_sec": (model.fleet_units_per_sec()
+                                        if model is not None else 0.0),
+                "tasks_deferred": sum(h.tasks_deferred
+                                      for h in self._handlers
+                                      if h is not None),
+            }
         return CloudResult(
             loss_history=loss_hist,
             timeout_history=thist,
@@ -338,6 +383,7 @@ class ACANCloud:
             ts_violation_samples=([] if report is None
                                   else list(report["violation_samples"])),
             ts_leaks=self._ns_leaks(report, self.namespaces[i]),
+            cost_report=cost_report,
         )
 
     # ----------------------------------------------------------------- run
@@ -353,8 +399,10 @@ class ACANCloud:
         n_programs = len(self.programs)
         self._manager_crashes = [threading.Event() for _ in range(n_programs)]
         self._handler_crashes = [threading.Event() for _ in range(cfg.n_handlers)]
-        self._speed_boxes = [SpeedBox(1.0) for _ in range(cfg.n_handlers)]
+        speeds = cfg.handler_speeds or [1.0] * cfg.n_handlers
+        self._speed_boxes = [SpeedBox(float(s)) for s in speeds]
         self._handlers: list[Handler | None] = [None] * cfg.n_handlers
+        self._managers: list[Manager | None] = [None] * n_programs
         self._busy_retired = 0.0
 
         daemon = MonitorDaemon(

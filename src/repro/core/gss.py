@@ -79,6 +79,34 @@ class PouchController:
             self.shrink_grace = 0
         return self.pouch
 
+    def cost_target(self, pred_costs: list[float], rate: float,
+                    target_secs: float) -> int:
+        """Cost-aware pouch size (autotune mode): take leading tasks
+        until their summed predicted cost would keep the fleet busy for
+        about ``target_secs`` — ``rate`` is the fleet's fitted drain
+        rate in the same cost units per second (``pred_costs`` may also
+        be plain seconds with ``rate=1``). Replaces the fixed count with
+        a fixed *predicted drain time*, so a pouch of cheap tasks grows
+        (fewer barriers) and a pouch of expensive tasks shrinks (less
+        lost in-flight work per timeout). Clamped to
+        [``min_pouch``, ``max_pouch``] and recorded in ``pouch`` so the
+        Manager checkpoint persists the latest size."""
+        if rate <= 0.0 or target_secs <= 0.0 or not pred_costs:
+            return self.pouch
+        budget = rate * target_secs
+        total = 0.0
+        n = 0
+        for c in pred_costs:
+            if n >= self.max_pouch:
+                break
+            n += 1
+            total += max(float(c), 0.0)
+            if total >= budget and n >= self.min_pouch:
+                break
+        self.pouch = max(min(n, self.max_pouch),
+                         min(self.min_pouch, len(pred_costs)))
+        return self.pouch
+
     def revive(self, configured: int) -> int:
         """Reset the controller on Manager revival. A crashed pouch reads
         as a barrier timeout, which is a *fault* signal, not a *load*

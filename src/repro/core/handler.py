@@ -59,6 +59,7 @@ from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Any
 
+from repro.core.costmodel import OnlineCostModel, read_backlog
 from repro.core.executor import PreconditionUnmet, TaskExecutor
 from repro.core.manager import validate_scheduling
 from repro.core.program import OpRegistry, UnknownOp, ensure_builtin_ops
@@ -95,6 +96,12 @@ class _TenantRT:
     space: Any
     registry: OpRegistry
     executor: TaskExecutor
+    #: Autotune mode only: this tenant's online cost model — the handler
+    #: observes its own (op, cost-units, seconds) samples into it,
+    #: publishes them as ``("cstats", op, name)`` rows in the tenant's
+    #: namespace, and refreshes the fleet's rows back out of TS for the
+    #: slow-handler deferral rule. None with autotune off.
+    model: OnlineCostModel | None = None
 
 
 @dataclass
@@ -136,6 +143,20 @@ class Handler:
     #: namespace -> HandlerTenant for the multi-tenant fleet; None = the
     #: single-tenant fast path over (ts, registry).
     tenants: dict[str, HandlerTenant] | None = None
+    #: Online cost-model participation (PR 7, default off = byte-identical
+    #: drain behaviour): report per-op compute stats to TS, drain groups
+    #: longest-predicted-work-first across tenants (by each tenant's
+    #: published backlog, then LPT within), and defer predicted-long tasks
+    #: this handler is fitted as far slower than the fleet's best at.
+    autotune: bool = False
+    #: Deferral threshold: store a task back when our fitted unit time
+    #: for its op exceeds ``defer_ratio`` × the fleet's best. A deferred
+    #: task circulates among slow handlers at ``store_backoff`` cadence
+    #: at worst (the skip window rate-limits re-drains) until a fast
+    #: handler takes it — and a handler draining its *own* tag past the
+    #: window always executes, so progress is guaranteed even with every
+    #: handler fitted slow.
+    defer_ratio: float = 3.0
     crash_event: threading.Event = field(default_factory=threading.Event)
     stop_event: threading.Event = field(default_factory=threading.Event)
     tasks_done: int = 0
@@ -143,6 +164,7 @@ class Handler:
     tasks_stored: int = 0
     tasks_capped: int = 0             # stored back over a tenant max_tasks cap
     tasks_fenced: int = 0             # dropped/undone: round already finished
+    tasks_deferred: int = 0           # stored back by the slow-handler rule
     batches_taken: int = 0
     busy_time: float = 0.0            # emulated compute seconds (utilisation)
 
@@ -248,7 +270,9 @@ class Handler:
                 self.registry = ensure_builtin_ops()
             self._rt = {DEFAULT_NAMESPACE: _TenantRT(
                 self.ts, self.registry,
-                TaskExecutor(self.ts, lr=self.lr, registry=self.registry))}
+                TaskExecutor(self.ts, lr=self.lr, registry=self.registry),
+                model=(OnlineCostModel(registry=self.registry)
+                       if self.autotune else None))}
             self._take_pat = ("task", ANY)
             self._caps = {}
         else:
@@ -259,7 +283,9 @@ class Handler:
                        else ensure_builtin_ops())
                 self._rt[ns] = _TenantRT(
                     tenant.space, reg,
-                    TaskExecutor(tenant.space, lr=self.lr, registry=reg))
+                    TaskExecutor(tenant.space, lr=self.lr, registry=reg),
+                    model=(OnlineCostModel(registry=reg)
+                           if self.autotune else None))
                 if tenant.max_tasks is not None:
                     if int(tenant.max_tasks) < 1:
                         # 0 would make every handler store this tenant's
@@ -289,9 +315,15 @@ class Handler:
                 continue
             self.batches_taken += 1
             now = time.monotonic()
-            runnable: list[tuple[str, TaskDesc]] = []
+            # (ns, task, cost, key, wire, defer_ok) per kept task — key/
+            # wire kept so a group can still be stored back mid-batch
+            # (the post-observation deferral below), defer_ok so a task
+            # we must execute (our own tag past its skip window) is never
+            # re-deferred.
+            runnable: list[tuple] = []
             kept: dict[str, int] = {}     # per-namespace tasks kept (caps)
             fences: dict[str, float] = {}  # per-namespace frontier base
+            refreshed: set[str] = set()   # namespaces re-fitted this batch
             deferred = 0
             for key, value in batch:
                 wire, stored_by = _unpack_task(value)
@@ -314,9 +346,12 @@ class Handler:
                         # fence below catches whatever slips through.)
                         self.tasks_fenced += 1
                         continue
-                if stored_by == self.name and now < skip_until.get(key, 0.0):
-                    # Own fresh re-put: hand it back untouched and let
-                    # another handler reach it first.
+                if (stored_by is not None
+                        and now < skip_until.get(key, 0.0)):
+                    # A task we stored or deferred moments ago (the tag
+                    # may have been rewritten by another handler since):
+                    # hand it back untouched and let someone else reach
+                    # it first.
                     self.ts.put(key, value)
                     self._unstore_if_stale(key, value, task, rt)
                     deferred += 1
@@ -334,6 +369,9 @@ class Handler:
                     self.tasks_capped += 1
                     deferred += 1
                     continue
+                # Compute the registered cost ONCE per drained task — it
+                # classifies here and prices the group's emulated compute
+                # below (threaded through `runnable`/`_group`).
                 cost = (None if task is None
                         else self._task_cost(task, rt.registry))
                 if cost is None or cost > self.capacity:
@@ -347,18 +385,75 @@ class Handler:
                     self.tasks_stored += 1
                     deferred += 1
                     continue
+                if (self.autotune and stored_by != self.name
+                        and self._should_defer(rt, ns, task, refreshed)):
+                    # Slow-handler deferral: the fleet's fit says a peer
+                    # runs this op ≥ defer_ratio× faster than us — store
+                    # it back (tagged ours) so a faster handler drains
+                    # it. It circulates among slow handlers at backoff
+                    # cadence at worst (the skip window above), and a
+                    # handler draining its OWN tag past the window
+                    # executes it — guaranteed progress, no livelock
+                    # even with every handler fitted slow.
+                    stored = (wire, self.name)
+                    self.ts.put(key, stored)
+                    self._unstore_if_stale(key, stored, task, rt)
+                    # Quarter window: a deferred task should reach a fast
+                    # handler quickly — unlike a capability miss, some
+                    # handler CAN run it right now, we just prefer not to.
+                    skip_until[key] = now + self.store_backoff / 4.0
+                    self.tasks_stored += 1
+                    self.tasks_deferred += 1
+                    deferred += 1
+                    continue
                 kept[ns] = kept.get(ns, 0) + 1
-                runnable.append((ns, task))
+                runnable.append((ns, task, cost, key, wire,
+                                 stored_by != self.name))
             if len(skip_until) > 4 * self.batch_size:   # prune stale tids
                 skip_until = {k: t for k, t in skip_until.items() if t > now}
-            for ns, group in self._group(runnable):
+            groups = self._group(runnable)
+            if self.autotune and len(groups) > 1:
+                groups = self._prioritize(groups)
+            executed = False
+            for ns, entries, group_cost in groups:
                 rt = self._rt[ns]
+                group = [e[1] for e in entries]
+                if (self.autotune and executed
+                        and all(e[5] for e in entries)
+                        and self._should_defer(rt, ns, group[0], set())):
+                    # Post-observation deferral: executing an earlier
+                    # group of this batch updated our own fit — if it now
+                    # says the fleet's best runs this op ≥ defer_ratio×
+                    # faster, store the whole group back instead of
+                    # sitting on it. This bounds a cold slow handler's
+                    # damage to ONE group per batch instead of the whole
+                    # drain.
+                    for g_ns, g_task, _, g_key, g_wire, _ in entries:
+                        stored = (g_wire, self.name)
+                        self.ts.put(g_key, stored)
+                        self._unstore_if_stale(g_key, stored, g_task, rt)
+                        skip_until[g_key] = (time.monotonic()
+                                             + self.store_backoff / 4.0)
+                    self.tasks_stored += len(entries)
+                    self.tasks_deferred += len(entries)
+                    continue
                 # Emulated compute time for the whole group — proportional
-                # to summed cost, inversely to current speed (paper §6.2).
+                # to summed cost (computed once, at classification),
+                # inversely to current speed (paper §6.2).
+                t_exec = time.monotonic()
                 self._throttled_sleep(
-                    sum(rt.registry.cost(t) for t in group)
+                    group_cost
                     * self.time_scale
                     / max(self.speed.get(), 1e-6))
+                executed = True
+                if rt.model is not None:
+                    rt.model.observe(group[0].op, group_cost,
+                                     time.monotonic() - t_exec,
+                                     src=self.name, n=len(group))
+                    # Publish eagerly (dirty rows only — cheap): peers'
+                    # deferral decisions are only as fresh as our last
+                    # published fit.
+                    rt.model.publish(rt.space, self.name)
                 if self.stop_event.is_set():
                     return
                 if group[0].step < self._fence_base(rt):
@@ -389,13 +484,65 @@ class Handler:
                 self.stop_event.wait(self.store_backoff)
 
     @staticmethod
-    def _group(tasks: list[tuple[str, TaskDesc]]) -> list[tuple[str, list[TaskDesc]]]:
+    def _group(
+        entries: list[tuple],
+    ) -> list[tuple[str, list[tuple], float]]:
         """Group compatible tasks for vectorized execution — never across
-        namespaces (each group executes against one tenant's space)."""
-        groups: dict[tuple, list[TaskDesc]] = defaultdict(list)
-        for ns, t in tasks:
-            groups[(ns, t.op, t.layer, t.data_id, t.step)].append(t)
-        return [(sig[0], group) for sig, group in groups.items()]
+        namespaces (each group executes against one tenant's space).
+        ``entries`` are the classification tuples
+        ``(ns, task, cost, key, wire, defer_ok)``; each group keeps them
+        whole (so it can be stored back mid-batch) and carries the sum of
+        its tasks' classification-time costs, so the compute pricing
+        never re-walks the registry."""
+        groups: dict[tuple, list[tuple]] = defaultdict(list)
+        costs: dict[tuple, float] = defaultdict(float)
+        for e in entries:
+            ns, t, c = e[0], e[1], e[2]
+            groups[(ns, t.op, t.layer, t.data_id, t.step)].append(e)
+            costs[(ns, t.op, t.layer, t.data_id, t.step)] += c
+        return [(sig[0], es, costs[sig]) for sig, es in groups.items()]
+
+    # ------------------------------------------------- autotune (PR 7)
+    def _should_defer(self, rt: _TenantRT, ns: str, task: TaskDesc,
+                      refreshed: set[str]) -> bool:
+        """Fleet-relative slowness test for one fresh task: are we fitted
+        ≥ ``defer_ratio``× slower at its op than the fleet's best source?
+        Requires the fleet fit (lazily refreshed once per batch per
+        namespace) to show at least one *other* reporting source —
+        a lone handler never defers."""
+        model = rt.model
+        if model is None:
+            return False
+        if ns not in refreshed:
+            model.refresh(rt.space, keep_src=self.name)
+            refreshed.add(ns)
+        others = [s for s in model.sources() if s != self.name]
+        if not others:
+            return False
+        mine = model.unit_secs(task.op, src=self.name)
+        return mine > self.defer_ratio * model.best_unit_secs(task.op)
+
+    def _prioritize(
+        self, groups: list[tuple[str, list[tuple], float]],
+    ) -> list[tuple[str, list[tuple], float]]:
+        """Drain order for one batch's groups: tenants with the longest
+        Manager-published predicted backlog first, longest predicted
+        group (LPT) within — so on a heterogeneous fleet the expensive
+        groups start as early as possible and the stage barrier is not
+        held open by a big group started last."""
+        backlog: dict[str, float] = {}
+        for ns, _, _ in groups:
+            if ns not in backlog:
+                backlog[ns] = read_backlog(self._rt[ns].space)
+
+        def key(item: tuple[str, list[tuple], float]):
+            ns, entries, cost = item
+            model = self._rt[ns].model
+            secs = cost * (model.unit_secs(entries[0][1].op, src=self.name)
+                           if model is not None else 1.0)
+            return (-backlog[ns], -secs)
+
+        return sorted(groups, key=key)
 
     # ---------------------------------------------------------- poll loop
     def _run_poll(self) -> None:

@@ -74,9 +74,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable
 
+from repro.core.costmodel import OnlineCostModel
 from repro.core.gss import PouchController, TimeoutController
 from repro.core.conflict import CommitWindow
-from repro.core.program import WorkloadProgram
+from repro.core.program import UnknownOp, WorkloadProgram
 from repro.core.tasks import TaskDesc, content_key
 from repro.core.space import ANY, TSTimeout, TupleSpace, role
 
@@ -127,12 +128,28 @@ class ManagerConfig:
     #: to the pipelined run on any program whose combines are pure
     #: functions of complete stage results (all built-ins).
     max_inflight_stages: int = 1
+    #: Online cost-model autotuning (PR 7): fit per-op latencies from the
+    #: handlers' ``("cstats", op, handler)`` reports and let the fitted
+    #: model set the frontier width (overlap headroom), the pouch size
+    #: (predicted drain time instead of a fixed count), and the published
+    #: backlog row handlers drain by priority. Off (the default) leaves
+    #: every scheduling decision byte-identical to the static knobs.
+    autotune: bool = False
+    #: Autotune-mode frontier-width ceiling (the static
+    #: ``max_inflight_stages`` is the fallback until handlers report).
+    autotune_max_width: int = 16
+    #: Autotune-mode pouch target: aim each pouch at this many seconds of
+    #: predicted fleet drain time.
+    autotune_pouch_secs: float = 0.2
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
         if self.max_inflight_stages < 1:
             raise ValueError("max_inflight_stages must be >= 1, got "
                              f"{self.max_inflight_stages}")
+        if self.autotune_max_width < 1:
+            raise ValueError("autotune_max_width must be >= 1, got "
+                             f"{self.autotune_max_width}")
 
 
 @dataclass
@@ -146,6 +163,7 @@ class _StageRun:
     done_pat: tuple = ()
     issued: set = field(default_factory=set)    # content keys ever pouched
     tids: set = field(default_factory=set)      # tids this stage issued
+    units_left: float = 0.0          # predicted cost units still pending
     # per-pouch barrier state
     pouch: list = field(default_factory=list)
     target: int = 0
@@ -166,6 +184,10 @@ class Manager:
     controller: TimeoutController = field(default_factory=TimeoutController)
     pouch_ctl: PouchController = field(default_factory=PouchController)
     window: CommitWindow = field(default_factory=CommitWindow)
+    #: Fitted online cost model (autotune mode only; None otherwise).
+    #: Created in ``_run`` so a revived Manager re-fits from the
+    #: ``("cstats", ...)`` rows its predecessor's handlers left in TS.
+    cost_model: OnlineCostModel | None = None
     rounds: int = 0                  # pouch rounds (monotonic via TS)
     reissued: int = 0                # tasks re-published after a timeout
     epoch: int = 0                   # (re)start count, persisted in TS
@@ -183,6 +205,8 @@ class Manager:
         self._names_cache: dict[int, list[str]] = {}
         self._deps_cache: dict[int, dict] = {}
         self._wait_rr = 0                        # barrier park rotation
+        # EMA of per-stage task counts — recommend_width's denominator.
+        self._stage_tasks_ema = 0.0
 
     # ------------------------------------------------------------ lifecycle
     def _bump_epoch(self) -> None:
@@ -348,9 +372,59 @@ class Manager:
         self.ts.put_many(iter(items))
         return tids
 
-    def _pouch_size(self) -> int:
+    def _pouch_size(self, pending: list[TaskDesc] | None = None) -> int:
+        """Next pouch's size. Autotune mode sizes by *predicted drain
+        time* — take leading pending tasks until their summed registry
+        cost would keep the fitted fleet busy ``autotune_pouch_secs`` —
+        falling back to the static knobs until handlers have reported
+        (cold start) or when a task's op has no registered cost."""
+        if (self.cfg.autotune and self.cost_model is not None
+                and pending is not None):
+            rate = self.cost_model.fleet_units_per_sec()
+            if rate > 0.0:
+                try:
+                    costs = [self.program.registry.cost(t)
+                             for t in pending[: self.pouch_ctl.max_pouch]]
+                except UnknownOp:
+                    costs = []
+                if costs:
+                    return self.pouch_ctl.cost_target(
+                        costs, rate, self.cfg.autotune_pouch_secs)
         return (self.pouch_ctl.pouch if self.cfg.adaptive_pouch
                 else self.cfg.pouch_size)
+
+    def _frontier_width(self) -> int:
+        """How many stages may be in flight right now. Static
+        ``max_inflight_stages`` unless autotuning, in which case the
+        fitted model may *widen* the frontier (narrow stages on a
+        reporting fleet need more overlap to keep every handler fed) up
+        to ``autotune_max_width``. The configured width is the floor —
+        narrowing below it would serialise stages the operator asked to
+        overlap, a strict regression; before any handler reports, the
+        static width stands."""
+        if not self.cfg.autotune or self.cost_model is None:
+            return self.cfg.max_inflight_stages
+        w = self.cost_model.recommend_width(
+            max(self._stage_tasks_ema, 1.0),
+            lo=self.cfg.max_inflight_stages,
+            hi=max(self.cfg.autotune_max_width,
+                   self.cfg.max_inflight_stages))
+        return self.cfg.max_inflight_stages if w is None else w
+
+    def _publish_backlog(self) -> None:
+        """Refresh the model from the handlers' cstats rows, then publish
+        this tenant's predicted remaining drain time — the cross-tenant
+        priority handlers sort drained batches by (longest-predicted-
+        work-first)."""
+        model = self.cost_model
+        if model is None:
+            return
+        model.refresh(self.ts)
+        units = sum(r.units_left for r in self._inflight.values())
+        rate = model.fleet_units_per_sec()
+        secs = (units / rate if rate > 0.0
+                else units * model.prior_unit_secs)
+        model.publish_backlog(self.ts, secs)
 
     def _sweep_untaken(self, run: _StageRun | None = None) -> int:
         """Remove task tuples nobody took before re-issuing stragglers.
@@ -410,7 +484,13 @@ class Manager:
         if not pending:
             self._complete_stage(run)
             return
-        pouch = pending[: self._pouch_size()]
+        if self.cfg.autotune:
+            try:
+                run.units_left = sum(self.program.registry.cost(t)
+                                     for t in pending)
+            except UnknownOp:
+                run.units_left = 0.0
+        pouch = pending[: self._pouch_size(pending)]
         run.tids.update(self._issue(pouch))
         # Re-issues are tasks published a second time (timeout
         # stragglers) — NOT later pouches of a stage wider than
@@ -472,6 +552,8 @@ class Manager:
         self._sweep_untaken(run)
         run.waiting = False
         run.met_early = False
+        if self.cfg.autotune:
+            self._publish_backlog()
 
     def _complete_stage(self, run: _StageRun) -> None:
         """Every task of the stage has its mark: combine, advance the
@@ -519,7 +601,7 @@ class Manager:
         combine barriers — completed inline, never occupying a slot."""
         launched = False
         overlap = max(1, int(self.program.round_overlap()))
-        while len(self._inflight) < self.cfg.max_inflight_stages:
+        while len(self._inflight) < self._frontier_width():
             nxt = self._next_ready(n_rounds, overlap)
             if nxt is None:
                 break
@@ -533,6 +615,13 @@ class Manager:
             if not tasks:
                 self._complete_stage(run)
                 continue
+            if self.cfg.autotune:
+                # Zero-task barrier stages never occupy a slot, so they
+                # must not drag recommend_width's denominator down.
+                n = float(len(tasks))
+                self._stage_tasks_ema = (
+                    n if self._stage_tasks_ema <= 0.0
+                    else 0.7 * self._stage_tasks_ema + 0.3 * n)
             run.done_pat = self._stage_done_pattern(tasks)
             self._inflight[(rnd, name)] = run
         return launched
@@ -612,6 +701,11 @@ class Manager:
         prog.setup(self.ts)
         self._bump_epoch()
         self._load_frontier()
+        if self.cfg.autotune:
+            self.cost_model = OnlineCostModel(registry=prog.registry)
+            # A revived Manager inherits its predecessor's fleet fit from
+            # the persistent ("cstats", op, handler) rows straight away.
+            self.cost_model.refresh(self.ts)
         n_rounds = prog.n_rounds()
         self._inflight = {}
         # Reclaim every untaken task tuple of dead predecessor epochs up

@@ -71,12 +71,21 @@ class OpSpec:
     ``cost_fn`` is the task-size proxy the paper's §5.2 partitioning and
     the Handler's capability check both consume; ``split_fn`` is one
     level of the partition rule (default: halve the ``out`` slice).
+
+    ``unit_time_prior`` optionally declares the expected seconds per
+    ``cost_fn`` unit (at handler speed 1) — the *prior* the online cost
+    model (:mod:`repro.core.costmodel`) starts from and refines with
+    observed execution; ``None`` falls back to the model's global
+    default. The static ``cost_fn`` thereby stays the single source of
+    task *size*, while the learned part is only the size→seconds
+    conversion the fleet's (re-drawn) speeds determine.
     """
 
     name: str
     batch_fn: BatchFn
     cost_fn: Callable[[TaskDesc], float]
     split_fn: Callable[[TaskDesc], list[TaskDesc]] = split_out_halves
+    unit_time_prior: float | None = None
 
 
 class UnknownOp(KeyError):

@@ -39,21 +39,34 @@ _BLOCKED_THRESHOLD_US = 500.0
 
 
 class _OpStat:
-    __slots__ = ("calls", "total_us", "max_us", "misses")
+    __slots__ = ("calls", "total_us", "max_us", "misses", "timeouts",
+                 "blocked", "blocked_us")
 
     def __init__(self) -> None:
         self.calls = 0
         self.total_us = 0.0
         self.max_us = 0.0
         self.misses = 0
+        # Wait stats (blocking ops only): how often and how long this op
+        # actually parked — the contention signal the online cost model's
+        # consumers read per op, not just in aggregate.
+        self.timeouts = 0
+        self.blocked = 0
+        self.blocked_us = 0.0
 
-    def record(self, us: float, miss: bool = False) -> None:
+    def record(self, us: float, miss: bool = False, timed_out: bool = False,
+               blocked: bool = False) -> None:
         self.calls += 1
         self.total_us += us
         if us > self.max_us:
             self.max_us = us
         if miss:
             self.misses += 1
+        if timed_out:
+            self.timeouts += 1
+        if blocked:
+            self.blocked += 1
+            self.blocked_us += us
 
 
 class InstrumentedBackend:
@@ -81,14 +94,16 @@ class InstrumentedBackend:
     def _record(self, op: str, t0: float, blocking: bool = False,
                 timed_out: bool = False, miss: bool = False) -> None:
         us = (time.perf_counter() - t0) * 1e6
+        contended = blocking and us > _BLOCKED_THRESHOLD_US
         with self._lock:
             stat = self._ops.get(op)
             if stat is None:
                 stat = self._ops[op] = _OpStat()
-            stat.record(us, miss=miss)
+            stat.record(us, miss=miss, timed_out=timed_out,
+                        blocked=contended)
             if timed_out:
                 self.timeouts += 1
-            if blocking and us > _BLOCKED_THRESHOLD_US:
+            if contended:
                 self.blocked += 1
                 self.blocked_us += us
 
@@ -168,13 +183,18 @@ class InstrumentedBackend:
     # ----------------------------------------------------- introspection
     def metrics(self) -> dict[str, dict[str, float]]:
         """Per-op latency breakdown:
-        {op: {calls, total_us, mean_us, max_us, misses}}."""
+        {op: {calls, total_us, mean_us, max_us, misses,
+        timeouts, blocked, blocked_us}} — the last three are the per-op
+        wait stats (blocking calls that timed out / parked, and how long
+        they parked)."""
         with self._lock:
             out = {}
             for op, s in self._ops.items():
                 out[op] = {"calls": s.calls, "total_us": s.total_us,
                            "mean_us": s.total_us / max(s.calls, 1),
-                           "max_us": s.max_us, "misses": s.misses}
+                           "max_us": s.max_us, "misses": s.misses,
+                           "timeouts": s.timeouts, "blocked": s.blocked,
+                           "blocked_us": s.blocked_us}
             return out
 
     def delete_metrics(self) -> dict[Any, dict[str, int]]:

@@ -229,4 +229,12 @@ CONTROL_SCHEMAS: tuple[KeySchema, ...] = (
             deleters={"manager"},
             lifecycle="persistent",
             description="bounded loss trajectory (history_limit entries)"),
+    _schema("cstats", (str_field("kind"), str_field("src")),
+            producers={"manager", "handler"},
+            consumers={"manager", "handler", "cloud"},
+            deleters={"manager", "handler"},    # re-put on every update
+            lifecycle="persistent",
+            description="online cost-model aggregates: per-(op, handler) "
+                        "observed compute (n/units/secs) plus the "
+                        "Manager's predicted-backlog drain-priority row"),
 )

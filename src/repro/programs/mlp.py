@@ -300,12 +300,20 @@ def _cost_update(t: TaskDesc) -> float:
     return float(t.n * max(t.m, 1))
 
 
+# unit_time_prior: the default Handler emulates cost×time_scale/speed
+# seconds per unit (time_scale=2e-6 at speed 1) — the cold-start prior
+# the online cost model (PR 7) refines from observed samples.
 for _spec in (
-    OpSpec(FORWARD, forward_parts, _cost_2d, split_quadrants),
-    OpSpec(ACTIVATION, activation_parts, _cost_act, split_out_halves),
-    OpSpec(LOSS, loss_parts, _cost_loss, split_out_halves),
-    OpSpec(BACKWARD, backward_parts, _cost_2d, split_quadrants),
-    OpSpec(UPDATE, update_parts, _cost_update, split_out_halves),
+    OpSpec(FORWARD, forward_parts, _cost_2d, split_quadrants,
+           unit_time_prior=2e-6),
+    OpSpec(ACTIVATION, activation_parts, _cost_act, split_out_halves,
+           unit_time_prior=2e-6),
+    OpSpec(LOSS, loss_parts, _cost_loss, split_out_halves,
+           unit_time_prior=2e-6),
+    OpSpec(BACKWARD, backward_parts, _cost_2d, split_quadrants,
+           unit_time_prior=2e-6),
+    OpSpec(UPDATE, update_parts, _cost_update, split_out_halves,
+           unit_time_prior=2e-6),
 ):
     GLOBAL_OPS.register(_spec)
 

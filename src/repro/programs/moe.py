@@ -183,13 +183,19 @@ def expert_grad_parts(ctx: ExecContext, tasks: list[TaskDesc]):
     return items
 
 
+# unit_time_prior: the default Handler emulates cost×time_scale/speed
+# seconds per unit (time_scale=2e-6 at speed 1) — the cold-start prior
+# the online cost model refines from observed (op, handler) samples.
 for _spec in (
     OpSpec(ROUTE, route_parts,
-           lambda t: ROUTE_COST_PER_TOKEN * t.n),
+           lambda t: ROUTE_COST_PER_TOKEN * t.n,
+           unit_time_prior=2e-6),
     OpSpec(EXPERT_FWD, expert_fwd_parts,
-           lambda t: EXPERT_COST_PER_SLOT * t.n),
+           lambda t: EXPERT_COST_PER_SLOT * t.n,
+           unit_time_prior=2e-6),
     OpSpec(EXPERT_GRAD, expert_grad_parts,
-           lambda t: EXPERT_COST_PER_SLOT * t.n),
+           lambda t: EXPERT_COST_PER_SLOT * t.n,
+           unit_time_prior=2e-6),
 ):
     GLOBAL_OPS.register(_spec)
 

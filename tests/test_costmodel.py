@@ -1,0 +1,229 @@
+"""The online cost model (PR 7): fit/shrinkage math, the TS publish/
+refresh protocol under the schema'd ``("cstats", kind, src)`` family,
+the scheduler recommendations (frontier width, cost-target pouch), the
+InstrumentedBackend wait statistics the model's consumers read, and a
+small end-to-end autotune run under the checked backend (zero
+violations/leaks, trajectory identical to the static run)."""
+
+import pytest
+
+from repro.core import (ACANCloud, CloudConfig, FaultPlan, MoERoutingProgram,
+                        TupleSpace)
+from repro.core.costmodel import (BACKLOG_KIND, CSTATS,
+                                  DEFAULT_PRIOR_UNIT_SECS, MANAGER_SRC,
+                                  OnlineCostModel, OpObservation,
+                                  read_backlog)
+from repro.core.gss import PouchController
+from repro.core.program import OpRegistry, OpSpec
+from repro.core.space import ANY, TSTimeout
+from repro.core.tasks import TaskDesc
+
+BACKENDS = ["local", "sharded"]
+
+
+def _registry(prior: float | None = None) -> OpRegistry:
+    reg = OpRegistry()
+    reg.register(OpSpec(name="toy", batch_fn=lambda ctx, g: [],
+                        cost_fn=lambda t: float(t.m * t.n),
+                        unit_time_prior=prior))
+    return reg
+
+
+def _task(m: int = 4, n: int = 8) -> TaskDesc:
+    return TaskDesc(op="toy", layer=0, data_id=0, step=0,
+                    in_lo=0, in_hi=m, out_lo=0, out_hi=n)
+
+
+# ---------------------------------------------------------------- fitting
+def test_cold_model_predicts_prior():
+    model = OnlineCostModel(registry=_registry(prior=5e-6))
+    assert model.unit_secs("toy") == pytest.approx(5e-6)
+    # unregistered prior falls back to the global default
+    assert model.unit_secs("nope") == pytest.approx(DEFAULT_PRIOR_UNIT_SECS)
+    assert model.predict_task(_task(4, 8)) == pytest.approx(32 * 5e-6)
+    assert model.samples("toy") == 0 and model.sources() == []
+
+
+def test_observations_dominate_prior_with_shrinkage():
+    model = OnlineCostModel(registry=_registry(prior=1e-6),
+                            prior_weight=100.0)
+    # one small sample barely moves the estimate off the prior ...
+    model.observe("toy", units=10.0, secs=10.0 * 1e-3, src="h0")
+    small = model.unit_secs("toy")
+    assert 1e-6 < small < 1e-4                     # pulled, but shrunk
+    # ... heavy evidence converges to the observed 1e-3 s/unit
+    model.observe("toy", units=1e6, secs=1e6 * 1e-3, src="h0")
+    assert model.unit_secs("toy") == pytest.approx(1e-3, rel=1e-3)
+    # exact shrinkage formula: (prior*W + secs) / (W + units)
+    m2 = OnlineCostModel(registry=_registry(prior=1e-6), prior_weight=50.0)
+    m2.observe("toy", units=100.0, secs=0.2, src="h0")
+    assert m2.unit_secs("toy") == pytest.approx(
+        (1e-6 * 50.0 + 0.2) / (50.0 + 100.0))
+
+
+def test_per_source_fit_and_best():
+    model = OnlineCostModel(registry=_registry())
+    model.observe("toy", units=1e6, secs=1e6 * 1e-3, src="slow")
+    model.observe("toy", units=1e6, secs=1e6 * 1e-4, src="fast")
+    assert model.unit_secs("toy", src="slow") > model.unit_secs(
+        "toy", src="fast")
+    assert model.best_unit_secs("toy") == pytest.approx(
+        model.unit_secs("toy", src="fast"))
+    assert model.sources() == ["fast", "slow"]
+    # fleet rate sums per-source observed rates (~1e3 + 1e4 units/s)
+    assert model.fleet_units_per_sec() == pytest.approx(1.1e4, rel=1e-6)
+
+
+def test_ignores_degenerate_observations():
+    model = OnlineCostModel(registry=_registry(prior=1e-6))
+    model.observe("toy", units=0.0, secs=1.0, src="h0")
+    model.observe("toy", units=-5.0, secs=1.0, src="h0")
+    model.observe("toy", units=1.0, secs=-1.0, src="h0")
+    assert model.samples("toy") == 0
+    assert model.unit_secs("toy") == pytest.approx(1e-6)
+
+
+def test_observation_wire_roundtrip():
+    obs = OpObservation()
+    obs.add(32.0, 1e-4, n=4)
+    obs.add(16.0, 5e-5)
+    back = OpObservation.from_wire(obs.to_wire())
+    assert (back.n, back.units, back.secs) == (5, 48.0, obs.secs)
+
+
+# -------------------------------------------------------- publish/refresh
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_publish_refresh_roundtrip(backend):
+    ts = TupleSpace(backend=backend)
+    producer = OnlineCostModel(registry=_registry())
+    producer.observe("toy", units=1000.0, secs=1.0, src="h0")
+    producer.observe("toy", units=1000.0, secs=0.1, src="h0")
+    assert producer.publish(ts, "h0") == 1
+    # re-put keeps the family bounded at one tuple per (op, src)
+    producer.observe("toy", units=1000.0, secs=0.1, src="h0")
+    assert producer.publish(ts, "h0") == 1
+    assert ts.count((CSTATS, ANY, ANY)) == 1
+    # clean (nothing dirty) publish writes nothing
+    assert producer.publish(ts, "h0") == 0
+
+    consumer = OnlineCostModel(registry=_registry())
+    assert consumer.refresh(ts) == 1
+    assert consumer.unit_secs("toy") == pytest.approx(
+        producer.unit_secs("toy"))
+    assert consumer.sources() == ["h0"]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_refresh_keep_src_preserves_local_aggregates(backend):
+    ts = TupleSpace(backend=backend)
+    stale = OnlineCostModel(registry=_registry())
+    stale.observe("toy", units=100.0, secs=1.0, src="h0")   # old, slow fit
+    stale.publish(ts, "h0")
+
+    live = OnlineCostModel(registry=_registry())
+    live.observe("toy", units=1e6, secs=1.0, src="h0")      # newer, faster
+    before = live.unit_secs("toy", src="h0")
+    live.refresh(ts, keep_src="h0")                          # own row wins
+    assert live.unit_secs("toy", src="h0") == pytest.approx(before)
+    other = OnlineCostModel(registry=_registry())
+    other.refresh(ts)                                        # others load it
+    assert other.samples("toy", src="h0") == 1
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_backlog_row_roundtrip_and_refresh_skip(backend):
+    ts = TupleSpace(backend=backend)
+    model = OnlineCostModel()
+    assert read_backlog(ts) == 0.0
+    model.publish_backlog(ts, 1.5)
+    model.publish_backlog(ts, 2.5)                           # re-put, bounded
+    assert ts.count((CSTATS, BACKLOG_KIND, MANAGER_SRC)) == 1
+    assert read_backlog(ts) == pytest.approx(2.5)
+    # refresh must not ingest the backlog row as an op aggregate
+    assert OnlineCostModel().refresh(ts) == 0
+
+
+# -------------------------------------------------------- recommendations
+def test_recommend_width_none_until_a_handler_reports():
+    model = OnlineCostModel(registry=_registry())
+    assert model.recommend_width(4.0, lo=8, hi=16) is None
+    # the manager's own backlog source does not count as a worker
+    model.observe("toy", units=1.0, secs=1.0, src=MANAGER_SRC)
+    assert model.recommend_width(4.0, lo=8, hi=16) is None
+
+
+def test_recommend_width_scales_and_clamps():
+    model = OnlineCostModel(registry=_registry())
+    for h in range(4):
+        model.observe("toy", units=100.0, secs=1.0, src=f"h{h}")
+    # narrow stages on a wide fleet → widen: ceil(4*4/1) = 16
+    assert model.recommend_width(1.0, lo=2, hi=32) == 16
+    # wide stages keep it at the floor: ceil(16/64) = 1 → lo
+    assert model.recommend_width(64.0, lo=2, hi=32) == 2
+    # hi clamp
+    assert model.recommend_width(1.0, lo=2, hi=8) == 8
+
+
+def test_pouch_controller_cost_target():
+    ctl = PouchController(pouch=32, min_pouch=2, max_pouch=10)
+    # budget 1000 units/s * 0.01 s = 10 units → three 4-unit tasks
+    assert ctl.cost_target([4.0] * 50, rate=1000.0, target_secs=0.01) == 3
+    assert ctl.pouch == 3                       # persisted for checkpoint
+    # cheap tasks grow the pouch (to max_pouch) ...
+    assert ctl.cost_target([0.01] * 50, rate=1000.0, target_secs=0.01) == 10
+    # ... expensive tasks shrink it (to min_pouch)
+    assert ctl.cost_target([1e6] * 50, rate=1000.0, target_secs=0.01) == 2
+    # fewer pending tasks than min_pouch: take what exists
+    assert ctl.cost_target([1e6], rate=1000.0, target_secs=0.01) == 1
+    # degenerate rate/target/empty fall back to the current size
+    ctl.pouch = 7
+    assert ctl.cost_target([], rate=1000.0, target_secs=0.01) == 7
+    assert ctl.cost_target([4.0], rate=0.0, target_secs=0.01) == 7
+    assert ctl.cost_target([4.0], rate=1000.0, target_secs=0.0) == 7
+
+
+# ----------------------------------------------------- instrumented waits
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_instrumented_wait_stats(backend):
+    ts = TupleSpace(backend=f"instrumented:{backend}")
+    ts.put(("k", 0), 1)
+    ts.get(("k", ANY))                           # immediate, not blocked
+    with pytest.raises(TSTimeout):
+        ts.get(("missing", ANY), timeout=0.05)   # blocked AND timed out
+    m = ts.backend.metrics()["get"]
+    assert m["timeouts"] == 1
+    assert m["blocked"] >= 1
+    assert m["blocked_us"] >= 0.05 * 1e6 * 0.5   # spent real time parked
+    s = ts.stats()
+    assert s["instr_timeouts"] == 1 and s["instr_blocked"] >= 1
+
+
+# ------------------------------------------------------------- end-to-end
+def test_autotune_e2e_checked_identical_trajectory():
+    """A small MoE job with the full autotune stack on, under the checked
+    backend: the cstats/backlog traffic must be schema-clean and
+    leak-free, and the loss trajectory must match the static run exactly
+    (the model only reorders and right-sizes scheduling)."""
+
+    def run(autotune: bool):
+        cfg = CloudConfig(n_handlers=2, task_cap=128.0, pouch_size=32,
+                          time_scale=2e-5, initial_timeout=0.25,
+                          handler_batch=4,
+                          fault_plan=FaultPlan(interval=1e9),
+                          wall_limit=120.0, ts_backend="checked+sharded",
+                          max_inflight_stages=4,
+                          handler_speeds=[1.0, 4.0], autotune=autotune)
+        cloud = ACANCloud(cfg, program=MoERoutingProgram(steps=3, seed=0))
+        return cloud.run()
+
+    auto = run(True)
+    static = run(False)
+    assert len(auto.loss_history) == 3
+    assert [l for _, l in auto.loss_history] == [
+        l for _, l in static.loss_history]
+    assert auto.ts_violations == 0 and auto.ts_leaks == {}
+    # the fitted model made it to the result surface
+    ops = auto.cost_report.get("ops", {})
+    assert any(op.startswith("moe") for op in ops)
+    assert auto.cost_report.get("fleet_units_per_sec", 0.0) > 0.0
+    assert static.cost_report == {}              # static run reports nothing
