@@ -29,7 +29,10 @@ unscoped task subject — InstrumentedBackend delete accounting).
 
 Every leg additionally runs under the ``CheckedBackend`` protocol
 sanitizer (PR 6) and gates on **zero schema/role violations and zero
-tuple leaks** at shutdown.
+tuple leaks** at shutdown. A ``raced+...`` backend spec (the PR 8 CI
+leg) further widens the frontier to 8 in-flight stages with the
+cost-model autotune on and gates on an **empty happens-before race
+report** from the ``RacedBackend`` sanitizer.
 """
 
 from __future__ import annotations
@@ -62,8 +65,21 @@ def _checked(spec: str | None) -> str:
 
 
 def _ts_clean(res) -> bool:
-    """Zero protocol violations, zero tuple leaks (CheckedBackend)."""
-    return res.ts_violations == 0 and not res.ts_leaks
+    """Zero protocol violations, zero tuple leaks (CheckedBackend) and an
+    empty happens-before race report (RacedBackend, PR 8 — trivially
+    empty when the spec does not stack ``raced``)."""
+    return (res.ts_violations == 0 and not res.ts_leaks
+            and not getattr(res, "race_report", []))
+
+
+def _race_kwargs(spec: str | None) -> dict:
+    """Config overrides for the raced CI leg: widen the frontier to 8 and
+    turn the cost-model autotune on, so the happens-before sanitizer
+    watches real stage overlap rather than a serialized schedule."""
+    inner = spec or os.environ.get("REPRO_TS_BACKEND", "") or "local"
+    if "raced" not in inner:
+        return {}
+    return {"max_inflight_stages": 8, "autotune": True}
 
 
 def run_mlp(smoke: bool, backend: str | None) -> dict:
@@ -75,7 +91,8 @@ def run_mlp(smoke: bool, backend: str | None) -> dict:
                       task_cap=256.0, pouch_size=100, lr=0.01,
                       time_scale=1e-6, initial_timeout=0.12,
                       fault_plan=FaultPlan(interval=1e9), seed=0,
-                      wall_limit=240.0, ts_backend=_checked(backend))
+                      wall_limit=240.0, ts_backend=_checked(backend),
+                      **_race_kwargs(backend))
     res = ACANCloud(cfg).run()
     losses = [l for _, l in res.loss_history]
     half = len(losses) // 2
@@ -84,6 +101,7 @@ def run_mlp(smoke: bool, backend: str | None) -> dict:
             "first": float(np.mean(losses[:half])),
             "last": float(np.mean(losses[half:])),
             "completed": len(losses) == epochs * n_samples,
+            "races": len(res.race_report),
             "ts_clean": _ts_clean(res),
             "ok": bool(np.mean(losses[half:]) < np.mean(losses[:half]))
             and _ts_clean(res)}
@@ -111,7 +129,8 @@ def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
     cfg = CloudConfig(n_handlers=4, task_cap=256.0, pouch_size=64,
                       time_scale=time_scale, initial_timeout=0.1,
                       fault_plan=plan, wall_limit=240.0,
-                      ts_backend=_checked(backend))
+                      ts_backend=_checked(backend),
+                      **_race_kwargs(backend))
     res = ACANCloud(cfg, program=prog).run()
     losses = [l for _, l in res.loss_history]
     lo, hi = _moe_cost_spread(prog)
@@ -125,6 +144,7 @@ def run_moe(smoke: bool, backend: str | None, faults: bool) -> dict:
            "cost_min": lo, "cost_max": hi,
            "mgr_revive": res.manager_revivals,
            "hdl_revive": res.handler_revivals,
+           "races": len(res.race_report),
            "ts_clean": _ts_clean(res)}
     if faults:
         out["ok"] = (completed and decreased and res.manager_revivals >= 1
@@ -151,7 +171,8 @@ def run_multi(smoke: bool, backend: str | None) -> dict:
                           interval=0.1, speed_levels=(1.0, 5.0, 10.0),
                           p_speed_change=1.0, p_handler_crash=1.0,
                           p_manager_crash=1.0, seed=1),
-                      wall_limit=240.0, ts_backend=f"instrumented+{inner}")
+                      wall_limit=240.0, ts_backend=f"instrumented+{inner}",
+                      **_race_kwargs(backend))
     programs = [MLPProgram(cfg.layers, epochs=epochs, n_samples=n_samples,
                            seed=0),
                 MoERoutingProgram(steps=moe_steps, seed=0)]
@@ -184,6 +205,7 @@ def run_multi(smoke: bool, backend: str | None) -> dict:
             "mgr_revive": res.manager_revivals,
             "hdl_revive": res.handler_revivals,
             "cross_ns_free": cross_free,
+            "races": len(res.race_report),
             "ts_clean": _ts_clean(res),
             "ok": (completed and decreased and cross_free
                    and res.manager_revivals >= 1
@@ -250,6 +272,8 @@ def bench_rows(smoke: bool = True, backend: str | None = None,
                         f"hdl_revive={r['hdl_revive']}")
         if "cross_ns_free" in r:
             derived += f" cross_ns_free={r['cross_ns_free']}"
+        if "races" in r:
+            derived += f" races={r['races']}"
         if "ts_clean" in r:
             derived += f" ts_clean={r['ts_clean']}"
         rows.append((r["name"], r["wall"] * 1e6, derived))
@@ -278,7 +302,8 @@ def main() -> int:
               f"{r['first']:>11.3f} ->{r['last']:>7.3f}{str(r['ok']):>5}")
         extras = {k: r[k] for k in
                   ("cost_min", "cost_max", "mgr_revive", "hdl_revive",
-                   "crashes", "reissues", "cross_ns_free", "ts_clean")
+                   "crashes", "reissues", "cross_ns_free", "races",
+                   "ts_clean")
                   if k in r}
         if extras:
             print(f"{'':<22}{extras}")

@@ -76,6 +76,11 @@ AUTOTUNE_SPEEDUP_FLOOR = 1.2
 #: boxes + one 10x box maximises how much FIFO draining hurts the static
 #: baseline, which is exactly the placement problem the model solves.
 AUTOTUNE_SPEEDS = [1.0, 1.0, 1.0, 10.0]
+#: makespan ceiling for stacking the happens-before race sanitizer
+#: (``raced+``) onto the checked width-8 MoE pipeline run: the sanitizer
+#: is metadata-only bookkeeping (vector clocks + access journals, no
+#: payload copies), so it must stay within 15% of the checked makespan.
+RACED_OVERHEAD_CEIL = 1.15
 
 
 def run_mode(scheduling: str, backend: str, layers, epochs: int,
@@ -126,6 +131,7 @@ def run_pipeline_mode(max_inflight: int, backend: str, steps: int,
         "losses": [l for _, l in res.loss_history],
         "completed": len(res.loss_history) == steps,
         "pouches": res.pouches,
+        "races": len(res.race_report),
     }
 
 
@@ -178,6 +184,25 @@ def autotune_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
     ok = speedup >= AUTOTUNE_SPEEDUP_FLOOR and loss_ok and clean
     return {"static": static, "auto": auto, "speedup": speedup,
             "loss_ok": loss_ok, "clean": clean, "ok": ok}
+
+
+def raced_overhead_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
+    """Checked vs raced+checked on the width-8 MoE pipeline run (PR 8):
+    the happens-before sanitizer must stay within RACED_OVERHEAD_CEIL of
+    the checked makespan, report zero races on the built-in DAG, and
+    leave the loss trajectory bit-identical."""
+    steps = 5 if smoke else 10
+    checked = backend if "checked" in backend else f"checked+{backend}"
+    raced_spec = checked if "raced" in checked else f"raced+{checked}"
+    base = run_pipeline_mode(8, checked, steps, seed)
+    raced = run_pipeline_mode(8, raced_spec, steps, seed)
+    overhead = raced["wallclock"] / max(base["wallclock"], 1e-9)
+    loss_ok = (base["completed"] and raced["completed"]
+               and base["losses"] == raced["losses"])   # bit-identical
+    ok = (overhead <= RACED_OVERHEAD_CEIL and loss_ok
+          and raced["races"] == 0)
+    return {"checked": base, "raced": raced, "overhead": overhead,
+            "loss_ok": loss_ok, "ok": ok}
 
 
 def pipeline_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
@@ -250,6 +275,18 @@ def bench_rows(smoke: bool = True,
                  f"deferred={ag['auto']['deferred']} "
                  f"loss_match={ag['loss_ok']} clean={ag['clean']} "
                  f"gate>={AUTOTUNE_SPEEDUP_FLOOR:.2f}x pass={ag['ok']}"))
+    # Happens-before race sanitizer overhead (PR 8) — raced+checked vs
+    # checked on the width-8 MoE pipeline: vector-clock bookkeeping only,
+    # zero races on the built-in DAG, bit-identical trajectory.
+    rg = raced_overhead_gate(smoke, backend)
+    rows.append((f"sched_raced_overhead_{backend}",
+                 rg["raced"]["wallclock"] * 1e6,
+                 f"checked={rg['checked']['wallclock']:.2f}s "
+                 f"raced={rg['raced']['wallclock']:.2f}s "
+                 f"overhead={rg['overhead']:.2f}x "
+                 f"races={rg['raced']['races']} "
+                 f"loss_match={rg['loss_ok']} "
+                 f"gate<={RACED_OVERHEAD_CEIL:.2f}x pass={rg['ok']}"))
     return rows
 
 
@@ -341,20 +378,30 @@ def main() -> int:
           f"deferred={ag['auto']['deferred']}, "
           f"trajectory {'identical' if ag['loss_ok'] else 'DIVERGES'}")
 
+    rg = raced_overhead_gate(args.smoke, args.backend, args.seed)
+    print(f"raced sanitizer (MoE pipeline, width 8): "
+          f"checked={rg['checked']['wallclock']:.2f}s "
+          f"raced={rg['raced']['wallclock']:.2f}s "
+          f"overhead={rg['overhead']:.2f}x "
+          f"(ceiling <= {RACED_OVERHEAD_CEIL:.2f}x), "
+          f"races={rg['raced']['races']}, "
+          f"trajectory {'bit-identical' if rg['loss_ok'] else 'DIVERGES'}")
+
     ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
     wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
     loss_ok = (len(poll["losses"]) == len(event["losses"])
                and np.allclose(poll["losses"], event["losses"],
                                rtol=1e-3, atol=1e-5))
     ok = (ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
-          and adap_loss_ok and pg["ok"] and ag["ok"])
+          and adap_loss_ok and pg["ok"] and ag["ok"] and rg["ok"])
     print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
           f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
           f"wallclock {'OK' if wall_ok else 'WORSE'}, "
           f"loss trajectories {'match' if loss_ok else 'DIVERGE'}, "
           f"adaptive pouch {'matches' if adap_loss_ok else 'DIVERGES'}, "
           f"pipeline overlap {'PASS' if pg['ok'] else 'FAIL'}, "
-          f"autotune {'PASS' if ag['ok'] else 'FAIL'} "
+          f"autotune {'PASS' if ag['ok'] else 'FAIL'}, "
+          f"raced overhead {'PASS' if rg['ok'] else 'FAIL'} "
           f"-> {'PASS' if ok else 'FAIL'}")
     return 0 if ok else 1
 

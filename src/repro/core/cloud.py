@@ -46,7 +46,7 @@ from repro.core.manager import Manager, ManagerConfig, validate_scheduling
 from repro.core.program import WorkloadProgram
 from repro.core.space import (ANY, CONTROL_SCHEMAS, DEFAULT_NAMESPACE,
                               TSTimeout, TupleSpace, as_scoped, find_checked,
-                              role)
+                              find_raced, role)
 
 __all__ = ["ACANCloud", "CloudConfig", "CloudResult", "MultiCloudResult"]
 
@@ -97,6 +97,10 @@ class CloudConfig:
     autotune: bool = False
     #: Autotune frontier-width ceiling (see ManagerConfig).
     autotune_max_width: int = 16
+    #: PR 8 declared-effects admission fence (see ManagerConfig): off =
+    #: observe-only (the race sanitizer still records; nothing is
+    #: serialized).
+    effect_fence: bool = True
     #: Initial per-handler speed ratios (paper §6: e.g. [1, 1, 5, 10]).
     #: Must have exactly ``n_handlers`` entries; None = all 1.0. The
     #: MonitorDaemon's speed re-draws still apply on top.
@@ -139,6 +143,11 @@ class CloudResult:
     #: (op -> handler -> {n, units, secs, unit_secs}) plus fleet-level
     #: counters (tasks deferred by the slow-handler rule).
     cost_report: dict = field(default_factory=dict)
+    #: PR 8 happens-before race-sanitizer outcome, filtered to this
+    #: program's namespace (empty when no RacedBackend is stacked OR the
+    #: run was race-free): one formatted line per unordered conflicting
+    #: stage pair.
+    race_report: list = field(default_factory=list)
 
 
 @dataclass
@@ -157,6 +166,8 @@ class MultiCloudResult:
     ts_violations: int = 0
     ts_violation_samples: list = field(default_factory=list)
     ts_leaks: dict = field(default_factory=dict)
+    #: PR 8: the whole shared space's race-sanitizer outcome.
+    race_report: list = field(default_factory=list)
 
 
 class ACANCloud:
@@ -243,7 +254,8 @@ class ACANCloud:
                 adaptive_pouch=self.cfg.adaptive_pouch,
                 max_inflight_stages=self.cfg.max_inflight_stages,
                 autotune=self.cfg.autotune,
-                autotune_max_width=self.cfg.autotune_max_width),
+                autotune_max_width=self.cfg.autotune_max_width,
+                effect_fence=self.cfg.effect_fence),
             power_fn=power_fn,
             crash_event=self._manager_crashes[i],
             stop_event=self.stop_event,
@@ -332,7 +344,8 @@ class ACANCloud:
     def _collect(self, i: int, daemon: MonitorDaemon, wall: float,
                  ts_stats: dict | None = None,
                  ledger_ok: bool | None = None,
-                 report: dict | None = None) -> CloudResult:
+                 report: dict | None = None,
+                 raced=None) -> CloudResult:
         """One program's result from its namespace view. Every history
         read is guarded: a tuple listed by ``keys()`` can vanish (history
         trimming by a still-running revived Manager) before ``try_read``
@@ -384,6 +397,8 @@ class ACANCloud:
                                   else list(report["violation_samples"])),
             ts_leaks=self._ns_leaks(report, self.namespaces[i]),
             cost_report=cost_report,
+            race_report=([] if raced is None
+                         else raced.race_report(self.namespaces[i])),
         )
 
     # ----------------------------------------------------------------- run
@@ -467,8 +482,10 @@ class ACANCloud:
         # (None when no CheckedBackend is stacked).
         checked = find_checked(self.ts.backend)
         report = checked.protocol_report() if checked is not None else None
+        # PR 8: the happens-before race scan (None when no RacedBackend).
+        raced = find_raced(self.ts.backend)
         results = [self._collect(i, daemon, wall, ts_stats, ledger_ok,
-                                 report)
+                                 report, raced)
                    for i in range(n_programs)]
         if not self.multi:
             return results[0]
@@ -484,4 +501,5 @@ class ACANCloud:
             ts_violation_samples=([] if report is None
                                   else list(report["violation_samples"])),
             ts_leaks={} if report is None else dict(report["leaks"]),
+            race_report=[] if raced is None else raced.race_report(),
         )

@@ -96,7 +96,7 @@ import numpy as np
 
 from repro.core.program import OpRegistry, ensure_builtin_ops
 from repro.core.tasks import TaskDesc
-from repro.core.space import TupleSpace, role
+from repro.core.space import TupleSpace, role, task_context
 
 
 class PreconditionUnmet(Exception):
@@ -184,7 +184,8 @@ class TaskExecutor:
 
     def _run_group(self, group: list[TaskDesc]) -> list[tuple[tuple, Any]]:
         spec = self.registry.resolve(group[0].op)
-        with role("executor"):
+        t = group[0]
+        with role("executor"), task_context(t.op, t.layer, t.data_id, t.step):
             items = list(spec.batch_fn(self.ctx, group))
             if items:
                 self.ts.put_many(items)

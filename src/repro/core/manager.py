@@ -69,6 +69,7 @@ silently overwrites — a leftover task tuple of its dead predecessor.
 
 from __future__ import annotations
 
+import logging
 import threading
 import time
 from dataclasses import dataclass, field
@@ -77,9 +78,13 @@ from typing import Callable
 from repro.core.costmodel import OnlineCostModel
 from repro.core.gss import PouchController, TimeoutController
 from repro.core.conflict import CommitWindow
-from repro.core.program import UnknownOp, WorkloadProgram
+from repro.core.program import (FINISH_STAGE, UnknownOp, WorkloadProgram,
+                                effects_conflict)
 from repro.core.tasks import TaskDesc, content_key
-from repro.core.space import ANY, TSTimeout, TupleSpace, role
+from repro.core.space import (ANY, TSTimeout, TupleSpace, find_raced, role,
+                              stage_context)
+
+_log = logging.getLogger(__name__)
 
 
 class ManagerCrash(Exception):
@@ -141,6 +146,13 @@ class ManagerConfig:
     #: Autotune-mode pouch target: aim each pouch at this many seconds of
     #: predicted fleet drain time.
     autotune_pouch_secs: float = 0.2
+    #: Declared-effects admission fence (PR 8): refuse frontier overlap to
+    #: a ready stage whose declared ``stage_effects`` conflict with an
+    #: in-flight stage's (the pair is serialized with one warning).
+    #: Programs that do not declare effects are unaffected either way.
+    #: ``False`` = observe-only: the scheduler overlaps exactly as before
+    #: and a stacked RacedBackend still records any resulting race.
+    effect_fence: bool = True
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
@@ -207,6 +219,13 @@ class Manager:
         self._wait_rr = 0                        # barrier park rotation
         # EMA of per-stage task counts — recommend_width's denominator.
         self._stage_tasks_ema = 0.0
+        # Declared-effects admission fence (PR 8): per-round effect cache,
+        # the stage pairs already warned about, and the RacedBackend (if
+        # stacked) that stage lifecycle events are announced to.
+        self._effects_cache: dict[int, dict | None] = {}
+        self._fence_warned: set[tuple[str, str]] = set()
+        self._raced = None
+        self._ns = ""
 
     # ------------------------------------------------------------ lifecycle
     def _bump_epoch(self) -> None:
@@ -342,6 +361,39 @@ class Manager:
                 return False
         return True
 
+    def _effects(self, rnd: int) -> dict | None:
+        """Round ``rnd``'s declared per-stage effects (None = the program
+        opted out and the admission fence is off)."""
+        if rnd not in self._effects_cache:
+            self._effects_cache[rnd] = self.program.stage_effects(rnd)
+        return self._effects_cache[rnd]
+
+    def _fence_blocker(self, rnd: int, name: str):
+        """The in-flight stage (if any) whose declared effects conflict
+        with candidate ``(rnd, name)``'s — the admission fence (PR 8).
+
+        The frontier scheduler's soundness rests on DAG-concurrent stages
+        not interfering; when a program *declares* its effects, a
+        conflicting pair is refused overlap here (the candidate is
+        deferred until the in-flight stage combines — serialized, never
+        dropped) instead of racing on real tuples."""
+        if not self.cfg.effect_fence:
+            return None
+        eff = self._effects(rnd)
+        if eff is None:
+            return None
+        mine = eff.get(name, ())
+        for (orn, onm) in self._inflight:
+            oeff = self._effects(orn)
+            if oeff is None:
+                continue
+            for a in mine:
+                for b in oeff.get(onm, ()):
+                    kind = effects_conflict(a, b)
+                    if kind is not None:
+                        return (orn, onm, kind, a, b)
+        return None
+
     def _next_ready(self, n_rounds: int, overlap: int):
         """Lowest-priority ``(rnd, name, order)`` whose deps are all
         combined — deterministic, so ``max_inflight_stages=1`` replays
@@ -351,8 +403,23 @@ class Manager:
                 key = (rnd, name)
                 if key in self._completed or key in self._inflight:
                     continue
-                if self._deps_met(rnd, name):
-                    return rnd, name, order
+                if not self._deps_met(rnd, name):
+                    continue
+                blk = self._fence_blocker(rnd, name)
+                if blk is not None:
+                    orn, onm, kind, a, b = blk
+                    pair = (name, onm) if name <= onm else (onm, name)
+                    if pair not in self._fence_warned:
+                        self._fence_warned.add(pair)
+                        _log.warning(
+                            "admission fence: stage %r (round %d) declares "
+                            "%s-conflicting effects with in-flight stage %r "
+                            "(round %d) — %s vs %s; serializing the pair "
+                            "(declare a stage_deps edge or disjoint pins "
+                            "to overlap them)",
+                            name, rnd, kind, onm, orn, a, b)
+                    continue
+                return rnd, name, order
         return None
 
     # ------------------------------------------------------------- dispatch
@@ -563,7 +630,10 @@ class Manager:
         # Stage-boundary combine ("the Manager updates the relevant TS
         # entries as a checkpoint", §5.3) — scoped to THIS stage's
         # completion, wherever the rest of the frontier is.
-        self.program.combine(self.ts, run.rnd, run.name, self)
+        with stage_context(run.rnd, run.name):
+            self.program.combine(self.ts, run.rnd, run.name, self)
+        if self._raced is not None:
+            self._raced.stage_complete(self._ns, run.rnd, run.name)
         self._completed.add((run.rnd, run.name))
         prog = self.program
         n_rounds = prog.n_rounds()
@@ -571,11 +641,20 @@ class Manager:
         while (self._base < n_rounds
                and all((self._base, n) in self._completed
                        for n in self._names(self._base))):
-            prog.finish_round(self.ts, self._base)
+            # Round cleanup runs as the pseudo-stage FINISH_STAGE — it
+            # has declared effects (wide deletes) like any other stage
+            # and participates in the happens-before order.
+            if self._raced is not None:
+                self._raced.stage_begin(self._ns, self._base, FINISH_STAGE)
+            with stage_context(self._base, FINISH_STAGE):
+                prog.finish_round(self.ts, self._base)
+            if self._raced is not None:
+                self._raced.stage_complete(self._ns, self._base, FINISH_STAGE)
             for n in self._names(self._base):
                 self._completed.discard((self._base, n))
             self._names_cache.pop(self._base, None)
             self._deps_cache.pop(self._base, None)
+            self._effects_cache.pop(self._base, None)
             finished.append(self._base)
             self._base += 1
         self._checkpoint()
@@ -586,9 +665,13 @@ class Manager:
         # here) or after it — in which case the handler's own post-write
         # fence re-read observes the already-persisted frontier and undoes
         # the write. Both orderings leave the space clean; no timing
-        # window survives.
+        # window survives. The pass re-runs under the (already completed)
+        # FINISH_STAGE attribution — it is the same logical cleanup, and
+        # the PR 6 fence discipline makes either physical order safe, so
+        # this pass must not read as a fresh unordered access.
         for r in finished:
-            prog.finish_round(self.ts, r)
+            with stage_context(r, FINISH_STAGE):
+                prog.finish_round(self.ts, r)
 
     # -------------------------------------------------------- the scheduler
     def _priority(self) -> list[_StageRun]:
@@ -606,10 +689,16 @@ class Manager:
             if nxt is None:
                 break
             rnd, name, order = nxt
+            # Announce the launch BEFORE stage_tasks runs: its TS reads
+            # belong to this stage, and the happens-before order must
+            # date the stage from its admission decision.
+            if self._raced is not None:
+                self._raced.stage_begin(self._ns, rnd, name)
             tasks: list[TaskDesc] = []
-            for proto in self.program.stage_tasks(self.ts, rnd, name):
-                tasks.extend(
-                    self.program.registry.partition(proto, self.cfg.task_cap))
+            with stage_context(rnd, name):
+                for proto in self.program.stage_tasks(self.ts, rnd, name):
+                    tasks.extend(self.program.registry.partition(
+                        proto, self.cfg.task_cap))
             run = _StageRun(rnd=rnd, name=name, order=order, tasks=tasks)
             launched = True
             if not tasks:
@@ -623,6 +712,12 @@ class Manager:
                     n if self._stage_tasks_ema <= 0.0
                     else 0.7 * self._stage_tasks_ema + 0.3 * n)
             run.done_pat = self._stage_done_pattern(tasks)
+            if self._raced is not None:
+                # The pinned (op, layer, data_id, step) signature executor
+                # groups are attributed by — same fields the done-mark
+                # barrier pins, so attribution can never cross stages that
+                # the barrier itself can tell apart.
+                self._raced.stage_sig(self._ns, rnd, name, run.done_pat[1:5])
             self._inflight[(rnd, name)] = run
         return launched
 
@@ -698,6 +793,11 @@ class Manager:
 
     def _run(self) -> None:
         prog = self.program
+        # Race-sanitizer hookup (PR 8): if a RacedBackend is stacked under
+        # this space, announce the stage lifecycle to it. ScopedSpace
+        # carries the tenant namespace; a bare TupleSpace runs in "".
+        self._raced = find_raced(getattr(self.ts, "backend", None))
+        self._ns = getattr(self.ts, "namespace", "")
         prog.setup(self.ts)
         self._bump_epoch()
         self._load_frontier()

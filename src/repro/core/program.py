@@ -164,6 +164,71 @@ def partition(task: TaskDesc, max_size: float,
     return (registry or ensure_builtin_ops()).partition(task, max_size)
 
 
+# --------------------------------------------------------------------------
+# Declared stage effects (PR 8) — the interference contract the DAG lint
+# checks statically and the Manager's admission fence enforces at runtime.
+
+#: Pseudo-stage name for ``finish_round`` cleanup in a program's declared
+#: effects: ``@finish`` of round ``r`` runs after every stage of round
+#: ``r`` but concurrently with any later round the overlap admits.
+FINISH_STAGE = "@finish"
+
+
+@dataclass(frozen=True)
+class StageEffect:
+    """One declared effect of a stage on a tuple-space **key family**:
+    the ``subject`` plus the fields the stage pins to concrete values
+    (everything unpinned is touched wildcard-wide, which aliases
+    conservatively). ``mode`` is ``"read"``, ``"write"`` (put) or
+    ``"delete"``; a destructive take declares both a read and a delete.
+
+    Effects are produced by :meth:`WorkloadProgram.stage_effects` *per
+    round*, so round-derived pins (``step = rnd``, ``data_id = rnd %
+    n_samples``) carry the concrete value for that round — cross-round
+    aliasing then falls out of plain pin comparison.
+    """
+
+    subject: str
+    mode: str  # "read" | "write" | "delete"
+    pins: tuple = ()  # sorted ((field, value), ...) pairs
+
+    def __str__(self) -> str:
+        pin = ", ".join(f"{f}={v}" for f, v in self.pins)
+        return f"{self.mode}({self.subject}{', ' + pin if pin else ''})"
+
+
+def reads(subject: str, **pins: Any) -> StageEffect:
+    """A read effect on ``subject`` with the given pinned fields."""
+    return StageEffect(subject, "read", tuple(sorted(pins.items())))
+
+
+def writes(subject: str, **pins: Any) -> StageEffect:
+    """A write (put) effect on ``subject`` with the given pinned fields."""
+    return StageEffect(subject, "write", tuple(sorted(pins.items())))
+
+
+def deletes(subject: str, **pins: Any) -> StageEffect:
+    """A delete effect on ``subject`` with the given pinned fields."""
+    return StageEffect(subject, "delete", tuple(sorted(pins.items())))
+
+
+def effects_conflict(a: StageEffect, b: StageEffect) -> str | None:
+    """Do two effects interfere? ``None`` if not, else the hazard class
+    (``"RW"`` or ``"WW"`` — deletes count as writes). Effects interfere
+    when they name the same subject, at least one mutates, and their
+    pins are *compatible*: every field pinned by both carries the same
+    value (a field pinned by only one side aliases conservatively)."""
+    if a.subject != b.subject:
+        return None
+    if a.mode == "read" and b.mode == "read":
+        return None
+    pa, pb = dict(a.pins), dict(b.pins)
+    for f in pa.keys() & pb.keys():
+        if pa[f] != pb[f]:
+            return None
+    return "RW" if "read" in (a.mode, b.mode) else "WW"
+
+
 def record_loss(ts, step: int, loss: float, history_limit: int = 0) -> None:
     """Append to the ``("losshist", step)`` trajectory exactly once per
     step (idempotent under Manager revival) and trim it to
@@ -286,3 +351,27 @@ class WorkloadProgram(abc.ABC):
         (nothing is registered under it, so nothing is flagged).
         """
         return ()
+
+    def stage_effects(self, rnd: int) -> "dict[str, tuple[StageEffect, ...]] | None":
+        """The program's declared per-stage interference contract for
+        round ``rnd`` (PR 8), mirroring :meth:`key_schemas`' declare-
+        then-enforce pattern: stage name → the :class:`StageEffect`\\ s
+        that stage (its ``stage_tasks`` reads, its op kernels' reads and
+        writes, and its ``combine``) performs on the data plane. The
+        reserved :data:`FINISH_STAGE` entry declares ``finish_round``'s
+        cleanup deletes. Control-plane subjects (tasks, done marks,
+        cursors, histories) are owned by the Manager/Handler protocol
+        and are never declared.
+
+        Three consumers: ``tools/dag_lint.py`` cross-checks the
+        declaration against ``stage_deps``/``round_overlap`` (reporting
+        WW/RW conflicts between DAG-concurrent stages, reads with no
+        producing ancestor, and cleanup that aliases overlapped rounds)
+        and against AST-inferred effects (drift); the Manager refuses to
+        overlap two in-flight stages whose declared effects conflict
+        (the admission fence); and the happens-before sanitizer
+        (``raced`` backend) checks the same property on concrete keys at
+        runtime. Returning ``None`` (the default) opts out: nothing is
+        checked and the admission fence stays open.
+        """
+        return None

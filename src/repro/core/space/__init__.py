@@ -5,11 +5,13 @@ Public API:
 - data model: :data:`ANY`, :func:`match`, :class:`TSTimeout`
 - the :class:`SpaceBackend` protocol (:mod:`repro.core.space.api`)
 - backends: :class:`LocalBackend`, :class:`ShardedBackend`,
-  :class:`InstrumentedBackend`, :class:`CheckedBackend`
+  :class:`InstrumentedBackend`, :class:`CheckedBackend`,
+  :class:`RacedBackend`
 - selection: :func:`make_backend` / ``$REPRO_TS_BACKEND``
 - the declared key protocol: :class:`KeySchema` / :class:`SchemaRegistry`
-  (:mod:`repro.core.space.schema`) and the runtime sanitizer
-  (:mod:`repro.core.space.checked`)
+  (:mod:`repro.core.space.schema`) and the runtime sanitizers — protocol
+  (:mod:`repro.core.space.checked`) and happens-before race detection
+  (:mod:`repro.core.space.raced`)
 - the :class:`TupleSpace` facade every ACAN component consumes
 - namespace scoping: :class:`ScopedSpace` per-program views over one
   shared space (multi-tenant ACAN), with the :class:`NsSubject` fused
@@ -23,6 +25,8 @@ from repro.core.space.checked import (CheckedBackend, Violation, find_checked,
                                       get_role, role, set_role)
 from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
 from repro.core.space.instrumented import InstrumentedBackend
+from repro.core.space.raced import (Race, RacedBackend, find_raced,
+                                    stage_context, task_context)
 from repro.core.space.schema import (CONTROL_SCHEMAS, FieldSpec, KeySchema,
                                      LIFECYCLES, ROLES, SchemaRegistry)
 from repro.core.space.local import LocalBackend
@@ -39,6 +43,7 @@ __all__ = [
     "LocalBackend", "ShardedBackend", "InstrumentedBackend",
     "CheckedBackend", "Violation", "find_checked", "get_role", "role",
     "set_role",
+    "Race", "RacedBackend", "find_raced", "stage_context", "task_context",
     "CONTROL_SCHEMAS", "FieldSpec", "KeySchema", "LIFECYCLES", "ROLES",
     "SchemaRegistry",
     "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",

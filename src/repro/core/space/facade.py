@@ -12,10 +12,10 @@ it is chosen per instance::
 
 ``REPRO_TS_BACKEND`` accepts the same spec strings as
 :func:`make_backend`: ``local`` (default), ``sharded``,
-``sharded:<n_shards>``, and the stackable wrappers ``instrumented`` and
-``checked`` — either legacy colon form (``instrumented:sharded:4``) or
-``+``-stacked (``checked+sharded:4``, ``instrumented+checked+local``);
-the leftmost wrapper is outermost.
+``sharded:<n_shards>``, and the stackable wrappers ``instrumented``,
+``checked`` and ``raced`` — either legacy colon form
+(``instrumented:sharded:4``) or ``+``-stacked (``checked+sharded:4``,
+``raced+checked+sharded``); the leftmost wrapper is outermost.
 
 The facade owns the hash-chained :class:`~repro.core.ledger.Ledger`
 (paper §4: "all updates can be logged in an immutable blockchain") and
@@ -34,6 +34,7 @@ from repro.core.space.api import Key, Pattern, SpaceBackend
 from repro.core.space.checked import CheckedBackend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.local import LocalBackend
+from repro.core.space.raced import RacedBackend
 from repro.core.space.sharded import ShardedBackend
 
 #: Environment variable consulted when no backend is passed explicitly.
@@ -41,7 +42,8 @@ BACKEND_ENV = "REPRO_TS_BACKEND"
 
 #: Stackable transparent wrappers accepted in wrapper specs (colon or
 #: ``+``-stacked form). The leftmost name in a stack is the outermost.
-_WRAPPERS = {"instrumented": InstrumentedBackend, "checked": CheckedBackend}
+_WRAPPERS = {"instrumented": InstrumentedBackend, "checked": CheckedBackend,
+             "raced": RacedBackend}
 
 
 def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
@@ -75,7 +77,7 @@ def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
     raise ValueError(
         f"unknown tuple-space backend {spec!r} "
         f"(expected local | sharded[:n] | instrumented[:spec] | "
-        f"checked[+spec])")
+        f"checked[+spec] | raced[+spec])")
 
 
 class TupleSpace:

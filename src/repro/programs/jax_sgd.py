@@ -40,8 +40,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.executor import ExecContext, PreconditionUnmet
-from repro.core.program import (OpRegistry, OpSpec, WorkloadProgram,
-                                ensure_builtin_ops, record_loss)
+from repro.core.program import (FINISH_STAGE, OpRegistry, OpSpec,
+                                StageEffect, WorkloadProgram, deletes,
+                                ensure_builtin_ops, reads, record_loss,
+                                writes)
 from repro.core.space import ANY
 from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc
@@ -183,3 +185,19 @@ class JAXSGDProgram(WorkloadProgram):
     # ------------------------------------------------------------- protocol
     def key_schemas(self) -> tuple[KeySchema, ...]:
         return KEY_SCHEMAS
+
+    def stage_effects(self, rnd: int) -> dict[str, tuple[StageEffect, ...]]:
+        # The grad op reads ("params", ANY) — any committed version — so
+        # the read is declared unpinned and conservatively aliases every
+        # params version; the combine's commit pins the versions it
+        # writes/deletes. With the ("grad", -1) chain edge the WW on
+        # params between consecutive rounds is always ordered.
+        return {
+            "grad": (
+                reads("params"),
+                writes("gpart", step=rnd), reads("gpart", step=rnd),
+                writes("params", step=rnd + 1),
+                deletes("params", step=rnd),
+            ),
+            FINISH_STAGE: (deletes("gpart", step=rnd),),
+        }

@@ -68,8 +68,9 @@ import numpy as np
 from repro.core.conflict import tiles_cover
 from repro.core.executor import (ExecContext, activation,
                                  activation_deriv_from_act)
-from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
-                                record_loss)
+from repro.core.program import (FINISH_STAGE, GLOBAL_OPS, OpSpec,
+                                StageEffect, WorkloadProgram, deletes,
+                                reads, record_loss, writes)
 from repro.core.space import ANY
 from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc, split_out_halves, split_quadrants
@@ -629,3 +630,76 @@ class MLPProgram(WorkloadProgram):
     # ------------------------------------------------------------- protocol
     def key_schemas(self) -> tuple[KeySchema, ...]:
         return KEY_SCHEMAS
+
+    def stage_effects(self, rnd: int) -> dict[str, tuple[StageEffect, ...]]:
+        """The declared interference contract (PR 8): per stage, every
+        data-plane key family its tasks' kernels read, its combine reads
+        and writes, and (``@finish``) its round cleanup deletes — pins
+        carry the concrete ``layer``/``data_id``/``step`` values for
+        round ``rnd``, so the cross-round hazards the ``(upd_l, -1)``
+        edges order (weight reads vs the §5.4 commit) show up as plain
+        pin overlaps."""
+        d = rnd % self.n_samples
+        L = len(self.layers)
+        eff: dict[str, tuple[StageEffect, ...]] = {}
+        for l in range(L):
+            src = (reads("x", data_id=d) if l == 0 else
+                   reads("act", layer=l - 1, data_id=d))
+            eff[f"fwd_{l}"] = (
+                src, reads("w", layer=l), reads("b", layer=l),
+                writes("fpart", layer=l, data_id=d),
+                reads("fpart", layer=l, data_id=d),
+                writes("pre", layer=l, data_id=d),
+                reads("pre", layer=l, data_id=d))
+            if l < L - 1:
+                eff[f"act_{l}"] = (
+                    reads("pre", layer=l, data_id=d),
+                    writes("actpart", layer=l, data_id=d),
+                    reads("actpart", layer=l, data_id=d),
+                    writes("act", layer=l, data_id=d),
+                    reads("act", layer=l, data_id=d))
+        eff["loss"] = (
+            reads("pre", layer=L - 1, data_id=d), reads("label", data_id=d),
+            writes("losspart", data_id=d), reads("losspart", data_id=d),
+            writes("dypart", layer=L - 1, data_id=d),
+            reads("dypart", layer=L - 1, data_id=d),
+            writes("loss", data_id=d, step=rnd),
+            writes("dy", layer=L - 1, data_id=d),
+            reads("dy", layer=L - 1, data_id=d))
+        for l in range(L):
+            src = (reads("x", data_id=d) if l == 0 else
+                   reads("act", layer=l - 1, data_id=d))
+            bwd = [src, reads("w", layer=l), reads("dy", layer=l, data_id=d),
+                   writes("gw", layer=l, data_id=d),
+                   reads("gw", layer=l, data_id=d),
+                   writes("gb", layer=l, data_id=d),
+                   reads("gb", layer=l, data_id=d),
+                   writes("bpart", layer=l, data_id=d),
+                   reads("bpart", layer=l, data_id=d),
+                   writes("gW", layer=l, data_id=d),
+                   reads("gW", layer=l, data_id=d),
+                   writes("gB", layer=l, data_id=d),
+                   reads("gB", layer=l, data_id=d)]
+            if l > 0:
+                bwd.append(writes("dy", layer=l - 1, data_id=d))
+            eff[f"bwd_{l}"] = tuple(bwd)
+            eff[f"upd_{l}"] = (
+                reads("w", layer=l), reads("b", layer=l),
+                reads("wver", layer=l),
+                reads("gW", layer=l, data_id=d),
+                reads("gB", layer=l, data_id=d),
+                writes("wnew", layer=l, step=rnd),
+                reads("wnew", layer=l, step=rnd),
+                deletes("wnew", layer=l, step=rnd),
+                writes("bnew", layer=l, step=rnd),
+                reads("bnew", layer=l, step=rnd),
+                deletes("bnew", layer=l, step=rnd),
+                writes("w", layer=l), deletes("w", layer=l),
+                writes("b", layer=l), deletes("b", layer=l),
+                writes("wver", layer=l), deletes("wver", layer=l))
+        eff[FINISH_STAGE] = tuple(
+            [deletes(s, data_id=d) for s in
+             ("fpart", "actpart", "losspart", "dypart", "gw", "gb",
+              "bpart", "gW", "gB", "pre", "act", "dy", "loss")]
+            + [deletes("wnew", step=rnd), deletes("bnew", step=rnd)])
+        return eff

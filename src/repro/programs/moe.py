@@ -76,8 +76,9 @@ import numpy as np
 
 from repro.core.conflict import tiles_cover
 from repro.core.executor import ExecContext
-from repro.core.program import (GLOBAL_OPS, OpSpec, WorkloadProgram,
-                                record_loss)
+from repro.core.program import (FINISH_STAGE, GLOBAL_OPS, OpSpec,
+                                StageEffect, WorkloadProgram, deletes,
+                                reads, record_loss, writes)
 from repro.core.space import ANY
 from repro.core.space.schema import KeySchema, int_field
 from repro.core.tasks import TaskDesc
@@ -483,3 +484,45 @@ class MoERoutingProgram(WorkloadProgram):
     # ------------------------------------------------------------- protocol
     def key_schemas(self) -> tuple[KeySchema, ...]:
         return KEY_SCHEMAS
+
+    def stage_effects(self, rnd: int) -> dict[str, tuple[StageEffect, ...]]:
+        """The declared interference contract (PR 8). Per-expert pins
+        make the mutual independence of sibling expert/grad stages
+        checkable, and the ``round`` pins show why adjacent rounds only
+        hazard through each expert's own weight commit (the
+        ``(grad_e, -1)`` edges)."""
+        eff: dict[str, tuple[StageEffect, ...]] = {
+            "route": (reads("moecfg"), reads("xtok"), reads("wr"),
+                      writes("route", round=rnd),
+                      reads("route", round=rnd),
+                      writes("disp", round=rnd),
+                      reads("disp", round=rnd, expert=0)),
+            "dy": (reads("moecfg"), reads("xtok"), reads("ylab"),
+                   reads("disp", round=rnd),
+                   reads("efwd", round=rnd),
+                   writes("dy", round=rnd),
+                   reads("dy", round=rnd)),
+            FINISH_STAGE: tuple(
+                deletes(s, round=rnd) for s in
+                ("route", "disp", "efwd", "gw1", "gw2", "dy")),
+        }
+        for e in range(self.E):
+            eff[f"expert_{e}"] = (
+                reads("moecfg"), reads("xtok"),
+                reads("disp", round=rnd, expert=e),
+                reads("we1", expert=e), reads("we2", expert=e),
+                writes("efwd", round=rnd, expert=e))
+            eff[f"grad_{e}"] = (
+                reads("moecfg"), reads("xtok"),
+                reads("disp", round=rnd, expert=e),
+                reads("dy", round=rnd),
+                reads("we1", expert=e), reads("we2", expert=e),
+                reads("wever", expert=e),
+                writes("gw1", round=rnd, expert=e),
+                reads("gw1", round=rnd, expert=e),
+                writes("gw2", round=rnd, expert=e),
+                reads("gw2", round=rnd, expert=e),
+                writes("we1", expert=e), deletes("we1", expert=e),
+                writes("we2", expert=e), deletes("we2", expert=e),
+                writes("wever", expert=e), deletes("wever", expert=e))
+        return eff

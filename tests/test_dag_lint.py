@@ -1,0 +1,68 @@
+"""Static stage-effect race detector (PR 8): the built-in programs must
+analyze clean, every seeded fixture must be flagged with exactly the
+finding kind it seeds, and the README effect table must be current.
+
+The ``fx_missing_edge`` fixture is the static half of the seeded
+end-to-end race test — :mod:`tests.test_raced` catches the same bug at
+runtime through the happens-before sanitizer.
+"""
+
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from tools.dag_lint import (DOC_END, DOC_START,  # noqa: E402
+                            _load_path_programs, builtin_programs,
+                            doc_table, lint_factories, main)
+from tools.dag_lint_fixtures import EXPECTED  # noqa: E402
+
+FIXTURES = REPO / "tools" / "dag_lint_fixtures"
+
+
+def test_builtin_programs_analyze_clean():
+    findings = lint_factories(builtin_programs())
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_every_fixture_flagged_with_expected_kind():
+    for name, kind in EXPECTED.items():
+        factories = _load_path_programs(FIXTURES / f"{name}.py")
+        findings = lint_factories(factories)
+        kinds = {f.kind for f in findings}
+        assert kinds == {kind}, f"{name}: {kinds or 'no findings'}"
+
+
+def test_missing_edge_fixture_flags_the_weight_commit():
+    """The dropped ``(upd_l, -1)`` edges surface as declared w/b/wver
+    interference between the round-r commit and round r+1."""
+    findings = lint_factories(
+        _load_path_programs(FIXTURES / "fx_missing_edge.py"))
+    subjects = {f.detail.split("(")[1].split(",")[0].rstrip(")")
+                for f in findings}
+    assert {"w", "b", "wver"} <= subjects
+    assert all(f.kind == "effect-conflict" for f in findings)
+
+
+def test_cli_exit_codes():
+    assert main([]) == 0                       # built-ins are clean
+    assert main([str(FIXTURES / "fx_missing_edge.py")]) == 1
+    assert main([str(FIXTURES / "no_such_file.py")]) == 2
+
+
+def test_doc_table_covers_all_builtin_stages():
+    table = doc_table()
+    for stage in ("fwd_0", "upd_1", "loss", "route", "expert_0",
+                  "grad_3", "dy", "grad", "@finish"):
+        assert f"`{stage}`" in table
+    for program in ("mlp", "moe_routing", "jax_sgd"):
+        assert program in table
+
+
+def test_readme_table_is_current():
+    readme = REPO / "README.md"
+    text = readme.read_text()
+    assert DOC_START in text and DOC_END in text
+    assert main(["--check-doc", str(readme)]) == 0

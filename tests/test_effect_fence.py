@@ -1,0 +1,156 @@
+"""Admission fence (PR 8): the Manager refuses to overlap DAG-concurrent
+stages whose *declared* effects conflict — they run serialized with one
+loud warning per stage pair — while declared-clean stages keep the full
+frontier overlap.
+"""
+
+import logging
+import threading
+
+import pytest
+
+from repro.core.handler import Handler, SpeedBox
+from repro.core.manager import Manager, ManagerConfig
+from repro.core.program import WorkloadProgram, deletes, reads, writes
+from repro.core.space import ANY, TupleSpace
+from repro.core.tasks import TaskDesc
+from repro.programs.mlp import ACTIVATION
+
+MGR_LOGGER = "repro.core.manager"
+
+
+class FenceDiamond(WorkloadProgram):
+    """a -> (b1 | b2) -> c. ``b1``/``b2`` are real task stages (distinct
+    layers), so both can be in flight together. ``conflicting=True``
+    declares (and performs) a read-modify-write of the shared ``("acc",)``
+    cell from both; ``False`` declares disjoint ``layer`` pins and writes
+    disjoint keys. ``events`` journals stage launches and combines in
+    Manager order."""
+
+    name = "fence_diamond"
+
+    def __init__(self, conflicting: bool, rounds: int = 2,
+                 width: int = 8) -> None:
+        self.conflicting = conflicting
+        self.rounds = rounds
+        self.width = width
+        self.events: list[tuple] = []
+
+    def setup(self, ts) -> None:
+        import numpy as np
+        for rnd in range(self.rounds):
+            for layer in (1, 2):
+                if ts.try_read(("pre", layer, rnd)) is None:
+                    ts.put(("pre", layer, rnd),
+                           np.linspace(-1, 1, self.width)
+                           .astype(np.float32))
+
+    def n_rounds(self) -> int:
+        return self.rounds
+
+    def stage_names(self, rnd):
+        return ["a", "b1", "b2", "c"]
+
+    def stage_deps(self, rnd):
+        return {"b1": ["a"], "b2": ["a"], "c": ["b1", "b2"]}
+
+    def stage_tasks(self, ts, rnd, stage):
+        self.events.append(("launch", rnd, stage))
+        if stage in ("a", "c"):
+            return []
+        layer = 1 if stage == "b1" else 2
+        return [TaskDesc(ACTIVATION, layer, rnd, rnd, 0, 0, 0, self.width)]
+
+    def combine(self, ts, rnd, stage, mgr) -> None:
+        self.events.append(("combine", rnd, stage))
+        if stage not in ("b1", "b2"):
+            return
+        layer = 1 if stage == "b1" else 2
+        if self.conflicting:
+            # Order-sensitive shared-cell RMW: only serialization keeps
+            # the final value deterministic.
+            hit = ts.try_read(("acc",))
+            acc = hit[1] if hit else 1.0
+            ts.delete(("acc",))
+            ts.put(("acc",), acc * 3.0 + layer)
+        else:
+            ts.put(("out", layer, rnd), float(layer))
+
+    def finish_round(self, ts, rnd) -> None:
+        ts.delete(("actpart", ANY, rnd, ANY, ANY))
+        ts.delete(("done", ANY, ANY, rnd, ANY, ANY, ANY, ANY, ANY))
+
+    def stage_effects(self, rnd):
+        if self.conflicting:
+            b = (reads("acc"), writes("acc"), deletes("acc"))
+            b1 = b2 = b
+        else:
+            b1 = (writes("out", layer=1),)
+            b2 = (writes("out", layer=2),)
+        return {"a": (), "c": (), "b1": b1, "b2": b2}
+
+
+def _run(prog: FenceDiamond, width: int, fence: bool = True) -> TupleSpace:
+    ts = TupleSpace()
+    stop = threading.Event()
+    mgr = Manager(ts=ts, program=prog,
+                  cfg=ManagerConfig(task_cap=64.0, initial_timeout=30.0,
+                                    max_inflight_stages=width,
+                                    effect_fence=fence),
+                  stop_event=stop)
+    handler = Handler(ts=ts, name="h0", speed=SpeedBox(1.0), capacity=64.0,
+                      time_scale=1e-9, stop_event=stop)
+    threads = [threading.Thread(target=mgr.run, daemon=True),
+               threading.Thread(target=handler.run, daemon=True)]
+    for t in threads:
+        t.start()
+    ts.read(("mstate", "finished"), timeout=30.0)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5.0)
+    return ts
+
+
+def _idx(events, kind, rnd, stage):
+    return events.index((kind, rnd, stage))
+
+
+def test_conflicting_stages_serialized_with_one_warning(caplog):
+    prog = FenceDiamond(conflicting=True)
+    with caplog.at_level(logging.WARNING, logger=MGR_LOGGER):
+        ts = _run(prog, width=4)
+    # serialized: b2 admitted only after b1's combine, every round
+    for rnd in range(2):
+        assert _idx(prog.events, "launch", rnd, "b2") \
+            > _idx(prog.events, "combine", rnd, "b1")
+    warnings = [r for r in caplog.records
+                if "admission fence" in r.getMessage()]
+    assert len(warnings) == 1              # once per stage pair, not per round
+    assert "'b1'" in warnings[0].getMessage()
+    assert "'b2'" in warnings[0].getMessage()
+    # bit-identical to the sequential scheduler
+    seq_ts = _run(FenceDiamond(conflicting=True), width=1)
+    assert ts.try_read(("acc",))[1] == seq_ts.try_read(("acc",))[1]
+
+
+def test_declared_clean_stages_overlap_without_warning(caplog):
+    prog = FenceDiamond(conflicting=False)
+    with caplog.at_level(logging.WARNING, logger=MGR_LOGGER):
+        ts = _run(prog, width=4)
+    # overlapped: b2 admitted while b1 is still in flight, every round
+    for rnd in range(2):
+        assert _idx(prog.events, "launch", rnd, "b2") \
+            < _idx(prog.events, "combine", rnd, "b1")
+    assert not any("admission fence" in r.getMessage()
+                   for r in caplog.records)
+    assert ts.try_read(("out", 1, 1)) and ts.try_read(("out", 2, 1))
+
+
+def test_fence_off_observes_only(caplog):
+    prog = FenceDiamond(conflicting=True)
+    with caplog.at_level(logging.WARNING, logger=MGR_LOGGER):
+        _run(prog, width=4, fence=False)
+    assert _idx(prog.events, "launch", 0, "b2") \
+        < _idx(prog.events, "combine", 0, "b1")
+    assert not any("admission fence" in r.getMessage()
+                   for r in caplog.records)

@@ -1,0 +1,189 @@
+"""Happens-before race sanitizer (PR 8): unit semantics of the
+``RacedBackend`` (ordering, attribution, exemptions) and the seeded
+end-to-end detection — the ``fx_missing_edge`` fixture (MLP with the
+cross-round ``(upd_l, -1)`` edges dropped) races at frontier width >= 2
+on both backends, while the intact built-ins run race-free.
+
+The same fixture is caught *statically* by ``tools.dag_lint``
+(:mod:`tests.test_dag_lint`).
+"""
+
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro.core import ACANCloud, CloudConfig, FaultPlan  # noqa: E402
+from repro.core.space import (ANY, RacedBackend, TupleSpace,  # noqa: E402
+                              find_raced, make_backend, stage_context,
+                              task_context)
+
+CALM = FaultPlan(interval=1e9)
+
+
+def _raced():
+    b = make_backend("raced+local")
+    assert isinstance(b, RacedBackend)
+    return b
+
+
+# ------------------------------------------------------------------- units
+def test_unordered_conflicting_stages_race():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    b.stage_begin("", 1, "B")              # B launched before A completed
+    with stage_context(0, "A"):
+        b.put(("w", 1), 1.0)
+    with stage_context(1, "B"):
+        b.try_read(("w", 1))
+    assert b.race_count == 1
+    (report,) = b.race_report()
+    assert "[RW]" in report and "'w'" in report
+
+
+def test_completion_before_launch_orders_stages():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    with stage_context(0, "A"):
+        b.put(("w", 1), 1.0)
+    b.stage_complete("", 0, "A")
+    b.stage_begin("", 1, "B")              # launched after A's combine
+    with stage_context(1, "B"):
+        b.try_read(("w", 1))
+        b.put(("w", 1), 2.0)
+    assert b.race_report() == []
+
+
+def test_ww_between_unordered_writers():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    b.stage_begin("", 0, "B")
+    with stage_context(0, "A"):
+        b.put(("w", 1), 1.0)
+    with stage_context(0, "B"):
+        b.put(("w", 1), 2.0)
+    assert b.race_count == 1
+    assert "[WW]" in b.race_report()[0]
+
+
+def test_pattern_access_aliases_concrete_key():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    b.stage_begin("", 0, "B")
+    with stage_context(0, "A"):
+        b.keys(("w", ANY))                 # wildcard read
+    with stage_context(0, "B"):
+        b.put(("w", 3), 1.0)               # aliases the pattern
+    assert b.race_count == 1
+    assert "[RW]" in b.race_report()[0]
+
+
+def test_control_subjects_and_unattributed_ops_exempt():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    b.stage_begin("", 0, "B")
+    with stage_context(0, "A"):
+        b.put(("done", "FWD", 0, 0, 0, 0, 0, 8, 1), True)
+    with stage_context(0, "B"):
+        b.delete(("done", ANY, ANY, 0, ANY, ANY, ANY, ANY, ANY))
+    b.put(("w", 9), 1.0)                   # no stage/task context
+    b.try_read(("w", 9))
+    assert b.race_report() == [] and b.raced_ops == 0
+
+
+def test_unannounced_stage_context_exempt():
+    b = _raced()                            # no stage_begin at all
+    with stage_context(0, "A"):
+        b.put(("w", 1), 1.0)
+    with stage_context(1, "B"):
+        b.try_read(("w", 1))
+    assert b.race_report() == []
+
+
+def test_task_context_resolves_against_announced_sigs():
+    b = _raced()
+    b.stage_begin("", 0, "A")
+    b.stage_sig("", 0, "A", ("FWD", 0, ANY, 7))
+    b.stage_begin("", 1, "B")
+    b.stage_sig("", 1, "B", ("FWD", 0, ANY, 8))
+    with task_context("FWD", 0, 3, 7):     # matches A's signature
+        b.put(("w", 1), 1.0)
+    with task_context("FWD", 0, 5, 8):     # matches B's signature
+        b.put(("w", 1), 2.0)
+    assert b.race_count == 1
+    (report,) = b.race_report()
+    assert "[WW]" in report and "'A'" in report and "'B'" in report
+
+
+def test_race_report_filters_by_namespace():
+    from repro.core.space.scoped import scope_key
+    b = _raced()
+    b.stage_begin("mlp", 0, "A")
+    b.stage_begin("mlp", 1, "B")
+    with stage_context(0, "A"):
+        b.put(scope_key("mlp", ("w", 1)), 1.0)
+    with stage_context(1, "B"):
+        b.put(scope_key("mlp", ("w", 1)), 2.0)
+    assert len(b.race_report()) == 1
+    assert len(b.race_report("mlp")) == 1
+    assert b.race_report("moe_routing") == []
+    assert "mlp::" in b.race_report("mlp")[0]
+
+
+def test_raced_stacks_with_checked_and_sharded():
+    ts = TupleSpace(backend="raced+checked+sharded:2")
+    raced = find_raced(ts.backend)
+    assert isinstance(raced, RacedBackend)
+    ts.put(("w", 1), 1.0)
+    assert ts.try_read(("w", 1))[1] == 1.0
+    stats = ts.backend.stats()
+    assert stats["raced_races"] == 0 and "raced_ops" in stats
+    assert find_raced(make_backend("local")) is None
+
+
+# ----------------------------------------------- seeded end-to-end (e2e)
+def _cloud_cfg(backend: str, width: int, fence: bool) -> CloudConfig:
+    return CloudConfig(
+        n_handlers=3, task_cap=32.0, pouch_size=64, time_scale=1e-6,
+        initial_timeout=0.1, fault_plan=CALM, wall_limit=60.0,
+        max_inflight_stages=width, ts_backend=backend,
+        effect_fence=fence)
+
+
+@pytest.mark.parametrize("backend", ["raced+checked+local",
+                                     "raced+checked+sharded:2"])
+def test_missing_edge_mlp_races_at_runtime(backend):
+    """The seeded missing-edge bug, runtime half: with the admission
+    fence observing only, the frontier overlaps round r's weight commit
+    with round r+1's reads and the sanitizer reports the race."""
+    from tools.dag_lint_fixtures.fx_missing_edge import make_program
+    res = ACANCloud(_cloud_cfg(backend, width=4, fence=False),
+                    program=make_program()).run()
+    assert res.race_report, "seeded race not detected"
+    assert any("'w'" in r or "'b'" in r or "'wver'" in r
+               for r in res.race_report)
+
+
+def test_missing_edge_mlp_fenced_runs_race_free():
+    """Same broken DAG, fence ON: the declared effects serialize the
+    conflicting stages, so the sanitizer stays quiet — the fence is the
+    runtime mitigation for exactly what dag_lint flags statically."""
+    from tools.dag_lint_fixtures.fx_missing_edge import make_program
+    res = ACANCloud(_cloud_cfg("raced+checked+local", width=4, fence=True),
+                    program=make_program()).run()
+    assert res.race_report == []
+
+
+def test_builtin_mlp_wide_frontier_race_free():
+    from repro.programs.mlp import LayerSpec, MLPProgram
+    prog = MLPProgram([LayerSpec(8, 8), LayerSpec(8, 1)],
+                      epochs=1, n_samples=4, seed=0)
+    res = ACANCloud(_cloud_cfg("raced+checked+sharded:2", width=8,
+                               fence=True), program=prog).run()
+    assert res.race_report == []
+    assert res.ts_violations == 0 and res.ts_leaks == {}
+    assert len(res.loss_history) == 4

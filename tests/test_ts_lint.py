@@ -11,7 +11,7 @@ if str(REPO) not in sys.path:
     sys.path.insert(0, str(REPO))
 
 from tools.ts_lint import (DOC_END, DOC_START, doc_table,  # noqa: E402
-                           lint_paths, main)
+                           lint_paths, main, resolution_stats)
 
 FIXTURES = REPO / "tools" / "ts_lint_fixtures"
 
@@ -61,3 +61,46 @@ def test_readme_table_is_current():
     text = readme.read_text()
     assert DOC_START in text and DOC_END in text
     assert main(["--check-doc", str(readme)]) == 0
+
+
+# ----------------------------------------------- constant folding (PR 8)
+def test_constant_folding_only_increases_resolved_sites():
+    """Folding module constants / str concatenation into key subjects
+    must never lose a site the plain resolver handled."""
+    on = resolution_stats([REPO / "src" / "repro"], fold=True)
+    off = resolution_stats([REPO / "src" / "repro"], fold=False)
+    assert on["sites"] == off["sites"]
+    assert on["resolved"] >= off["resolved"]
+
+
+def test_constant_folding_resolves_constant_subjects(tmp_path):
+    """A subject spelled as a module-level UPPER_CASE constant or a
+    f-string-free str concatenation resolves only with folding."""
+    src = tmp_path / "folded.py"
+    src.write_text(
+        'CURSOR_SUBJECT = "mstate"\n'
+        'PREFIX = "ms"\n'
+        'COMBINED = PREFIX + "tate"\n'
+        "def probe(ts):\n"
+        "    ts.try_read((CURSOR_SUBJECT, 'cursor'))\n"
+        "    ts.try_read((COMBINED, 'cursor'))\n"
+        "    ts.try_read(('ms' + 'tate', 'cursor'))\n")
+    on = resolution_stats([src], fold=True)
+    off = resolution_stats([src], fold=False)
+    assert on["sites"] == off["sites"] == 3
+    assert off["resolved"] == 1        # literal 'ms' + 'tate' needs no env
+    assert on["resolved"] == 3         # constants fold only with the env
+    # the folded subjects resolve against the real schema: lint-clean
+    assert lint_paths([src]) == []
+
+
+def test_folded_subjects_are_schema_checked(tmp_path):
+    """Folding feeds the same checks literal subjects get — an
+    arity-mismatch behind a constant is now caught."""
+    src = tmp_path / "folded_bad.py"
+    src.write_text(
+        'CURSOR_SUBJECT = "mstate"\n'
+        "def probe(ts):\n"
+        "    ts.try_read((CURSOR_SUBJECT, 'cursor', 'extra'))\n")
+    findings = lint_paths([src])
+    assert [f.kind for f in findings] == ["arity-mismatch"]

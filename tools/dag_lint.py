@@ -1,0 +1,515 @@
+"""Static stage-effect race detector over program DAGs (PR 8).
+
+Where :mod:`tools.ts_lint` checks each tuple-space call site against the
+declared :class:`~repro.core.space.schema.KeySchema` registry, this lint
+checks the *interference* contract: every
+:class:`~repro.core.program.WorkloadProgram` declares per-stage effect
+sets (:meth:`stage_effects` — subject + pinned fields + round), and the
+pipelined Manager's frontier may overlap any two stages with no
+dependency path between them.  dag_lint instantiates each program,
+builds the round-window DAG the scheduler actually runs (stage deps,
+normalized cross-round edges, the implicit ``@finish`` barriers), takes
+its transitive closure, and reports:
+
+- **effect-conflict** — two DAG-concurrent stages declare conflicting
+  effects (WW, or read/delete vs write) on co-pinned keys: the frontier
+  is allowed to race them;
+- **round-aliasing** — a round's ``@finish`` cleanup conflicts with a
+  *later* round's stage inside the declared ``round_overlap()`` window —
+  no dependency edge can ever order a later round after an earlier
+  round's cleanup, so the key family aliases across rounds deeper than
+  its disambiguating pins;
+- **consume-without-producer** — a stage declares a read of a
+  non-persistent subject that neither the stage itself nor any same-
+  window dependency ancestor writes;
+- **effect-drift** — the source AST (op kernels' item tuples,
+  ``ctx.require``, and direct TS calls in ``combine``/``finish_round``/
+  helpers) reveals a ``(subject, mode)`` access the declared effect
+  union never mentions: the admission fence and this very lint are
+  blind to it.
+
+The AST half reuses :mod:`tools.ts_lint`'s resolver (OPS/RECEIVERS plus
+the PR 8 constant folding); ``setup``/``__init__`` and the protocol
+declarations themselves are excluded, as is the abstract base module.
+
+Seeded negatives live in ``tools/dag_lint_fixtures/`` — each module
+trips exactly one finding kind (see its ``EXPECTED`` map); CI runs the
+clean pass over the built-ins and the must-fail pass over the fixtures.
+
+Usage::
+
+    python -m tools.dag_lint [fixture.py ...]   # default: built-ins
+    python -m tools.dag_lint --doc-table        # print the effect table
+    python -m tools.dag_lint --write-doc README.md
+    python -m tools.dag_lint --check-doc README.md
+
+Exit status: 0 clean, 1 findings (or doc drift), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import importlib.util
+import inspect
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+from repro.core.program import (FINISH_STAGE, StageEffect,  # noqa: E402
+                                WorkloadProgram, effects_conflict)
+from repro.core.space.schema import CONTROL_SCHEMAS  # noqa: E402
+from tools.ts_lint import (OPS, RECEIVERS, _key_expr,  # noqa: E402
+                           _module_consts, _resolve_key)
+
+CONTROL_SUBJECTS = frozenset(s.subject for s in CONTROL_SCHEMAS)
+
+#: TS-op check kind -> effect modes it implies.
+_OP_MODES = {"put": ("write",), "read": ("read",),
+             "take": ("read", "delete"), "delete": ("delete",)}
+
+#: Methods excluded from drift inference: lifecycle hooks that run
+#: before/outside the stage frontier, and the declarations themselves.
+_SKIP_METHODS = {"setup", "__init__", "key_schemas", "stage_effects"}
+
+#: How many window base rounds to instantiate per program.  Effects are
+#: round-periodic in every first-party program (pins derive from
+#: ``rnd % k``), so a handful of bases covers all pin parities.
+_MAX_WINDOWS = 6
+
+#: Rounds unioned for the declared side of the drift check.
+_DRIFT_ROUNDS = 4
+
+
+@dataclass(frozen=True)
+class Finding:
+    program: str
+    kind: str
+    where: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.program}: [{self.kind}] {self.where}: {self.detail}"
+
+
+# ------------------------------------------------------------------ windows
+
+def _norm_deps(prog: WorkloadProgram, rnd: int) -> dict[str, list]:
+    """name -> [(dep_name, dep_round)] with string deps normalized to
+    same-round and ``(name, delta)`` tuples made absolute."""
+    out: dict[str, list] = {}
+    deps = prog.stage_deps(rnd)
+    for name in prog.stage_names(rnd):
+        edges = []
+        for dep in deps.get(name, ()):
+            if isinstance(dep, str):
+                edges.append((dep, rnd))
+            else:
+                edges.append((dep[0], rnd + int(dep[1])))
+        out[name] = edges
+    return out
+
+
+def _window_graph(prog: WorkloadProgram, r0: int, overlap: int,
+                  n_rounds: int):
+    """Nodes ``(rnd, stage)`` for rounds ``[r0, r0+overlap)`` plus one
+    ``@finish`` barrier per round, and each node's predecessor set —
+    exactly the ordering the frontier Manager enforces."""
+    hi = min(r0 + overlap, n_rounds)
+    nodes: list[tuple[int, str]] = []
+    preds: dict[tuple[int, str], set] = {}
+    for r in range(r0, hi):
+        names = prog.stage_names(r)
+        deps = _norm_deps(prog, r)
+        for s in names:
+            node = (r, s)
+            preds[node] = {(dr, dn) for (dn, dr) in deps[s]
+                           if r0 <= dr < hi}
+            nodes.append(node)
+        fin = (r, FINISH_STAGE)
+        preds[fin] = {(r, s) for s in names}
+        if r > r0:
+            preds[fin].add((r - 1, FINISH_STAGE))
+        nodes.append(fin)
+    return nodes, preds
+
+
+def _ancestors(preds: dict) -> dict:
+    memo: dict = {}
+
+    def anc(n):
+        if n in memo:
+            return memo[n]
+        memo[n] = set()                  # cycle guard: partial is fine
+        out = set()
+        for p in preds.get(n, ()):
+            out.add(p)
+            out |= anc(p)
+        memo[n] = out
+        return out
+
+    return {n: anc(n) for n in preds}
+
+
+def _pins_compat(a: StageEffect, b: StageEffect) -> bool:
+    pa, pb = dict(a.pins), dict(b.pins)
+    return all(pa[f] == pb[f] for f in pa.keys() & pb.keys())
+
+
+def _semantic_findings(prog: WorkloadProgram,
+                       label: str) -> list[Finding]:
+    """The window-graph half: effect-conflict / round-aliasing /
+    consume-without-producer over the DECLARED effects."""
+    n_rounds = prog.n_rounds()
+    overlap = max(1, prog.round_overlap())
+    if prog.stage_effects(0) is None:
+        return []                        # program opted out
+    lifecycle = {s.subject: s.lifecycle for s in prog.key_schemas()}
+    findings: list[Finding] = []
+    seen: set[tuple] = set()
+
+    def emit(kind, key, where, detail):
+        if key in seen:
+            return
+        seen.add(key)
+        findings.append(Finding(label, kind, where, detail))
+
+    for r0 in range(min(n_rounds, _MAX_WINDOWS)):
+        nodes, preds = _window_graph(prog, r0, overlap, n_rounds)
+        anc = _ancestors(preds)
+        eff = {n: (prog.stage_effects(n[0]) or {}).get(n[1], ())
+               for n in nodes}
+
+        # -- interference between DAG-concurrent nodes
+        for i, a in enumerate(nodes):
+            for b in nodes[i + 1:]:
+                if a in anc[b] or b in anc[a]:
+                    continue
+                for ea in eff[a]:
+                    if ea.subject in CONTROL_SUBJECTS:
+                        continue
+                    for eb in eff[b]:
+                        kind = effects_conflict(ea, eb)
+                        if kind is None:
+                            continue
+                        finishy = FINISH_STAGE in (a[1], b[1]) \
+                            and a[0] != b[0]
+                        fkind = ("round-aliasing" if finishy
+                                 else "effect-conflict")
+                        key = (fkind, a[1], b[1], ea.subject,
+                               b[0] - a[0])
+                        emit(fkind, key,
+                             f"{a[1]}@r{a[0]} vs {b[1]}@r{b[0]}",
+                             f"{kind} on {ea} vs {eb} with no "
+                             f"dependency path between the stages — "
+                             f"the frontier may overlap them")
+
+        # -- declared reads must have a producer in scope (base round
+        #    only: later rounds of this window are earlier rounds of a
+        #    later window)
+        for node in nodes:
+            if node[0] != r0 or node[1] == FINISH_STAGE:
+                continue
+            scope = anc[node] | {node}
+            for e in eff[node]:
+                if e.mode != "read" or e.subject in CONTROL_SUBJECTS:
+                    continue
+                if lifecycle.get(e.subject) == "persistent":
+                    continue             # seeded by setup / prior epoch
+                produced = any(
+                    w.mode == "write" and w.subject == e.subject
+                    and _pins_compat(w, e)
+                    for m in scope for w in eff.get(m, ()))
+                if not produced:
+                    key = ("consume-without-producer", node[1],
+                           e.subject)
+                    emit("consume-without-producer", key,
+                         f"{node[1]}@r{r0}",
+                         f"declared {e} but no compatible write in the "
+                         f"stage itself or any dependency ancestor")
+    return findings
+
+
+# -------------------------------------------------------------- drift (AST)
+
+def _recv_name(node: ast.expr):
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _is_kernel(fn: ast.FunctionDef) -> bool:
+    args = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if args and args[0] == "self":
+        args = args[1:]
+    return bool(args) and args[0] == "ctx"
+
+
+def _scan_function(fn: ast.FunctionDef, env: dict,
+                   inferred: dict) -> None:
+    """Record every statically-resolvable (subject, mode) access in one
+    function body into ``inferred[(subject, mode)] = first-line``."""
+    kernel = _is_kernel(fn)
+
+    def add(subject, modes, line):
+        if subject in CONTROL_SUBJECTS:
+            return
+        for mode in modes:
+            inferred.setdefault((subject, mode), line)
+
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                continue
+            recv = _recv_name(f.value)
+            if f.attr in OPS and recv in RECEIVERS:
+                key = _key_expr(node, f.attr)
+                if key is None:
+                    continue
+                subject, _ = _resolve_key(key, env)
+                if isinstance(subject, str):
+                    add(subject, _OP_MODES[OPS[f.attr]], node.lineno)
+            elif f.attr == "require" and recv == "ctx" and node.args:
+                subject, _ = _resolve_key(node.args[0], env)
+                if isinstance(subject, str):
+                    add(subject, ("read",), node.lineno)
+        elif kernel and isinstance(node, ast.Tuple) \
+                and len(node.elts) == 2 \
+                and isinstance(node.elts[0], (ast.Tuple, ast.BinOp)):
+            # op kernels return/append (key, value) items: a 2-tuple
+            # whose head is a literal key is a write.
+            subject, _ = _resolve_key(node.elts[0], env)
+            if isinstance(subject, str):
+                add(subject, ("write",), node.lineno)
+
+
+def _inferred_effects(prog: WorkloadProgram) -> dict:
+    """(subject, mode) -> "path:line" inferred from the program's own
+    source files (every class in the MRO below the abstract base, plus
+    those modules' op-kernel functions)."""
+    files: dict[str, set] = {}
+    for cls in type(prog).__mro__:
+        if cls in (WorkloadProgram, object):
+            continue
+        if cls.__module__ == "repro.core.program":
+            continue
+        try:
+            src = inspect.getsourcefile(cls)
+        except TypeError:                # pragma: no cover - builtins
+            continue
+        if src:
+            files.setdefault(src, set()).add(cls.__name__)
+
+    out: dict = {}
+    for src, class_names in sorted(files.items()):
+        try:
+            tree = ast.parse(Path(src).read_text(), filename=src)
+        except (OSError, SyntaxError):   # pragma: no cover - defensive
+            continue
+        env = _module_consts(tree)
+        per_file: dict = {}
+        for stmt in tree.body:
+            if isinstance(stmt, ast.FunctionDef) and _is_kernel(stmt):
+                _scan_function(stmt, env, per_file)
+            elif isinstance(stmt, ast.ClassDef) \
+                    and stmt.name in class_names:
+                for item in stmt.body:
+                    if isinstance(item, ast.FunctionDef) \
+                            and item.name not in _SKIP_METHODS:
+                        _scan_function(item, env, per_file)
+        rel = str(Path(src))
+        try:
+            rel = str(Path(src).relative_to(_REPO))
+        except ValueError:
+            pass
+        for key, line in per_file.items():
+            out.setdefault(key, f"{rel}:{line}")
+    return out
+
+
+def _drift_findings(prog: WorkloadProgram, label: str) -> list[Finding]:
+    if prog.stage_effects(0) is None:
+        return []
+    declared: set = set()
+    for rnd in range(min(prog.n_rounds(), _DRIFT_ROUNDS)):
+        eff = prog.stage_effects(rnd)
+        if eff is None:                  # pragma: no cover - defensive
+            return []
+        for effects in eff.values():
+            for e in effects:
+                declared.add((e.subject, e.mode))
+    findings = []
+    for (subject, mode), where in sorted(_inferred_effects(prog).items()):
+        if (subject, mode) not in declared:
+            findings.append(Finding(
+                label, "effect-drift", where,
+                f"source performs a {mode} of {subject!r} that no "
+                f"declared stage effect mentions — the admission fence "
+                f"and the static race check are blind to it"))
+    return findings
+
+
+# ----------------------------------------------------------------- programs
+
+def builtin_programs() -> list:
+    """Factories for the three first-party programs, sized small enough
+    for the semantic pass to instantiate cheaply."""
+    def mlp():
+        from repro.programs.mlp import LayerSpec, MLPProgram
+        return MLPProgram([LayerSpec(8, 8), LayerSpec(8, 1)],
+                          epochs=2, n_samples=4)
+
+    def moe():
+        from repro.programs.moe import MoERoutingProgram
+        return MoERoutingProgram(n_experts=4, steps=4)
+
+    def jax_sgd():
+        from repro.configs import get_config
+        from repro.programs.jax_sgd import JAXSGDProgram
+        return JAXSGDProgram(get_config("smollm_360m", reduced=True),
+                             steps=4, n_micro=2, micro_batch=2, seq=32)
+
+    return [mlp, moe, jax_sgd]
+
+
+def _load_path_programs(path: Path) -> list:
+    """Import a fixture/user module by file path and return its
+    ``DAG_LINT_PROGRAMS`` factories."""
+    name = f"_dag_lint_{path.stem}"
+    spec = importlib.util.spec_from_file_location(name, path)
+    if spec is None or spec.loader is None:
+        raise SystemExit(f"cannot import {path}")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod
+    spec.loader.exec_module(mod)
+    factories = getattr(mod, "DAG_LINT_PROGRAMS", None)
+    if not factories:
+        raise SystemExit(
+            f"{path}: module defines no DAG_LINT_PROGRAMS list")
+    return list(factories)
+
+
+def lint_program(prog: WorkloadProgram) -> list[Finding]:
+    label = getattr(prog, "name", type(prog).__name__)
+    return (_semantic_findings(prog, label)
+            + _drift_findings(prog, label))
+
+
+def lint_factories(factories: list) -> list[Finding]:
+    findings: list[Finding] = []
+    for factory in factories:
+        findings.extend(lint_program(factory()))
+    return findings
+
+
+# --------------------------------------------------------------- doc table
+DOC_START = "<!-- dag-effects-table:start -->"
+DOC_END = "<!-- dag-effects-table:end -->"
+
+
+def doc_table() -> str:
+    """Per-stage declared effect table for the built-ins (round 0 pins),
+    generated from ``stage_effects`` — README drift is a CI failure."""
+    lines = [
+        "| program | stage | reads | writes | deletes |",
+        "|---|---|---|---|---|",
+    ]
+    for factory in builtin_programs():
+        prog = factory()
+        label = getattr(prog, "name", type(prog).__name__)
+        eff = prog.stage_effects(0) or {}
+        stages = [s for s in prog.stage_names(0) if s in eff]
+        stages += [s for s in eff if s not in stages]
+        for stage in stages:
+            by_mode = {"read": [], "write": [], "delete": []}
+            for e in eff[stage]:
+                subj = e.subject
+                if subj not in by_mode[e.mode]:
+                    by_mode[e.mode].append(subj)
+            lines.append(
+                f"| {label} | `{stage}` "
+                f"| {', '.join(by_mode['read']) or '—'} "
+                f"| {', '.join(by_mode['write']) or '—'} "
+                f"| {', '.join(by_mode['delete']) or '—'} |")
+    return "\n".join(lines)
+
+
+def _splice_doc(text: str) -> str:
+    start = text.find(DOC_START)
+    end = text.find(DOC_END)
+    if start < 0 or end < 0 or end < start:
+        raise SystemExit(
+            f"doc file lacks the {DOC_START!r} / {DOC_END!r} markers")
+    head = text[: start + len(DOC_START)]
+    tail = text[end:]
+    return f"{head}\n{doc_table()}\n{tail}"
+
+
+# --------------------------------------------------------------------- CLI
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.dag_lint",
+        description="Static stage-effect interference lint over program "
+                    "DAGs and declared stage_effects.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="program modules exposing DAG_LINT_PROGRAMS "
+                         "(default: the three built-in programs)")
+    ap.add_argument("--doc-table", action="store_true",
+                    help="print the generated per-stage effect table")
+    ap.add_argument("--write-doc", metavar="FILE",
+                    help="splice the effect table between the doc "
+                         "markers")
+    ap.add_argument("--check-doc", metavar="FILE",
+                    help="fail (exit 1) if FILE's spliced table is "
+                         "stale")
+    args = ap.parse_args(argv)
+
+    if args.doc_table:
+        print(doc_table())
+        return 0
+    if args.write_doc:
+        p = Path(args.write_doc)
+        p.write_text(_splice_doc(p.read_text()))
+        print(f"wrote stage-effect table to {p}")
+        return 0
+    if args.check_doc:
+        p = Path(args.check_doc)
+        text = p.read_text()
+        if _splice_doc(text) != text:
+            print(f"{p}: stage-effect table is stale — regenerate with "
+                  f"`python -m tools.dag_lint --write-doc {p}`")
+            return 1
+        print(f"{p}: stage-effect table up to date")
+        return 0
+
+    if args.paths:
+        missing = [p for p in args.paths if not Path(p).exists()]
+        if missing:
+            print(f"no such path(s): {missing}", file=sys.stderr)
+            return 2
+        factories = []
+        for p in args.paths:
+            factories.extend(_load_path_programs(Path(p)))
+    else:
+        factories = builtin_programs()
+
+    findings = lint_factories(factories)
+    for f in findings:
+        print(f)
+    print(f"dag-lint: {len(findings)} finding(s) across "
+          f"{len(factories)} program(s)")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Seeded dag_lint violations — each fixture module trips exactly one
+finding *kind* (the static interference pass's negative test, mirroring
+``tools/ts_lint_fixtures``).
+
+Unlike the ts_lint fixtures, these ARE imported: dag_lint instantiates
+each module's ``DAG_LINT_PROGRAMS`` entries and analyzes the live
+objects (declared effects + stage DAG) alongside their source AST.
+``tests/test_dag_lint.py`` asserts each fixture is flagged with the
+expected kind, and the missing-edge one is additionally caught *at
+runtime* by the happens-before sanitizer (``tests/test_raced.py``).
+"""
+
+#: fixture module basename -> the finding kind it must trip.
+EXPECTED = {
+    "fx_missing_edge": "effect-conflict",
+    "fx_undeclared_effect": "effect-drift",
+    "fx_no_producer": "consume-without-producer",
+    "fx_round_aliasing": "round-aliasing",
+}

@@ -1,0 +1,37 @@
+"""Seeded bug: the MLP stage DAG WITHOUT the ``(upd_l, -1)`` cross-round
+edges — the §5.4 weight commit of round ``r`` is no longer ordered
+before round ``r+1``'s forward reads of ``("w", l)``, so the frontier
+scheduler overlaps them freely.
+
+Expected static finding: **effect-conflict** (the declared write/delete
+of ``w``/``b``/``wver`` by ``upd_l`` of round ``r`` against round
+``r+1``'s reads and against ``upd_l`` of round ``r+1``'s own commit,
+with no dependency path between the stages).
+
+The same program, run with the admission fence off at frontier width
+>= 2, produces a real detected race — the runtime half of the seeded
+end-to-end test.
+"""
+
+from repro.programs.mlp import LayerSpec, MLPProgram
+
+
+class MissingEdgeMLP(MLPProgram):
+    """MLP with the cross-round update edges dropped from the DAG."""
+
+    name = "fx_missing_edge"
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        return {
+            name: [d for d in deps
+                   if not (isinstance(d, tuple) and d[0].startswith("upd_"))]
+            for name, deps in super().stage_deps(rnd).items()
+        }
+
+
+def make_program() -> MissingEdgeMLP:
+    return MissingEdgeMLP([LayerSpec(8, 8), LayerSpec(8, 1)],
+                          epochs=2, n_samples=4, seed=0)
+
+
+DAG_LINT_PROGRAMS = [make_program]

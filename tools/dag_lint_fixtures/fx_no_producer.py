@@ -1,0 +1,44 @@
+"""Seeded bug: stage ``sink`` declares a read of the round-scoped
+subject ``ghost`` that no stage (nor ``sink`` itself) ever produces —
+at runtime the combine would block/skip forever on a tuple that cannot
+exist.
+
+Expected static finding: **consume-without-producer**.
+"""
+
+from repro.core.program import WorkloadProgram, reads, writes
+
+
+class NoProducerProgram(WorkloadProgram):
+    name = "fx_no_producer"
+
+    def n_rounds(self) -> int:
+        return 2
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return ["feed", "sink"]
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        return {"sink": ["feed"]}
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list:
+        return []
+
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        if stage == "feed":
+            ts.put(("feedout", rnd), float(rnd))
+        else:
+            ts.try_read(("ghost", rnd))       # <- nothing writes "ghost"
+
+    def stage_effects(self, rnd: int):
+        return {
+            "feed": (writes("feedout", step=rnd),),
+            "sink": (reads("ghost", step=rnd),),
+        }
+
+
+def make_program() -> NoProducerProgram:
+    return NoProducerProgram()
+
+
+DAG_LINT_PROGRAMS = [make_program]

@@ -1,0 +1,52 @@
+"""Seeded bug: ``round_overlap() == 3`` but the per-round buffer key is
+only disambiguated modulo 2 (``("buf", rnd % 2)``) — round ``r+2``
+reuses round ``r``'s concrete key while ``finish_round(r)``'s cleanup
+delete can still be in flight. Cross-round key aliasing deeper than the
+cleanup period.
+
+Expected static finding: **round-aliasing** (the ``@finish`` delete of
+round ``r`` conflicts with round ``r+2``'s accesses and no dependency
+edge can ever order a later round after a round's cleanup).
+"""
+
+from repro.core.program import (FINISH_STAGE, WorkloadProgram, deletes,
+                                reads, writes)
+
+
+class RoundAliasingProgram(WorkloadProgram):
+    name = "fx_round_aliasing"
+
+    def n_rounds(self) -> int:
+        return 6
+
+    def round_overlap(self) -> int:
+        return 3                       # deeper than the % 2 key period
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return ["work"]
+
+    def stage_deps(self, rnd: int) -> dict[str, list]:
+        return {"work": [("work", -1)]}
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list:
+        return []
+
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        ts.put(("buf", rnd % 2), float(rnd))
+
+    def finish_round(self, ts, rnd: int) -> None:
+        ts.delete(("buf", rnd % 2))
+
+    def stage_effects(self, rnd: int):
+        return {
+            "work": (writes("buf", slot=rnd % 2),
+                     reads("buf", slot=rnd % 2)),
+            FINISH_STAGE: (deletes("buf", slot=rnd % 2),),
+        }
+
+
+def make_program() -> RoundAliasingProgram:
+    return RoundAliasingProgram()
+
+
+DAG_LINT_PROGRAMS = [make_program]

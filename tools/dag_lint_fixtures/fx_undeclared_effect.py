@@ -1,0 +1,36 @@
+"""Seeded bug: the combine writes a subject (``sneaky``) the program's
+``stage_effects`` never declares — the admission fence and the static
+interference check are both blind to it.
+
+Expected static finding: **effect-drift** (inferred write of ``sneaky``
+absent from the declared effect union).
+"""
+
+from repro.core.program import WorkloadProgram, writes
+
+
+class UndeclaredEffectProgram(WorkloadProgram):
+    name = "fx_undeclared_effect"
+
+    def n_rounds(self) -> int:
+        return 2
+
+    def stage_names(self, rnd: int) -> list[str]:
+        return ["emit"]
+
+    def stage_tasks(self, ts, rnd: int, stage: str) -> list:
+        return []
+
+    def combine(self, ts, rnd: int, stage: str, mgr) -> None:
+        ts.put(("out", rnd), float(rnd))
+        ts.put(("sneaky", rnd), float(rnd))   # <- not declared below
+
+    def stage_effects(self, rnd: int):
+        return {"emit": (writes("out", step=rnd),)}
+
+
+def make_program() -> UndeclaredEffectProgram:
+    return UndeclaredEffectProgram()
+
+
+DAG_LINT_PROGRAMS = [make_program]

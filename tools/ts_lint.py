@@ -147,11 +147,54 @@ def _is_wild_node(node: ast.expr) -> bool:
     return False
 
 
-def _field_value(node: ast.expr):
-    if _is_wild_node(node):
-        return _Wild
+def _module_consts(tree: ast.Module) -> dict[str, object]:
+    """Module-level UPPER_CASE string/int constants, foldable into key
+    literals (PR 8). Reassigned names are poisoned — only a single,
+    unconditional module-level binding counts as a constant."""
+    env: dict[str, object] = {}
+    poisoned: set[str] = set()
+    for stmt in tree.body:
+        tgt = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            tgt = stmt.targets[0].id
+        elif isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name) and stmt.value:
+            tgt = stmt.target.id
+        if tgt is None or not tgt.isupper():
+            continue
+        if tgt in env or tgt in poisoned:
+            env.pop(tgt, None)
+            poisoned.add(tgt)
+            continue
+        val = _fold(stmt.value, env)
+        if val is not _Unknown and isinstance(val, (str, int)):
+            env[tgt] = val
+    return env
+
+
+def _fold(node: ast.expr, env: dict[str, object] | None):
+    """Constant-fold a key-field expression: literals, module-level
+    UPPER_CASE constants, and ``str + str`` concatenation (f-strings are
+    deliberately NOT folded). Returns the value or ``_Unknown``."""
     if isinstance(node, ast.Constant):
         return node.value
+    if env and isinstance(node, ast.Name) and node.id in env:
+        return env[node.id]
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _fold(node.left, env)
+        right = _fold(node.right, env)
+        if isinstance(left, str) and isinstance(right, str):
+            return left + right
+    return _Unknown
+
+
+def _field_value(node: ast.expr, env: dict[str, object] | None = None):
+    if _is_wild_node(node):
+        return _Wild
+    val = _fold(node, env)
+    if val is not _Unknown:
+        return val
     return _Unknown
 
 
@@ -175,37 +218,43 @@ def _key_expr(call: ast.Call, op_name: str) -> ast.expr | None:
     return None
 
 
-def _resolve_key(node: ast.expr):
+def _resolve_key(node: ast.expr, env: dict[str, object] | None = None):
     """``(subject, fields-or-None)`` for a literal key expression, where
     ``subject`` is a string, ``_Wild`` (wildcard subject), or ``None``
     (not statically resolvable). ``fields`` is None when the arity is
-    unknown (e.g. ``("done",) + content_key(t)``)."""
+    unknown (e.g. ``("done",) + content_key(t)``). Subject heads and
+    field values are constant-folded through ``env`` (PR 8)."""
     if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
         left = node.left
-        if (isinstance(left, ast.Tuple) and len(left.elts) == 1
-                and isinstance(left.elts[0], ast.Constant)
-                and isinstance(left.elts[0].value, str)):
-            return left.elts[0].value, None
+        if isinstance(left, ast.Tuple) and len(left.elts) == 1:
+            head = _fold(left.elts[0], env)
+            if isinstance(head, str):
+                return head, None
         return None, None
     if not isinstance(node, ast.Tuple) or not node.elts:
         return None, None
     head = node.elts[0]
     if _is_wild_node(head):
         return _Wild, None
-    if not (isinstance(head, ast.Constant) and isinstance(head.value, str)):
+    subject = _fold(head, env)
+    if not isinstance(subject, str):
         return None, None
     rest = node.elts[1:]
     if any(isinstance(e, ast.Starred) for e in rest):
-        return head.value, None
-    return head.value, [_field_value(e) for e in rest]
+        return subject, None
+    return subject, [_field_value(e, env) for e in rest]
 
 
 class _Linter(ast.NodeVisitor):
     def __init__(self, path: str, scope: dict[str, KeySchema],
-                 file_role: str | None) -> None:
+                 file_role: str | None,
+                 env: dict[str, object] | None = None) -> None:
         self.path = path
         self.scope = scope
+        self.env = env or {}
         self.findings: list[Finding] = []
+        self.sites = 0           # TS-op call sites with a key expression
+        self.resolved = 0        # ... whose subject folded to a fixed str
         self._role_stack: list[str | None] = [file_role]
 
     # ------------------------------------------------------------ roles
@@ -246,7 +295,10 @@ class _Linter(ast.NodeVisitor):
         key_node = _key_expr(node, fn.attr)
         if key_node is None:
             return
-        subject, fields = _resolve_key(key_node)
+        subject, fields = _resolve_key(key_node, self.env)
+        self.sites += 1
+        if isinstance(subject, str):
+            self.resolved += 1
         key_repr = ast.unparse(key_node)
         role = self._role_stack[-1]
         if subject is _Wild:
@@ -315,7 +367,8 @@ def lint_file(path: Path,
     except SyntaxError as exc:            # pragma: no cover - defensive
         return [Finding(rel, exc.lineno or 0, "syntax-error", "-", "-",
                         str(exc))]
-    linter = _Linter(rel, _scope_for(rel, progs), _module_role(tree, rel))
+    linter = _Linter(rel, _scope_for(rel, progs), _module_role(tree, rel),
+                     _module_consts(tree))
     linter.visit(tree)
     return linter.findings
 
@@ -328,6 +381,29 @@ def lint_paths(paths: list[Path]) -> list[Finding]:
         for f in files:
             findings.extend(lint_file(f, progs))
     return findings
+
+
+def resolution_stats(paths: list[Path], fold: bool = True) -> dict[str, int]:
+    """How many TS-op call sites the linter sees, and how many of their
+    subjects resolve to a fixed string. Constant folding (PR 8) must only
+    ever *increase* ``resolved`` — asserted by the tests via
+    ``resolution_stats(..., fold=False)``."""
+    progs = _program_schemas()
+    sites = resolved = 0
+    for root in paths:
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            try:
+                tree = ast.parse(f.read_text(), filename=str(f))
+            except SyntaxError:           # pragma: no cover - defensive
+                continue
+            env = _module_consts(tree) if fold else {}
+            linter = _Linter(str(f), _scope_for(str(f), progs),
+                             _module_role(tree, str(f)), env)
+            linter.visit(tree)
+            sites += linter.sites
+            resolved += linter.resolved
+    return {"sites": sites, "resolved": resolved}
 
 
 # --------------------------------------------------------------- doc table
