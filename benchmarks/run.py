@@ -116,6 +116,14 @@ def main() -> None:
     rows.extend(PB.bench_rows(smoke=not paper_scale,
                               include_jax=paper_scale))
 
+    # Crash-point sweep row (PR 9): arm the deterministic crash backend
+    # at registry sites (sampled per protection class at CI scale, the
+    # full Manager/Handler/executor site list at paper scale) and gate
+    # recovery on completion + bit-identical trajectories + zero
+    # leaks/races + role revival.
+    import tools.crash_sweep as CS
+    rows.extend(CS.bench_rows(smoke=not paper_scale))
+
     from benchmarks import kernel_bench as KB
     rows.extend(KB.bench_tuplespace())
     rows.extend(KB.bench_tile_matmul())

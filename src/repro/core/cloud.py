@@ -46,7 +46,7 @@ from repro.core.manager import Manager, ManagerConfig, validate_scheduling
 from repro.core.program import WorkloadProgram
 from repro.core.space import (ANY, CONTROL_SCHEMAS, DEFAULT_NAMESPACE,
                               TSTimeout, TupleSpace, as_scoped, find_checked,
-                              find_raced, role)
+                              find_crashpoint, find_raced, role)
 
 __all__ = ["ACANCloud", "CloudConfig", "CloudResult", "MultiCloudResult"]
 
@@ -432,6 +432,7 @@ class ACANCloud:
             make_handler_thread=self._make_handler,
             is_manager_finished=self._finished,
             stop_event=self.stop_event,
+            crashpoint=find_crashpoint(self.ts.backend),
         )
 
         t0 = time.monotonic()

@@ -188,5 +188,8 @@ class TaskExecutor:
         with role("executor"), task_context(t.op, t.layer, t.data_id, t.step):
             items = list(spec.batch_fn(self.ctx, group))
             if items:
-                self.ts.put_many(items)
+                # The fence lives in the *caller* (handler.py re-checks
+                # _fence_base and _undo_stale's the batch after we
+                # return) — non-local, so declared by pragma.
+                self.ts.put_many(items)  # crash: frontier-fenced
         return items

@@ -79,9 +79,18 @@ class MonitorDaemon:
     #: seeds/intervals; missing tenants use the shared ``plan``.
     plans: dict[str, FaultPlan] | None = None
     namespaces: list[str] | None = None
+    #: Site-triggered injection (PR 9): the CrashPointBackend in the
+    #: cloud's wrapper stack, if one is stacked. The daemon drains its
+    #: firings each tick so deterministic crash points surface in the
+    #: same counters interval firings do (``manager_crash_firings_by``
+    #: per tenant, ``handler_crash_firings`` for the fleet) — revival
+    #: itself needs nothing new, a dead thread is a dead thread.
+    crashpoint: object | None = None
     stop_event: threading.Event = field(default_factory=threading.Event)
     manager_revivals: int = 0
     handler_revivals: int = 0
+    handler_crash_firings: int = 0
+    crashpoint_firings: int = 0
     speed_changes: int = 0
     power_log: list = field(default_factory=list)
 
@@ -137,6 +146,10 @@ class MonitorDaemon:
                 if p is not None:
                     self._tenant_plans[i] = p
                     self._tenant_rngs[i] = np.random.default_rng(p.seed)
+        # Namespace -> manager index for crash-point firing attribution;
+        # a single-tenant cloud has no namespaces list and maps "" -> 0.
+        self._ns_index = ({ns: i for i, ns in enumerate(self.namespaces)}
+                          if self.namespaces else {"": 0})
 
     # ------------------------------------------------------------- helpers
     def power(self) -> float:
@@ -184,6 +197,25 @@ class MonitorDaemon:
         if self._tenant_rngs[i].random() < plan.p_manager_crash:
             self.manager_crashes[i].set()
             self.manager_crash_firings_by[i] += 1
+
+    def _account_crashpoint(self) -> None:
+        """Fold drained CrashPointBackend firings into the interval-
+        firing counters (PR 9): a deterministic site crash on a Manager
+        thread counts in that tenant's ``manager_crash_firings_by``
+        exactly like a plan draw; handler/executor-side firings count in
+        ``handler_crash_firings``. The thread died raising
+        ``CrashPointFired``, so ``_revive`` below restores it through
+        the ordinary plumbing."""
+        cp = self.crashpoint
+        if cp is None:
+            return
+        for f in cp.take_firings():
+            self.crashpoint_firings += 1
+            if f.get("role") == "manager":
+                i = self._ns_index.get(f.get("ns", ""), 0)
+                self.manager_crash_firings_by[i] += 1
+            else:
+                self.handler_crash_firings += 1
 
     def _revive(self) -> None:
         for i, th in enumerate(self._mthreads):
@@ -252,5 +284,7 @@ class MonitorDaemon:
                 if now - tenant_last[i] >= self._tenant_plans[i].interval:
                     self._fire_tenant_faults(i)
                     tenant_last[i] = now
+            self._account_crashpoint()
             self._revive()
             self.power_log.append((time.time(), self.power()))
+        self._account_crashpoint()   # drain firings raced with stop

@@ -564,6 +564,11 @@ class Handler:
                     if rt is not None else None)
             if cost is None or cost > self.capacity:
                 self.ts.put(key, wire)
+                # Same late-re-put leak as the event loop's stores: the
+                # put can land after the Manager's final sweep (PR 6) —
+                # compensate here too (found by the PR 9 crash lint:
+                # this was the one uncompensated store re-put).
+                self._unstore_if_stale(key, wire, task, rt)
                 self.tasks_stored += 1
                 time.sleep(0.001)
                 continue

@@ -212,6 +212,7 @@ class Manager:
         self.pouch_ctl.min_pouch = min(self.pouch_ctl.min_pouch,
                                        self.cfg.pouch_size)
         self._base = 0                           # lowest unfinished round
+        self._swept = -1                         # highest round swept clean
         self._completed: set[tuple[int, str]] = set()
         self._inflight: dict[tuple[int, str], _StageRun] = {}
         self._names_cache: dict[int, list[str]] = {}
@@ -259,6 +260,11 @@ class Manager:
         self.ts.delete(("mstate", "frontier"))
         self.ts.put(("mstate", "frontier"), {
             "base": self._base,
+            # Highest round whose finish_round cleanup pass COMPLETED —
+            # a revived Manager re-sweeps every finished round above it
+            # (the pass is pure idempotent deletes), so a crash inside
+            # cleanup can never strand a finished round's tuples (PR 9).
+            "swept": self._swept,
             "completed": sorted([r, n] for r, n in self._completed),
         })
 
@@ -289,6 +295,10 @@ class Manager:
             self._base = int(fr[1].get("base", self._base))
             self._completed = {(int(r), str(n))
                                for r, n in fr[1].get("completed", [])}
+        # Checkpoints from before the swept cursor existed read as fully
+        # swept — the legacy behaviour.
+        self._swept = (int(fr[1].get("swept", self._base - 1))
+                       if fr is not None else self._base - 1)
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
@@ -436,7 +446,10 @@ class Manager:
             tid = f"e{self.epoch}t{self._task_seq}"
             tids.append(tid)
             items.append((("task", tid), t.to_wire()))
-        self.ts.put_many(iter(items))
+        # Task tuples: a crash mid-issue strands the batch's prefix, and
+        # the untaken-task sweep + timeout re-issue reclaim it (the key
+        # literal hides behind iter(), hence the pragma).
+        self.ts.put_many(iter(items))  # crash: sweep-covered
         return tids
 
     def _pouch_size(self, pending: list[TaskDesc] | None = None) -> int:
@@ -641,15 +654,6 @@ class Manager:
         while (self._base < n_rounds
                and all((self._base, n) in self._completed
                        for n in self._names(self._base))):
-            # Round cleanup runs as the pseudo-stage FINISH_STAGE — it
-            # has declared effects (wide deletes) like any other stage
-            # and participates in the happens-before order.
-            if self._raced is not None:
-                self._raced.stage_begin(self._ns, self._base, FINISH_STAGE)
-            with stage_context(self._base, FINISH_STAGE):
-                prog.finish_round(self.ts, self._base)
-            if self._raced is not None:
-                self._raced.stage_complete(self._ns, self._base, FINISH_STAGE)
             for n in self._names(self._base):
                 self._completed.discard((self._base, n))
             self._names_cache.pop(self._base, None)
@@ -657,21 +661,34 @@ class Manager:
             self._effects_cache.pop(self._base, None)
             finished.append(self._base)
             self._base += 1
+        # Frontier FIRST, cleanup after (PR 9 crash sweep). The old
+        # pre-checkpoint cleanup pass meant a Manager crash mid-
+        # finish_round revived into a frontier that still wanted the
+        # round's last stage — whose combine inputs the interrupted pass
+        # had already deleted (re-issue loop forever). With the advance
+        # durable before the first delete, a crash anywhere in the pass
+        # revives with ``swept`` behind ``base`` and the startup
+        # re-sweep re-runs finish_round (pure idempotent deletes).
+        #
+        # The PR 6 straggler-write argument carries over: a handler that
+        # passed its pre-execute fence before the frontier advanced
+        # either lands its write before this pass (deleted here) or
+        # after it — in which case the handler's own post-write fence
+        # re-read observes the already-persisted frontier and undoes the
+        # write. Both orderings leave the space clean.
         self._checkpoint()
-        # Second cleanup pass AFTER the frontier is persisted (PR 6 leak
-        # closure): a straggler handler that passed its pre-execute fence
-        # before the frontier advanced may still write a finished round's
-        # partials. Either that write lands before this pass (deleted
-        # here) or after it — in which case the handler's own post-write
-        # fence re-read observes the already-persisted frontier and undoes
-        # the write. Both orderings leave the space clean; no timing
-        # window survives. The pass re-runs under the (already completed)
-        # FINISH_STAGE attribution — it is the same logical cleanup, and
-        # the PR 6 fence discipline makes either physical order safe, so
-        # this pass must not read as a fresh unordered access.
         for r in finished:
+            # Round cleanup runs as the pseudo-stage FINISH_STAGE — it
+            # has declared effects (wide deletes) like any other stage
+            # and participates in the happens-before order.
+            if self._raced is not None:
+                self._raced.stage_begin(self._ns, r, FINISH_STAGE)
             with stage_context(r, FINISH_STAGE):
                 prog.finish_round(self.ts, r)
+            if self._raced is not None:
+                self._raced.stage_complete(self._ns, r, FINISH_STAGE)
+        if finished:
+            self._swept = self._base - 1   # rides the next checkpoint
 
     # -------------------------------------------------------- the scheduler
     def _priority(self) -> list[_StageRun]:
@@ -801,6 +818,14 @@ class Manager:
         prog.setup(self.ts)
         self._bump_epoch()
         self._load_frontier()
+        # Re-run cleanup for rounds the frontier finished but whose
+        # finish_round pass a crash interrupted (pure deletes, safe to
+        # repeat). No raced stage_begin: this is the same logical cleanup
+        # re-run, not a fresh unordered access (see _complete_stage).
+        for r in range(self._swept + 1, self._base):
+            with stage_context(r, FINISH_STAGE):
+                prog.finish_round(self.ts, r)
+        self._swept = self._base - 1
         if self.cfg.autotune:
             self.cost_model = OnlineCostModel(registry=prog.registry)
             # A revived Manager inherits its predecessor's fleet fit from

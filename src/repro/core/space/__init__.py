@@ -6,7 +6,8 @@ Public API:
 - the :class:`SpaceBackend` protocol (:mod:`repro.core.space.api`)
 - backends: :class:`LocalBackend`, :class:`ShardedBackend`,
   :class:`InstrumentedBackend`, :class:`CheckedBackend`,
-  :class:`RacedBackend`
+  :class:`RacedBackend`, :class:`CrashPointBackend` (deterministic
+  crash-point injection, PR 9)
 - selection: :func:`make_backend` / ``$REPRO_TS_BACKEND``
 - the declared key protocol: :class:`KeySchema` / :class:`SchemaRegistry`
   (:mod:`repro.core.space.schema`) and the runtime sanitizers — protocol
@@ -23,6 +24,8 @@ from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
                                   subject_is_fixed, validate_key)
 from repro.core.space.checked import (CheckedBackend, Violation, find_checked,
                                       get_role, role, set_role)
+from repro.core.space.crashpoint import (CrashPointBackend, CrashPointFired,
+                                         CrashSpec, find_crashpoint)
 from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.raced import (Race, RacedBackend, find_raced,
@@ -43,6 +46,7 @@ __all__ = [
     "LocalBackend", "ShardedBackend", "InstrumentedBackend",
     "CheckedBackend", "Violation", "find_checked", "get_role", "role",
     "set_role",
+    "CrashPointBackend", "CrashPointFired", "CrashSpec", "find_crashpoint",
     "Race", "RacedBackend", "find_raced", "stage_context", "task_context",
     "CONTROL_SCHEMAS", "FieldSpec", "KeySchema", "LIFECYCLES", "ROLES",
     "SchemaRegistry",

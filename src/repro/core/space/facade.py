@@ -32,6 +32,7 @@ from typing import Any, Iterable
 from repro.core.ledger import Ledger
 from repro.core.space.api import Key, Pattern, SpaceBackend
 from repro.core.space.checked import CheckedBackend
+from repro.core.space.crashpoint import CrashPointBackend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.local import LocalBackend
 from repro.core.space.raced import RacedBackend
@@ -43,7 +44,7 @@ BACKEND_ENV = "REPRO_TS_BACKEND"
 #: Stackable transparent wrappers accepted in wrapper specs (colon or
 #: ``+``-stacked form). The leftmost name in a stack is the outermost.
 _WRAPPERS = {"instrumented": InstrumentedBackend, "checked": CheckedBackend,
-             "raced": RacedBackend}
+             "raced": RacedBackend, "crashpoint": CrashPointBackend}
 
 
 def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
@@ -77,7 +78,7 @@ def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
     raise ValueError(
         f"unknown tuple-space backend {spec!r} "
         f"(expected local | sharded[:n] | instrumented[:spec] | "
-        f"checked[+spec] | raced[+spec])")
+        f"checked[+spec] | raced[+spec] | crashpoint[+spec])")
 
 
 class TupleSpace:

@@ -454,9 +454,17 @@ class MLPProgram(WorkloadProgram):
 
     # ---------------------------------------------------------------- setup
     def setup(self, ts) -> None:
-        """Publish dataset + initial weights (fresh start only — every put
-        is guarded, so a revived Manager's re-call is a no-op)."""
-        if self.make_data and ts.try_read(("x", 0)) is None:
+        """Publish dataset + initial weights (fresh start only). Each
+        block is guarded on the LAST tuple it writes — a set guard
+        implies every earlier tuple of the block landed, so a Manager
+        crash mid-publish leaves the guard unset and the revived
+        Manager's re-call republishes the whole block (re-puts replace
+        with identical values: data and init are pure functions of the
+        seed). Guarding on the first tuple instead left every later
+        tuple unpublished forever after such a crash (found by the PR 9
+        crash sweep)."""
+        if self.make_data \
+                and ts.try_read(("label", self.n_samples - 1)) is None:
             X, Y = make_teacher_data(self.layers, self.n_samples, self.seed,
                                      self.data_noise)
             for i in range(self.n_samples):
@@ -464,10 +472,14 @@ class MLPProgram(WorkloadProgram):
                 ts.put(("label", i), Y[i])
         rng = np.random.default_rng(self.seed)
         for l, spec in enumerate(self.layers):
-            if ts.try_read(("w", l)) is None:
-                scale = 1.0 / np.sqrt(spec.n_in)
-                ts.put(("w", l), (rng.standard_normal(
-                    (spec.n_out, spec.n_in)) * scale).astype(np.float32))
+            # Draw unconditionally so the rng stream position per layer
+            # never depends on which guards a crashed predecessor left
+            # set — layer l's init is bit-identical on every re-run.
+            scale = 1.0 / np.sqrt(spec.n_in)
+            W0 = (rng.standard_normal(
+                (spec.n_out, spec.n_in)) * scale).astype(np.float32)
+            if ts.try_read(("wver", l)) is None:
+                ts.put(("w", l), W0)
                 ts.put(("b", l), np.zeros(spec.n_out, dtype=np.float32))
                 ts.put(("wver", l), 0)
 
@@ -594,10 +606,13 @@ class MLPProgram(WorkloadProgram):
         for k in ts.keys(("bnew", l, step, ANY, ANY)):
             b[k[3]:k[4]] = ts.try_read(k)[1]
         if window.commit(l, step):
-            ts.delete(("w", l)); ts.put(("w", l), W)
-            ts.delete(("b", l)); ts.put(("b", l), b)
+            # `put` replaces atomically — a delete-then-put here opened
+            # a window with no ("w", l) in the space, where a Manager
+            # crash left every revived combine re-run dying on a None
+            # read, forever (found by the PR 9 crash sweep).
+            ts.put(("w", l), W)
+            ts.put(("b", l), b)
             ver = ts.try_read(("wver", l))
-            ts.delete(("wver", l))
             ts.put(("wver", l), (ver[1] if ver else 0) + 1)
         ts.delete(("wnew", l, step, ANY, ANY))
         ts.delete(("bnew", l, step, ANY, ANY))

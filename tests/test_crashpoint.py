@@ -1,0 +1,159 @@
+"""Deterministic crash-point injection (PR 9): wrapper stacking, site
+addressing (role + source span + nth), one-shot arming, the daemon's
+firing accounting, and an end-to-end armed cloud run that recovers
+bit-identically.
+"""
+
+import sys
+import threading
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+if str(REPO) not in sys.path:
+    sys.path.insert(0, str(REPO))
+
+from repro.core import FaultPlan  # noqa: E402
+from repro.core.faults import MonitorDaemon  # noqa: E402
+from repro.core.space import (CrashPointFired, CrashSpec,  # noqa: E402
+                              TupleSpace, find_checked, find_crashpoint,
+                              make_backend, role)
+
+_THIS = "tests/test_crashpoint.py"
+
+
+def _put_task(ts, tid):
+    ts.put(("task", tid), "wire")
+
+
+#: The armed source line — the put inside ``_put_task``.
+_PUT_LINE = _put_task.__code__.co_firstlineno + 1
+
+
+def _spec(**kw):
+    base = dict(site_id="s", role="manager", path=_THIS, line=_PUT_LINE,
+                nth=1, when="after")
+    base.update(kw)
+    return CrashSpec(**base)
+
+
+def _armed(spec):
+    ts = TupleSpace(backend="crashpoint+sharded")
+    cp = find_crashpoint(ts.backend)
+    cp.arm(spec)
+    return ts, cp
+
+
+def test_wrapper_stacks_and_is_discoverable():
+    b = make_backend("crashpoint+checked+sharded:2")
+    assert find_crashpoint(b) is not None
+    assert find_checked(b) is not None
+    ts = TupleSpace(backend="crashpoint+sharded")
+    assert find_crashpoint(ts.backend) is not None
+    assert find_crashpoint(make_backend("sharded")) is None
+
+
+def test_disarmed_is_pure_delegation():
+    ts = TupleSpace(backend="crashpoint+sharded")
+    ts.put(("task", "t1"), "x")
+    assert ts.try_get(("task", "t1")) == (("task", "t1"), "x")
+    st = ts.stats()
+    assert st["crashpoint_hits"] == 0 and st["crashpoint_firings"] == 0
+
+
+def test_spec_validates_when_and_nth():
+    with pytest.raises(ValueError):
+        _spec(when="during")
+    with pytest.raises(ValueError):
+        _spec(nth=0)
+
+
+def test_fires_on_nth_matching_op_for_matching_role_only():
+    ts, cp = _armed(_spec(nth=2))
+    with role("handler"):
+        _put_task(ts, "h1")            # wrong role: not even counted
+    with role("manager"):
+        _put_task(ts, "m1")            # hit 1 of 2: no fire
+        with pytest.raises(CrashPointFired):
+            _put_task(ts, "m2")        # hit 2: fire
+    # when="after": the write landed before the crash
+    assert ts.try_read(("task", "m2")) is not None
+    assert cp.hits == 2 and len(cp.firings) == 1
+    assert cp.firings[0]["site"] == "s" and cp.firings[0]["op"] == "put"
+
+
+def test_arming_is_one_shot():
+    """The revived thread re-traverses the same site without dying: the
+    hit counter moves past nth and never resets."""
+    ts, cp = _armed(_spec())
+    with role("manager"):
+        with pytest.raises(CrashPointFired):
+            _put_task(ts, "a")
+        _put_task(ts, "b")
+        _put_task(ts, "c")
+    assert len(cp.firings) == 1 and cp.hits == 3
+
+
+def test_when_before_leaves_nothing_written():
+    ts, cp = _armed(_spec(when="before"))
+    with role("manager"), pytest.raises(CrashPointFired):
+        _put_task(ts, "x")
+    assert ts.try_read(("task", "x")) is None
+
+
+def test_other_source_lines_do_not_match():
+    ts, cp = _armed(_spec())
+    with role("manager"):
+        ts.put(("task", "direct"), "x")    # this line is not the site
+    assert cp.hits == 0 and cp.firings == []
+
+
+def test_disarm_stops_matching():
+    ts, cp = _armed(_spec())
+    cp.disarm()
+    with role("manager"):
+        _put_task(ts, "a")
+    assert cp.hits == 0
+
+
+def test_daemon_accounts_firings_like_interval_crashes():
+    """Satellite 2: CrashPointBackend firings surface in the same
+    MonitorDaemon counters interval firings do — per-tenant for
+    managers, fleet-wide for handlers."""
+    ts, cp = _armed(_spec())
+    with role("manager"), pytest.raises(CrashPointFired):
+        _put_task(ts, "m")
+    daemon = MonitorDaemon(plan=FaultPlan(),
+                           manager_crashes=[threading.Event()],
+                           crashpoint=cp)
+    daemon._account_crashpoint()
+    assert daemon.crashpoint_firings == 1
+    assert daemon.manager_crash_firings_by[0] == 1
+    assert daemon.handler_crash_firings == 0
+    # drained: accounting again is a no-op
+    daemon._account_crashpoint()
+    assert daemon.crashpoint_firings == 1
+    # a handler-role firing lands in the fleet counter instead
+    cp.arm(_spec(site_id="s2", role="handler"))
+    with role("handler"), pytest.raises(CrashPointFired):
+        _put_task(ts, "h")
+    daemon._account_crashpoint()
+    assert daemon.crashpoint_firings == 2
+    assert daemon.handler_crash_firings == 1
+    assert daemon.manager_crash_firings_by[0] == 1
+
+
+def test_end_to_end_armed_run_recovers_bit_identically():
+    """Arm one mid-training Manager site through the full cloud stack:
+    the run must complete, revive the Manager, and match the crash-free
+    baseline bit-for-bit with zero leaks and zero races."""
+    from tools.crash_sweep import sweep, sweep_sites
+    target = "manager:program.record_loss:put[losshist]#0"
+    sites = [s for s in sweep_sites() if s.site_id == target]
+    assert sites, "site registry lost the record_loss put"
+    (r,) = sweep(sites, backends=("crashpoint+checked+sharded",),
+                 verbose=False)
+    assert r.reached, "the armed site was never traversed"
+    assert r.ok, r.failures
+    assert r.revivals >= 1

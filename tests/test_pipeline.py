@@ -254,7 +254,10 @@ def test_finished_run_leaves_empty_frontier_at_n_rounds():
         wall_limit=60.0, max_inflight_stages=3))
     cloud.run()
     frontier = cloud.spaces[0].try_read(("mstate", "frontier"))[1]
-    assert frontier == {"base": 3, "completed": []}
+    assert frontier["base"] == 3 and frontier["completed"] == []
+    # The swept cursor (PR 9) trails base by at most the rounds finished
+    # after the last checkpoint; a revived Manager re-sweeps the gap.
+    assert 1 <= frontier["swept"] <= 2
     cursor = cloud.spaces[0].try_read(("mstate", "cursor"))[1]
     assert (cursor["round"], cursor["stage_idx"]) == (3, 0)
 

@@ -1,0 +1,184 @@
+"""Shared AST key/pattern resolver for the tuple-space lints (PR 9).
+
+``tools/ts_lint.py`` (PR 6 key-schema lint), ``tools/dag_lint.py`` (PR 8
+stage-effect race detector), and ``tools/crash_lint.py`` (PR 9 crash-site
+coverage lint) all need the same three things from a Python source tree:
+
+- recognising a **TS-op call site** (``put``/``read``/``take_batch``/…
+  on a receiver named ``ts``/``space``/``_ts``/``root``),
+- **resolving the literal key/pattern** handed to it, through module
+  constants and ``str + str`` folding, down to ``(subject, fields)``,
+- **attributing a role** to the enclosing module/function, mirroring the
+  runtime thread-local tags (manager/handler/executor/cloud/daemon).
+
+This module is that single resolver; the lints layer their own checks on
+top. Everything here is re-exported by ``tools.ts_lint`` for backward
+compatibility.
+"""
+
+from __future__ import annotations
+
+import ast
+
+__all__ = [
+    "OPS", "RECEIVERS", "ROLE_BY_FILE", "_Unknown", "_Wild",
+    "_field_value", "_fold", "_is_wild_node", "_key_expr",
+    "_module_consts", "_module_role", "_resolve_key",
+]
+
+#: TS-op method name -> check kind.
+OPS = {
+    "put": "put", "put_many": "put",
+    "read": "read", "try_read": "read", "wait_count": "read",
+    "count": "read", "keys": "read",
+    "get": "take", "try_get": "take", "take_batch": "take",
+    "delete": "delete",
+}
+
+#: Attribute receivers treated as a tuple space.
+RECEIVERS = {"ts", "space", "_ts", "root"}
+
+#: File-suffix -> default role (None = no role attribution).
+ROLE_BY_FILE = (
+    ("core/manager.py", "manager"),
+    ("core/program.py", "manager"),
+    ("core/handler.py", "handler"),
+    ("core/executor.py", "executor"),
+    ("core/cloud.py", "cloud"),
+    ("core/faults.py", "daemon"),
+    ("programs/", "manager"),
+)
+
+
+class _Wild:
+    """Marker: this field is a wildcard/predicate in the literal key."""
+
+
+class _Unknown:
+    """Marker: this field's value is not statically known."""
+
+
+def _is_wild_node(node: ast.expr) -> bool:
+    if isinstance(node, ast.Lambda):
+        return True
+    if isinstance(node, ast.Name) and node.id == "ANY":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "ANY":
+        return True
+    return False
+
+
+def _module_consts(tree: ast.Module) -> dict[str, object]:
+    """Module-level UPPER_CASE string/int constants, foldable into key
+    literals (PR 8). Reassigned names are poisoned — only a single,
+    unconditional module-level binding counts as a constant."""
+    env: dict[str, object] = {}
+    poisoned: set[str] = set()
+    for stmt in tree.body:
+        tgt = None
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            tgt = stmt.targets[0].id
+        elif isinstance(stmt, ast.AnnAssign) \
+                and isinstance(stmt.target, ast.Name) and stmt.value:
+            tgt = stmt.target.id
+        if tgt is None or not tgt.isupper():
+            continue
+        if tgt in env or tgt in poisoned:
+            env.pop(tgt, None)
+            poisoned.add(tgt)
+            continue
+        val = _fold(stmt.value, env)
+        if val is not _Unknown and isinstance(val, (str, int)):
+            env[tgt] = val
+    return env
+
+
+def _fold(node: ast.expr, env: dict[str, object] | None):
+    """Constant-fold a key-field expression: literals, module-level
+    UPPER_CASE constants, and ``str + str`` concatenation (f-strings are
+    deliberately NOT folded). Returns the value or ``_Unknown``."""
+    if isinstance(node, ast.Constant):
+        return node.value
+    if env and isinstance(node, ast.Name) and node.id in env:
+        return env[node.id]
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = _fold(node.left, env)
+        right = _fold(node.right, env)
+        if isinstance(left, str) and isinstance(right, str):
+            return left + right
+    return _Unknown
+
+
+def _field_value(node: ast.expr, env: dict[str, object] | None = None):
+    if _is_wild_node(node):
+        return _Wild
+    val = _fold(node, env)
+    if val is not _Unknown:
+        return val
+    return _Unknown
+
+
+def _key_expr(call: ast.Call, op_name: str) -> ast.expr | None:
+    """The key/pattern expression of a TS call, unwrapping ``put_many``
+    iterables down to the element key when it is literal enough."""
+    if not call.args:
+        return None
+    arg = call.args[0]
+    if op_name != "put_many":
+        return arg
+    if isinstance(arg, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+        arg = arg.elt
+    elif isinstance(arg, (ast.List, ast.Tuple)) and arg.elts:
+        arg = arg.elts[0]
+    else:
+        return None
+    # Each item is (key, value): take the key element.
+    if isinstance(arg, ast.Tuple) and arg.elts:
+        return arg.elts[0]
+    return None
+
+
+def _resolve_key(node: ast.expr, env: dict[str, object] | None = None):
+    """``(subject, fields-or-None)`` for a literal key expression, where
+    ``subject`` is a string, ``_Wild`` (wildcard subject), or ``None``
+    (not statically resolvable). ``fields`` is None when the arity is
+    unknown (e.g. ``("done",) + content_key(t)``). Subject heads and
+    field values are constant-folded through ``env`` (PR 8)."""
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        left = node.left
+        if isinstance(left, ast.Tuple) and len(left.elts) == 1:
+            head = _fold(left.elts[0], env)
+            if isinstance(head, str):
+                return head, None
+        return None, None
+    if not isinstance(node, ast.Tuple) or not node.elts:
+        return None, None
+    head = node.elts[0]
+    if _is_wild_node(head):
+        return _Wild, None
+    subject = _fold(head, env)
+    if not isinstance(subject, str):
+        return None, None
+    rest = node.elts[1:]
+    if any(isinstance(e, ast.Starred) for e in rest):
+        return subject, None
+    return subject, [_field_value(e, env) for e in rest]
+
+
+def _module_role(tree: ast.Module, path: str) -> str | None:
+    """The module's attributed role: an explicit ``TS_LINT_ROLE``
+    assignment wins, else the ``ROLE_BY_FILE`` suffix map."""
+    for stmt in tree.body:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and stmt.targets[0].id == "TS_LINT_ROLE"
+                and isinstance(stmt.value, ast.Constant)):
+            return stmt.value.value
+    p = path.replace("\\", "/")
+    for suffix, role in ROLE_BY_FILE:
+        if suffix.endswith("/") and f"/{suffix}" in p + "/":
+            return role
+        if p.endswith(suffix):
+            return role
+    return None

@@ -1,0 +1,467 @@
+"""Crash-site coverage lint (PR 9).
+
+The paper's fault model kills a Manager or Handler **between any two
+tuple-space operations**; recovery then has to reconstruct a consistent
+state from what the dead thread left behind. This lint makes that
+obligation *checkable*: it enumerates every TS **mutation site**
+(``put``/``put_many``/``get``/``try_get``/``take_batch``/``delete``)
+reachable from a role-attributed thread (manager/handler/executor/cloud/
+daemon — the same attribution :mod:`tools.ts_lint` uses, via the shared
+resolver in :mod:`tools._astlib`), assigns each a **stable site ID**::
+
+    {role}:{file-stem}.{qualname}:{method}[{subject}]#{ordinal}
+
+and classifies how a crash immediately after (or during) the op is
+survived:
+
+- **frontier-fenced** — the write is followed by a fence re-check
+  (``_fence_base``/``_undo_stale``) in the same function, so a write
+  that lands after its round closed is taken back;
+- **compensated** — a task-store re-put immediately followed by
+  ``_unstore_if_stale`` (the PR 6 leak compensation);
+- **idempotent** — a delete, or a re-put of a *persistent*-lifecycle
+  tuple: the revived thread re-derives and re-writes the same value,
+  and recovery tolerates the absence window of a delete+put pair;
+- **checkpoint-ordered** — program ``setup``/``combine``/
+  ``finish_round`` writes sequenced against the Manager's frontier
+  checkpoint: a revived Manager re-runs exactly the unfinished stage
+  (guarded combines) or re-sweeps rounds past the persisted ``swept``
+  cursor;
+- **sweep-covered** — a take (the taken tuple is re-issued by the
+  Manager's timeout/sweep machinery) or a task-tuple put (untaken tasks
+  are swept by ``_sweep_untaken``).
+
+A site may also carry an explicit pragma — ``# crash: <class>`` on the
+call line or the line above — when the protection is real but
+non-local (e.g. the executor's effect batch, fenced by its *caller* in
+``handler.py``). Pragmas are themselves checked: an unknown class (or
+``# crash: unprotected``) is a finding, and ``# crash: idempotent``
+must name a declared *persistent* subject.
+
+Findings (each means a crash there breaks recovery, or the lint cannot
+prove it doesn't):
+
+- **fence-after-write** — a handler/executor write with neither
+  compensation nor a post-write fence;
+- **unclassified-site** — a mutation matching no protection rule;
+- **unprotected-site** — a pragma claiming a protection that does not
+  hold.
+
+The registry is shared with the *runtime*: the deterministic
+:class:`~repro.core.space.crashpoint.CrashPointBackend` injector and
+``tools/crash_sweep.py`` address crash points by these same
+``(path, line span)`` sites, so "every line of this table has been
+crashed and recovered in CI" is a meaningful statement.
+
+Blind spots (by construction): files with no attributed role
+(``costmodel.py``, the elastic runner, tests) are skipped, exactly like
+untagged threads at runtime; non-literal keys resolve to subject ``?``
+and are classified by role/shape only.
+
+Usage::
+
+    python -m tools.crash_lint [paths...]     # default: src/repro
+    python -m tools.crash_lint --registry     # print the site registry
+    python -m tools.crash_lint --doc-table    # print the markdown table
+    python -m tools.crash_lint --write-doc README.md
+    python -m tools.crash_lint --check-doc README.md
+
+Exit status: 0 clean, 1 findings (or doc drift), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+
+_REPO = Path(__file__).resolve().parent.parent
+if str(_REPO / "src") not in sys.path:
+    sys.path.insert(0, str(_REPO / "src"))
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+from tools._astlib import (OPS, RECEIVERS, _key_expr,  # noqa: E402
+                           _module_consts, _module_role, _resolve_key,
+                           _Wild)
+from tools.ts_lint import _program_schemas, _scope_for  # noqa: E402
+
+#: The five protection classes a site may be assigned.
+CLASSES = ("frontier-fenced", "compensated", "idempotent",
+           "checkpoint-ordered", "sweep-covered")
+
+#: TS methods that mutate the store (the crash-relevant subset of
+#: :data:`tools._astlib.OPS`).
+MUTATIONS = {m: k for m, k in OPS.items() if k in ("put", "take", "delete")}
+
+#: ``# crash: <class>`` on the call line or the line above.
+_PRAGMA_RE = re.compile(r"#\s*crash:\s*([a-z-]+)")
+
+#: A store re-put's compensation call must follow within this many lines
+#: of the write (comments in between are fine).
+_COMPENSATION_WINDOW = 6
+
+#: Referencing either of these *after* a write marks it fence-checked.
+_FENCE_NAMES = {"_fence_base", "_undo_stale"}
+
+
+@dataclass(frozen=True)
+class Site:
+    """One TS mutation site. ``site_id`` is the stable address shared
+    with the runtime injector; ``path`` is repo-relative; ``line``/
+    ``end_line`` span the call (``ast`` line numbers). ``protection`` is
+    one of :data:`CLASSES`, or ``None`` when the site has a finding."""
+
+    site_id: str
+    role: str
+    path: str
+    line: int
+    end_line: int
+    method: str          # put / put_many / get / try_get / take_batch / delete
+    op: str              # put / take / delete
+    subject: str         # fixed subject, "*" (wild) or "?" (unresolved)
+    qualname: str
+    protection: str | None
+
+    def __str__(self) -> str:
+        return (f"{self.site_id}  {self.path}:{self.line}  "
+                f"[{self.protection or 'UNPROTECTED'}]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    kind: str
+    site_id: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.kind}] {self.site_id}: " \
+               f"{self.detail}"
+
+
+@dataclass
+class _RawSite:
+    node: ast.Call
+    method: str
+    op: str
+    subject: str
+    role: str
+    qualname: str
+    func: ast.AST | None     # enclosing function node (fence scan scope)
+
+
+class _Collector(ast.NodeVisitor):
+    """Collects every role-attributed TS mutation call site."""
+
+    def __init__(self, file_role: str | None,
+                 env: dict[str, object]) -> None:
+        self.env = env
+        self.raw: list[_RawSite] = []
+        self._role_stack: list[str | None] = [file_role]
+        self._name_stack: list[str] = []
+        self._func_stack: list[ast.AST] = []
+
+    # ------------------------------------------------------------ scopes
+    def _function_role(self, node) -> str | None:
+        args = node.args.posonlyargs + node.args.args
+        names = [a.arg for a in args]
+        if names and names[0] == "self":
+            names = names[1:]
+        if names and names[0] == "ctx":
+            return "executor"          # op kernel: runs on handler threads
+        return self._role_stack[-1]
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._role_stack.append(self._function_role(node))
+        self._name_stack.append(node.name)
+        self._func_stack.append(node)
+        self.generic_visit(node)
+        self._func_stack.pop()
+        self._name_stack.pop()
+        self._role_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self._name_stack.append(node.name)
+        self.generic_visit(node)
+        self._name_stack.pop()
+
+    # ------------------------------------------------------------- calls
+    def visit_Call(self, node: ast.Call) -> None:
+        self.generic_visit(node)
+        fn = node.func
+        if not isinstance(fn, ast.Attribute) or fn.attr not in MUTATIONS:
+            return
+        recv = fn.value
+        recv_name = (recv.id if isinstance(recv, ast.Name)
+                     else recv.attr if isinstance(recv, ast.Attribute)
+                     else None)
+        if recv_name not in RECEIVERS:
+            return
+        role = self._role_stack[-1]
+        if role is None:
+            return                     # untagged thread: out of scope
+        key_node = _key_expr(node, fn.attr)
+        subject = "?"
+        if key_node is not None:
+            subj, _ = _resolve_key(key_node, self.env)
+            if subj is _Wild:
+                subject = "*"
+            elif isinstance(subj, str):
+                subject = subj
+        self.raw.append(_RawSite(
+            node=node, method=fn.attr, op=MUTATIONS[fn.attr],
+            subject=subject, role=role,
+            qualname=".".join(self._name_stack) or "<module>",
+            func=self._func_stack[-1] if self._func_stack else None))
+
+
+# ------------------------------------------------------------ protection
+def _pragma(lines: list[str], lineno: int) -> str | None:
+    for ln in (lineno, lineno - 1):
+        if 1 <= ln <= len(lines):
+            m = _PRAGMA_RE.search(lines[ln - 1])
+            if m:
+                return m.group(1)
+    return None
+
+
+def _is_compensated(raw: _RawSite) -> bool:
+    """A ``_unstore_if_stale`` call within the compensation window after
+    the write, in the same function."""
+    if raw.func is None:
+        return False
+    end = raw.node.end_lineno or raw.node.lineno
+    for n in ast.walk(raw.func):
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "_unstore_if_stale"
+                and end < n.lineno <= end + _COMPENSATION_WINDOW):
+            return True
+    return False
+
+
+def _is_fenced_after(raw: _RawSite) -> bool:
+    """The enclosing function re-checks the stage fence (or undoes stale
+    writes) at a line *after* this write."""
+    if raw.func is None:
+        return False
+    for n in ast.walk(raw.func):
+        name = (n.attr if isinstance(n, ast.Attribute)
+                else n.id if isinstance(n, ast.Name) else None)
+        if name in _FENCE_NAMES and n.lineno > raw.node.lineno:
+            return True
+    return False
+
+
+def _classify(raw: _RawSite, path: str, lines: list[str],
+              lifecycles: dict[str, str]
+              ) -> tuple[str | None, str | None, str]:
+    """``(protection, finding-kind, detail)`` — exactly one of the first
+    two is non-None."""
+    pragma = _pragma(lines, raw.node.lineno)
+    if pragma is not None:
+        if pragma not in CLASSES:
+            return None, "unprotected-site", (
+                f"pragma 'crash: {pragma}' names no protection class "
+                f"(expected one of {', '.join(CLASSES)})")
+        if pragma == "idempotent" and lifecycles.get(
+                raw.subject) != "persistent":
+            return None, "unprotected-site", (
+                f"pragma claims idempotent but subject {raw.subject!r} "
+                f"has no declared persistent lifecycle — a re-put is "
+                f"only idempotent for persistent tuples")
+        return pragma, None, ""
+    if raw.op == "take":
+        # Crash after a take loses the tuple in hand; every taken task
+        # is re-issued by the Manager's timeout/untaken sweep.
+        return "sweep-covered", None, ""
+    if raw.op == "delete":
+        # Deletes re-run clean, and every delete+put pair in first-party
+        # code targets a tuple whose absence recovery tolerates.
+        return "idempotent", None, ""
+    # --- puts ---
+    if raw.role in ("handler", "executor"):
+        if _is_compensated(raw):
+            return "compensated", None, ""
+        if _is_fenced_after(raw):
+            return "frontier-fenced", None, ""
+        return None, "fence-after-write", (
+            f"{raw.role} write with neither _unstore_if_stale "
+            f"compensation nor a post-write fence re-check — a crash "
+            f"right after it leaks the write past the round")
+    if raw.role == "manager":
+        if raw.subject == "task":
+            return "sweep-covered", None, ""
+        p = path.replace("\\", "/")
+        if "/programs/" in p or p.endswith("core/program.py"):
+            return "checkpoint-ordered", None, ""
+        if lifecycles.get(raw.subject) == "persistent":
+            return "idempotent", None, ""
+    return None, "unclassified-site", (
+        f"{raw.role} {raw.method} of {raw.subject!r} matches no "
+        f"protection rule — classify it (or fix it) and, if the "
+        f"protection is non-local, annotate with '# crash: <class>'")
+
+
+# --------------------------------------------------------------- scanning
+def _rel(path: Path) -> str:
+    try:
+        return path.resolve().relative_to(_REPO).as_posix()
+    except ValueError:
+        return path.as_posix()
+
+
+def scan_file(path: Path, progs) -> tuple[list[Site], list[Finding]]:
+    rel = _rel(path)
+    try:
+        text = path.read_text()
+        tree = ast.parse(text, filename=rel)
+    except SyntaxError as exc:            # pragma: no cover - defensive
+        return [], [Finding(rel, exc.lineno or 0, "syntax-error", "-",
+                            str(exc))]
+    lines = text.splitlines()
+    coll = _Collector(_module_role(tree, rel), _module_consts(tree))
+    coll.visit(tree)
+    lifecycles = {subj: schema.lifecycle
+                  for subj, schema in _scope_for(rel, progs).items()}
+    stem = path.stem
+    counters: dict[tuple[str, str, str], int] = {}
+    sites: list[Site] = []
+    findings: list[Finding] = []
+    for raw in sorted(coll.raw, key=lambda r: (r.node.lineno,
+                                               r.node.col_offset)):
+        ordkey = (raw.qualname, raw.method, raw.subject)
+        ordinal = counters.get(ordkey, 0)
+        counters[ordkey] = ordinal + 1
+        site_id = (f"{raw.role}:{stem}.{raw.qualname}:{raw.method}"
+                   f"[{raw.subject}]#{ordinal}")
+        protection, kind, detail = _classify(raw, rel, lines, lifecycles)
+        sites.append(Site(
+            site_id=site_id, role=raw.role, path=rel,
+            line=raw.node.lineno,
+            end_line=raw.node.end_lineno or raw.node.lineno,
+            method=raw.method, op=raw.op, subject=raw.subject,
+            qualname=raw.qualname, protection=protection))
+        if kind is not None:
+            findings.append(Finding(rel, raw.node.lineno, kind, site_id,
+                                    detail))
+    return sites, findings
+
+
+def scan_paths(paths: list[Path]) -> tuple[list[Site], list[Finding]]:
+    progs = _program_schemas()
+    sites: list[Site] = []
+    findings: list[Finding] = []
+    for root in paths:
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            s, fnd = scan_file(f, progs)
+            sites.extend(s)
+            findings.extend(fnd)
+    return sites, findings
+
+
+def site_registry(paths: list[Path] | None = None) -> list[Site]:
+    """Every mutation site in (default) ``src/repro`` — the address
+    space ``tools/crash_sweep.py`` and the CrashPointBackend share."""
+    sites, _ = scan_paths(paths or [_REPO / "src" / "repro"])
+    return sites
+
+
+# --------------------------------------------------------------- doc table
+DOC_START = "<!-- crash-site-table:start -->"
+DOC_END = "<!-- crash-site-table:end -->"
+
+
+def doc_table() -> str:
+    """The crash-site table, generated from the registry (single source
+    of truth — README drift is a CI failure). Line numbers are omitted
+    on purpose: site IDs are the stable address."""
+    sites = site_registry()
+    lines = [
+        "| site | op | subject | protection |",
+        "|---|---|---|---|",
+    ]
+    for s in sites:
+        lines.append(f"| `{s.site_id}` | {s.method} | `{s.subject}` "
+                     f"| {s.protection or '**UNPROTECTED**'} |")
+    return "\n".join(lines)
+
+
+def _splice_doc(text: str) -> str:
+    start = text.find(DOC_START)
+    end = text.find(DOC_END)
+    if start < 0 or end < 0 or end < start:
+        raise SystemExit(
+            f"doc file lacks the {DOC_START!r} / {DOC_END!r} markers")
+    head = text[: start + len(DOC_START)]
+    tail = text[end:]
+    return f"{head}\n{doc_table()}\n{tail}"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.crash_lint",
+        description="Crash-site coverage lint: every TS mutation site "
+                    "must carry a provable crash-recovery protection.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/directories to lint (default: src/repro)")
+    ap.add_argument("--registry", action="store_true",
+                    help="print the site registry and exit")
+    ap.add_argument("--doc-table", action="store_true",
+                    help="print the generated crash-site table and exit")
+    ap.add_argument("--write-doc", metavar="FILE",
+                    help="splice the site table between the doc markers")
+    ap.add_argument("--check-doc", metavar="FILE",
+                    help="fail (exit 1) if FILE's spliced table is stale")
+    args = ap.parse_args(argv)
+
+    if args.doc_table:
+        print(doc_table())
+        return 0
+    if args.write_doc:
+        p = Path(args.write_doc)
+        p.write_text(_splice_doc(p.read_text()))
+        print(f"wrote crash-site table to {p}")
+        return 0
+    if args.check_doc:
+        p = Path(args.check_doc)
+        text = p.read_text()
+        if _splice_doc(text) != text:
+            print(f"{p}: crash-site table is stale — regenerate with "
+                  f"`python -m tools.crash_lint --write-doc {p}`")
+            return 1
+        print(f"{p}: crash-site table up to date")
+        return 0
+
+    paths = [Path(p) for p in (args.paths or [_REPO / "src" / "repro"])]
+    missing = [p for p in paths if not p.exists()]
+    if missing:
+        print(f"no such path(s): {missing}", file=sys.stderr)
+        return 2
+    sites, findings = scan_paths(paths)
+    if args.registry:
+        for s in sites:
+            print(s)
+        print(f"crash-lint: {len(sites)} site(s)")
+        return 0
+    for f in findings:
+        print(f)
+    by_class: dict[str, int] = {}
+    for s in sites:
+        by_class[s.protection or "UNPROTECTED"] = by_class.get(
+            s.protection or "UNPROTECTED", 0) + 1
+    summary = ", ".join(f"{k}={v}" for k, v in sorted(by_class.items()))
+    print(f"crash-lint: {len(findings)} finding(s) over {len(sites)} "
+          f"site(s) ({summary})")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

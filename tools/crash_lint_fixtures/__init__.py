@@ -1,0 +1,8 @@
+"""Seeded crash_lint violations — exactly ONE finding per fixture
+module.
+
+These files are never imported at runtime; the linter parses them as
+source. ``tests/test_crash_lint.py`` asserts each is flagged with the
+expected kind, and CI runs the lint over this directory expecting it to
+FAIL (the lint pass's negative test).
+"""

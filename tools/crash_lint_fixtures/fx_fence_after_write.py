@@ -1,0 +1,8 @@
+"""Fixture: a handler re-put with no compensation and no post-write
+fence — a crash right after the put leaks it past the round."""
+
+TS_LINT_ROLE = "handler"
+
+
+def f(ts, key, wire):
+    ts.put(key, wire)

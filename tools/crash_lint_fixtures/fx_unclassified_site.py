@@ -1,0 +1,8 @@
+"""Fixture: a manager write of a scratch tuple matching no protection
+rule — not a task, not persistent, not checkpoint-ordered."""
+
+TS_LINT_ROLE = "manager"
+
+
+def f(ts):
+    ts.put(("scratch", 0), "x")

@@ -1,0 +1,9 @@
+"""Fixture: a pragma claiming idempotence for a ``task`` tuple — tasks
+are ``taken_once``, so a re-put is NOT idempotent (it can resurrect a
+task a handler already took)."""
+
+TS_LINT_ROLE = "manager"
+
+
+def f(ts, wire):
+    ts.put(("task", "t1"), wire)  # crash: idempotent

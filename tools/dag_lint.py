@@ -65,7 +65,7 @@ if str(_REPO) not in sys.path:
 from repro.core.program import (FINISH_STAGE, StageEffect,  # noqa: E402
                                 WorkloadProgram, effects_conflict)
 from repro.core.space.schema import CONTROL_SCHEMAS  # noqa: E402
-from tools.ts_lint import (OPS, RECEIVERS, _key_expr,  # noqa: E402
+from tools._astlib import (OPS, RECEIVERS, _key_expr,  # noqa: E402
                            _module_consts, _resolve_key)
 
 CONTROL_SUBJECTS = frozenset(s.subject for s in CONTROL_SCHEMAS)
