@@ -108,6 +108,12 @@ def main() -> None:
     from benchmarks import sched_bench as SB
     rows.extend(SB.bench_rows(smoke=not paper_scale))
 
+    # Remote tuple-space rows (PR 10): pipelined contention, pouch
+    # batching (2 round-trips per put_many/take_batch pair), and the
+    # read-through cache — each against a private server process.
+    from benchmarks import ts_bench as TB
+    rows.extend(TB.bench_rows(smoke=not paper_scale))
+
     # WorkloadProgram rows (PR 3/4): the paper MLP, the non-regular MoE
     # routing program (with and without an exp3-style fault plan), the
     # MLP+MoE multi-tenant co-residency gate, and — at paper scale — the

@@ -81,6 +81,14 @@ AUTOTUNE_SPEEDS = [1.0, 1.0, 1.0, 10.0]
 #: is metadata-only bookkeeping (vector clocks + access journals, no
 #: payload copies), so it must stay within 15% of the checked makespan.
 RACED_OVERHEAD_CEIL = 1.15
+#: makespan improvement the out-of-process fleet (PR 10) must deliver
+#: over the thread fleet on the autotuned width-8 MoE pipeline when
+#: handler compute actually holds the GIL (``compute_mode="spin"``):
+#: real processes overlap where threads serialise. Only meaningful with
+#: >= PROCESS_FLEET_MIN_CORES cores — below that the gate skips (threads
+#: and processes share one core and nothing can overlap).
+PROCESS_FLEET_SPEEDUP_FLOOR = 1.5
+PROCESS_FLEET_MIN_CORES = 4
 
 
 def run_mode(scheduling: str, backend: str, layers, epochs: int,
@@ -163,6 +171,53 @@ def run_autotune_mode(autotune: bool, backend: str, steps: int,
         "ts_violations": res.ts_violations,
         "ts_leaks": res.ts_leaks,
     }
+
+
+def run_fleet_mode(fleet: str, backend: str, steps: int, seed: int) -> dict:
+    """One autotuned width-8 MoE run with GIL-holding emulated compute
+    (``compute_mode="spin"``) on the given fleet. The thread fleet
+    serialises every spin slice on the GIL; the process fleet overlaps
+    them for real — the contrast the PR 10 gate measures."""
+    prog = MoERoutingProgram(steps=steps, seed=seed)
+    cfg = CloudConfig(n_handlers=4, task_cap=128.0, pouch_size=64,
+                      time_scale=2e-4, initial_timeout=0.25,
+                      handler_batch=4, fault_plan=FaultPlan(interval=1e9),
+                      wall_limit=600.0, ts_backend=backend,
+                      max_inflight_stages=8, autotune=True,
+                      fleet=fleet, compute_mode="spin")
+    cloud = ACANCloud(cfg, program=prog)
+    res = cloud.run()
+    return {
+        "fleet": fleet,
+        "wallclock": res.wallclock,
+        "losses": [l for _, l in res.loss_history],
+        "completed": len(res.loss_history) == steps,
+        "ts_violations": res.ts_violations,
+        "ts_leaks": res.ts_leaks,
+    }
+
+
+def process_fleet_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
+    """Thread fleet vs out-of-process fleet (PR 10) on the autotuned MoE
+    pipeline with spin compute: the GIL-escape acceptance gate. Loss
+    trajectories must be bit-identical (the fleet is an execution detail,
+    not a numerics one). Skips — passing, with a note — on boxes where
+    no speedup is physically possible (< PROCESS_FLEET_MIN_CORES cores)."""
+    cores = os.cpu_count() or 1
+    if cores < PROCESS_FLEET_MIN_CORES:
+        return {"skipped": (f"only {cores} core(s) — the GIL-escape "
+                            f"contrast needs >= {PROCESS_FLEET_MIN_CORES}"),
+                "ok": True}
+    steps = 5 if smoke else 10
+    thread = run_fleet_mode("thread", backend, steps, seed)
+    proc = run_fleet_mode("process", backend, steps, seed)
+    speedup = thread["wallclock"] / max(proc["wallclock"], 1e-9)
+    loss_ok = (thread["completed"] and proc["completed"]
+               and thread["losses"] == proc["losses"])   # bit-identical
+    clean = proc["ts_violations"] == 0 and not proc["ts_leaks"]
+    ok = speedup >= PROCESS_FLEET_SPEEDUP_FLOOR and loss_ok and clean
+    return {"thread": thread, "process": proc, "speedup": speedup,
+            "loss_ok": loss_ok, "clean": clean, "ok": ok}
 
 
 def autotune_gate(smoke: bool, backend: str, seed: int = 0) -> dict:
@@ -287,7 +342,38 @@ def bench_rows(smoke: bool = True,
                  f"races={rg['raced']['races']} "
                  f"loss_match={rg['loss_ok']} "
                  f"gate<={RACED_OVERHEAD_CEIL:.2f}x pass={rg['ok']}"))
+    # Out-of-process fleet vs thread fleet (PR 10) — GIL-holding spin
+    # compute, autotuned width-8 MoE, bit-identical trajectories.
+    fg = process_fleet_gate(smoke, backend)
+    if "skipped" in fg:
+        rows.append((f"sched_process_fleet_{backend}", 0.0,
+                     f"SKIPPED: {fg['skipped']}"))
+    else:
+        rows.append((f"sched_process_fleet_{backend}",
+                     fg["process"]["wallclock"] * 1e6,
+                     f"thread={fg['thread']['wallclock']:.2f}s "
+                     f"process={fg['process']['wallclock']:.2f}s "
+                     f"speedup={fg['speedup']:.2f}x "
+                     f"loss_match={fg['loss_ok']} clean={fg['clean']} "
+                     f"gate>={PROCESS_FLEET_SPEEDUP_FLOOR:.2f}x "
+                     f"pass={fg['ok']}"))
     return rows
+
+
+def _print_process_fleet(fg: dict) -> None:
+    if "skipped" in fg:
+        print(f"process fleet (MoE, spin compute): SKIPPED — "
+              f"{fg['skipped']}")
+        return
+    print(f"process fleet (MoE, spin compute, autotune width 8): "
+          f"thread={fg['thread']['wallclock']:.2f}s "
+          f"process={fg['process']['wallclock']:.2f}s "
+          f"speedup={fg['speedup']:.2f}x "
+          f"(target >= {PROCESS_FLEET_SPEEDUP_FLOOR:.2f}x), "
+          f"trajectory {'bit-identical' if fg['loss_ok'] else 'DIVERGES'}, "
+          f"ts_violations={fg['process']['ts_violations']}, "
+          f"ts_leaks={len(fg['process']['ts_leaks'])} "
+          f"-> {'PASS' if fg['ok'] else 'FAIL'}")
 
 
 def main() -> int:
@@ -308,7 +394,17 @@ def main() -> int:
                     help="run only the cost-model autotune gate (the CI "
                          "checked-backend leg: speedup + identical "
                          "trajectory + zero ts violations/leaks)")
+    ap.add_argument("--process-fleet-only", action="store_true",
+                    help="run only the PR 10 out-of-process fleet gate "
+                         "(thread vs process, spin compute, bit-identical "
+                         "trajectory; skips below "
+                         f"{PROCESS_FLEET_MIN_CORES} cores)")
     args = ap.parse_args()
+
+    if args.process_fleet_only:
+        fg = process_fleet_gate(args.smoke, args.backend, args.seed)
+        _print_process_fleet(fg)
+        return 0 if fg["ok"] else 1
 
     if args.autotune_only:
         ag = autotune_gate(args.smoke, args.backend, args.seed)
@@ -387,13 +483,17 @@ def main() -> int:
           f"races={rg['raced']['races']}, "
           f"trajectory {'bit-identical' if rg['loss_ok'] else 'DIVERGES'}")
 
+    fg = process_fleet_gate(args.smoke, args.backend, args.seed)
+    _print_process_fleet(fg)
+
     ops_ratio = poll["ops_per_pouch"] / max(event["ops_per_pouch"], 1e-9)
     wall_ok = event["wallclock"] <= poll["wallclock"] * WALLCLOCK_SLACK
     loss_ok = (len(poll["losses"]) == len(event["losses"])
                and np.allclose(poll["losses"], event["losses"],
                                rtol=1e-3, atol=1e-5))
     ok = (ops_ratio >= OPS_RATIO_FLOOR and wall_ok and loss_ok
-          and adap_loss_ok and pg["ok"] and ag["ok"] and rg["ok"])
+          and adap_loss_ok and pg["ok"] and ag["ok"] and rg["ok"]
+          and fg["ok"])
     print(f"\nacceptance: ops/pouch poll/event = {ops_ratio:.1f}x "
           f"(target >= {OPS_RATIO_FLOOR:.0f}x), "
           f"wallclock {'OK' if wall_ok else 'WORSE'}, "

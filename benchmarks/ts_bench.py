@@ -18,6 +18,14 @@ Phases (each reports ops/s per backend and the sharded/local speedup):
 - ``take_batch``: drain a full queue 16-at-a-time — the Handler's
   batched pickup (one lock acquisition per batch instead of per tuple).
 - ``single-thread put/get``: uncontended baseline.
+
+Remote rows (PR 10, ``--remote`` / ``bench_rows()`` for the run.py
+harness): the same hot paths over the wire — pipelined contended
+put/get on one shared connection, pouch batching (one ``put_many`` +
+one ``take_batch`` frame per round: 2 round-trips per pouch pair
+regardless of batch size), and the invalidation-coherent read-through
+cache vs uncached reads. Persisted with every harness invocation to
+``runs/bench/BENCH_<n>.json``.
 """
 
 from __future__ import annotations
@@ -133,6 +141,107 @@ def bench_single_thread(spec: str, ops: int) -> tuple[float, float]:
     return put_rate, get_rate
 
 
+# --------------------------------------------------------- remote (PR 10)
+def bench_remote_contended(n_threads: int, ops: int) -> float:
+    """Contended put/try_get over ONE shared pipelined connection to a
+    private server — request ids correlate interleaved responses, so the
+    threads share the socket without head-of-line blocking."""
+    from repro.core.space.remote import RemoteBackend
+    rb = RemoteBackend(server_spec="sharded")
+    barrier = threading.Barrier(n_threads)
+
+    def worker(tid: int):
+        subject = f"s{tid}"
+        barrier.wait()
+        for i in range(ops):
+            rb.put((subject, i), i)
+            rb.try_get((subject, i))
+
+    try:
+        elapsed = _run_threads([lambda tid=t: worker(tid)
+                                for t in range(n_threads)])
+        return 2 * ops * n_threads / elapsed
+    finally:
+        rb.close()
+
+
+def bench_remote_pouch_batching(ops: int, batch: int = 64) -> dict:
+    """Per-tuple round trips vs pouch-batched framing: ``put_many`` +
+    ``take_batch`` are one frame each, so a full pouch pair costs exactly
+    2 round trips (the counter proves it) while the per-tuple loop pays
+    2 per item."""
+    from repro.core.space.remote import RemoteBackend
+    rb = RemoteBackend(server_spec="sharded")
+    try:
+        t0 = time.perf_counter()
+        for i in range(ops):
+            rb.put(("one", i), i)
+        for i in range(ops):
+            rb.try_get(("one", i))
+        per_tuple = 2 * ops / (time.perf_counter() - t0)
+        rounds = max(ops // batch, 1)
+        rt0 = rb.round_trips
+        t0 = time.perf_counter()
+        for r in range(rounds):
+            rb.put_many([(("b", r, j), j) for j in range(batch)])
+            rb.take_batch(("b", r, ANY), batch, timeout=5.0)
+        batched = 2 * rounds * batch / (time.perf_counter() - t0)
+        rt_per_pair = (rb.round_trips - rt0) / rounds
+        return {"per_tuple": per_tuple, "batched": batched,
+                "rt_per_pair": rt_per_pair}
+    finally:
+        rb.close()
+
+
+def bench_remote_cached_read(ops: int) -> dict:
+    """Hot reads of a version-keyed subject served from the
+    invalidation-coherent client cache vs an uncached subject that
+    round-trips every time."""
+    from repro.core.space.remote import RemoteBackend
+    rb = RemoteBackend(server_spec="sharded")    # caches "w"/"b"/"wver"
+    try:
+        rb.put(("w", 0), list(range(64)))
+        rb.put(("q", 0), list(range(64)))
+        rb.read(("w", 0))                        # prime the cache
+        t0 = time.perf_counter()
+        for _ in range(ops):
+            rb.read(("w", 0))
+        cached = ops / (time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        for _ in range(ops):
+            rb.read(("q", 0))
+        uncached = ops / (time.perf_counter() - t0)
+        return {"cached": cached, "uncached": uncached,
+                "hits": rb.cache_hits}
+    finally:
+        rb.close()
+
+
+def bench_rows(smoke: bool = True) -> list[tuple[str, float, str]]:
+    """Remote tuple-space rows for the benchmarks/run.py harness (each
+    spawns a private server; persisted to BENCH_<n>.json like every
+    harness row)."""
+    ops = 1_000 if smoke else 5_000
+    n_threads = 4 if smoke else 8
+    rows: list[tuple[str, float, str]] = []
+    rate = bench_remote_contended(n_threads, ops // 2)
+    rows.append((f"ts_remote_contended_putget_{n_threads}t", 1e6 / rate,
+                 f"ops_per_s={rate:,.0f} (one pipelined connection)"))
+    pb = bench_remote_pouch_batching(ops)
+    rows.append(("ts_remote_pouch_batching", 1e6 / pb["batched"],
+                 f"per_tuple={pb['per_tuple']:,.0f}/s "
+                 f"batched={pb['batched']:,.0f}/s "
+                 f"speedup={pb['batched'] / pb['per_tuple']:.1f}x "
+                 f"rt_per_pouch_pair={pb['rt_per_pair']:.1f}"))
+    cr = bench_remote_cached_read(ops)
+    rows.append(("ts_remote_cached_read", 1e6 / cr["cached"],
+                 f"cached={cr['cached']:,.0f}/s "
+                 f"uncached={cr['uncached']:,.0f}/s "
+                 f"speedup={cr['cached'] / max(cr['uncached'], 1e-9):.1f}x "
+                 f"cache_hits={cr['hits']}"))
+    return rows
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--threads", type=int, default=8)
@@ -140,6 +249,9 @@ def main() -> int:
                     help="ops per thread in contended phases")
     ap.add_argument("--smoke", action="store_true",
                     help="small CI run (4 threads, 4k ops), same gate")
+    ap.add_argument("--remote", action="store_true",
+                    help="also run the PR 10 remote-backend rows "
+                         "(private server per row)")
     args = ap.parse_args()
     if args.smoke:
         args.threads, args.ops = 4, 4_000
@@ -171,6 +283,11 @@ def main() -> int:
         ratio = results["sharded"][phase] / results["local"][phase]
         row += f"{ratio:>15.2f}x"
         print(row)
+
+    if args.remote:
+        print("\nremote backend (PR 10):")
+        for name, us, derived in bench_rows(smoke=args.smoke):
+            print(f"  {name}: {derived} ({us:.1f} us/op)")
 
     key = f"contended_putget_{args.threads}t"
     speedup = results["sharded"][key] / results["local"][key]

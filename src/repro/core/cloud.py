@@ -105,9 +105,26 @@ class CloudConfig:
     #: Must have exactly ``n_handlers`` entries; None = all 1.0. The
     #: MonitorDaemon's speed re-draws still apply on top.
     handler_speeds: list | None = None
+    #: Fleet placement (PR 10): "thread" (default, byte-identical to
+    #: PR 9) or "process" — handlers become real worker processes over a
+    #: tuple-space server embedded in this cloud (see
+    #: :mod:`repro.core.workers`), escaping the GIL. Managers and the
+    #: daemon stay in-process; fault injection SIGKILLs real workers.
+    #: Speed re-draws reach a process worker at its next (re)spawn.
+    fleet: str = "thread"
+    #: Handler emulated-compute mode: "sleep" (GIL-released, default) or
+    #: "spin" (GIL-holding busy loop — the honest baseline for
+    #: thread-vs-process comparisons). See Handler.compute_mode.
+    compute_mode: str = "sleep"
 
     def __post_init__(self) -> None:
         validate_scheduling(self.scheduling)
+        if self.fleet not in ("thread", "process"):
+            raise ValueError(f"unknown fleet {self.fleet!r} "
+                             f"(expected 'thread' | 'process')")
+        if self.compute_mode not in ("sleep", "spin"):
+            raise ValueError(f"unknown compute_mode {self.compute_mode!r} "
+                             f"(expected 'sleep' | 'spin')")
         if self.handler_speeds is not None:
             if len(self.handler_speeds) != self.n_handlers:
                 raise ValueError(
@@ -209,6 +226,19 @@ class ACANCloud:
                 f"CloudConfig.tenant_caps must be >= 1 (a 0 cap is a "
                 f"livelock, not a cap — drop the tenant from the fleet "
                 f"instead): {bad_caps}")
+        if cfg.fleet == "process":
+            # Worker processes build their op registry from the global
+            # builtin table (ensure_builtin_ops) — a program carrying a
+            # custom registry object cannot ship it across the process
+            # boundary, and silently running with different ops would be
+            # far worse than refusing.
+            from repro.core.program import GLOBAL_OPS
+            for prog in self.programs:
+                if prog.registry is not GLOBAL_OPS:
+                    raise ValueError(
+                        f"fleet='process' requires the built-in op "
+                        f"registry; program {getattr(prog, 'name', prog)!r} "
+                        f"carries a custom one — use the thread fleet")
         self.ts = TupleSpace(backend=cfg.ts_backend)
         self.spaces = [as_scoped(self.ts, ns) for ns in self.namespaces]
         self.stop_event = threading.Event()
@@ -284,7 +314,9 @@ class ACANCloud:
         return self._busy_retired + sum(
             h.busy_time for h in self._handlers if h is not None)
 
-    def _make_handler(self, i: int) -> threading.Thread:
+    def _make_handler(self, i: int):
+        if self.cfg.fleet == "process":
+            return self._spawn_worker(i)
         old = self._handlers[i]
         if old is not None:
             # Revival replaces the Handler object; bank the dead
@@ -309,6 +341,7 @@ class ACANCloud:
                     registry=registry,
                     tenants=tenants,
                     autotune=self.cfg.autotune,
+                    compute_mode=self.cfg.compute_mode,
                     crash_event=self._handler_crashes[i],
                     stop_event=self.stop_event)
         self._handlers[i] = h
@@ -316,6 +349,25 @@ class ACANCloud:
                               name=f"acan-{h.name}", daemon=True)
         th.start()
         return th
+
+    def _spawn_worker(self, i: int):
+        """Process-fleet slot ``i``: spawn a real worker over the
+        embedded server and re-point its crash event's kill target. Same
+        signature contract as the thread factory — the MonitorDaemon's
+        revival path calls this without knowing the difference."""
+        from repro.core.workers import spawn_worker
+        cfg = self.cfg
+        hp = spawn_worker(
+            self._server.addr, f"h{i}",
+            speed=self._speed_boxes[i].get(),      # re-draws land here
+            capacity=cfg.task_cap, lr=cfg.lr,
+            time_scale=cfg.time_scale, batch_size=cfg.handler_batch,
+            scheduling=cfg.scheduling, compute_mode=cfg.compute_mode,
+            autotune=cfg.autotune,
+            namespaces=self.namespaces if self.multi else None,
+            tenant_caps=(cfg.tenant_caps or None) if self.multi else None)
+        self._handler_crashes[i].proc = hp
+        return hp
 
     @staticmethod
     def _handler_body(h: Handler) -> None:
@@ -413,7 +465,20 @@ class ACANCloud:
         cfg = self.cfg
         n_programs = len(self.programs)
         self._manager_crashes = [threading.Event() for _ in range(n_programs)]
-        self._handler_crashes = [threading.Event() for _ in range(cfg.n_handlers)]
+        self._server = None
+        if cfg.fleet == "process":
+            from repro.core.space.server import TSServer
+            from repro.core.workers import ProcessCrashEvent
+            # The server wraps THIS cloud's live backend stack — checked/
+            # raced/crashpoint sanitizers, the ledger hook and the leak
+            # scan all keep working unchanged; workers are just remote
+            # clients of the same store.
+            self._server = TSServer(self.ts.backend).start()
+            self._handler_crashes = [ProcessCrashEvent()
+                                     for _ in range(cfg.n_handlers)]
+        else:
+            self._handler_crashes = [threading.Event()
+                                     for _ in range(cfg.n_handlers)]
         speeds = cfg.handler_speeds or [1.0] * cfg.n_handlers
         self._speed_boxes = [SpeedBox(float(s)) for s in speeds]
         self._handlers: list[Handler | None] = [None] * cfg.n_handlers
@@ -470,8 +535,18 @@ class ACANCloud:
         # Quiesce the fleet before the shutdown protocol scan: a handler
         # (or manager) still mid-write would race the leak snapshot. The
         # daemon holds the *latest* thread incarnations (post-revival).
+        # Process workers don't see stop_event — SIGTERM them first, and
+        # SIGKILL any that outlive the join grace (the scan must not race
+        # a live writer).
+        for th in daemon.threads():
+            if hasattr(th, "terminate"):
+                th.terminate()
         for th in daemon.threads():
             th.join(timeout=2.0)
+            if hasattr(th, "kill_hard") and th.is_alive():
+                th.kill_hard()
+        if self._server is not None:
+            self._server.close()
         wall = time.monotonic() - t0
 
         # Verify the shared hash chain and snapshot stats ONCE — the

@@ -139,6 +139,13 @@ class Handler:
     take_timeout: float = 0.2         # crash/stop responsiveness bound
     store_backoff: float = 0.02       # own-tagged re-put skip window
     scheduling: str = "event"         # "event" (batched) | "poll" (seed loop)
+    #: How emulated compute burns its budget (PR 10): "sleep" (default —
+    #: time.sleep releases the GIL, cheap and exact) or "spin" (a
+    #: GIL-holding busy loop in ~1 ms crash-responsive slices). Spin is
+    #: what makes thread-vs-process fleet comparisons honest: sleeping
+    #: threads overlap perfectly and hide the GIL, spinning threads
+    #: serialize on it exactly like real Python compute would.
+    compute_mode: str = "sleep"
     registry: OpRegistry | None = None  # None -> built-in ops (MLP + MoE)
     #: namespace -> HandlerTenant for the multi-tenant fleet; None = the
     #: single-tenant fast path over (ts, registry).
@@ -180,6 +187,7 @@ class Handler:
         utilisation proxy would read phantom busy seconds."""
         t0 = time.monotonic()
         deadline = t0 + seconds
+        spin = self.compute_mode == "spin"
         try:
             while True:
                 self._maybe_crash()
@@ -188,7 +196,15 @@ class Handler:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
                     return
-                time.sleep(min(remaining, 0.01))
+                if spin:
+                    # GIL-holding busy work in ~1 ms slices (see
+                    # compute_mode): events are still checked every slice.
+                    slice_end = time.monotonic() + min(remaining, 0.001)
+                    x = 1.0
+                    while time.monotonic() < slice_end:
+                        x = x * 1.0000001 + 1e-9
+                else:
+                    time.sleep(min(remaining, 0.01))
         finally:
             self.busy_time += time.monotonic() - t0
 
@@ -263,6 +279,9 @@ class Handler:
 
     def _run(self) -> None:
         validate_scheduling(self.scheduling)
+        if self.compute_mode not in ("sleep", "spin"):
+            raise ValueError(f"unknown compute_mode {self.compute_mode!r} "
+                             f"(expected 'sleep' | 'spin')")
         if self.tenants is None:
             # Single-tenant fast path: fixed-subject pattern (atomic
             # bucket drains), behaviour identical to pre-PR-4.

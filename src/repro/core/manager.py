@@ -81,8 +81,8 @@ from repro.core.conflict import CommitWindow
 from repro.core.program import (FINISH_STAGE, UnknownOp, WorkloadProgram,
                                 effects_conflict)
 from repro.core.tasks import TaskDesc, content_key
-from repro.core.space import (ANY, TSTimeout, TupleSpace, find_raced, role,
-                              stage_context)
+from repro.core.space import (ANY, FieldIn, TSTimeout, TupleSpace,
+                              find_raced, role, stage_context)
 
 _log = logging.getLogger(__name__)
 
@@ -517,8 +517,9 @@ class Manager:
         pouch out from under its barrier."""
         if run is None or len(self._inflight) <= 1:
             return self.ts.delete(("task", ANY))
-        tids = run.tids
-        return self.ts.delete(("task", lambda tid: tid in tids))
+        # FieldIn, not a lambda: the pattern must survive the remote
+        # backend's frame encoder.
+        return self.ts.delete(("task", FieldIn(run.tids)))
 
     @staticmethod
     def _stage_done_pattern(tasks: list[TaskDesc]) -> tuple:

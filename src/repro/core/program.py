@@ -237,8 +237,8 @@ def record_loss(ts, step: int, loss: float, history_limit: int = 0) -> None:
     if ts.try_read(("losshist", step)) is None:
         ts.put(("losshist", step), float(loss))
     if history_limit and step >= history_limit:
-        cut = step - history_limit
-        ts.delete(("losshist", lambda s: s <= cut))
+        from repro.core.space.api import FieldLE
+        ts.delete(("losshist", FieldLE(step - history_limit)))
 
 
 class WorkloadProgram(abc.ABC):

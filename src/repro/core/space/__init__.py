@@ -13,36 +13,49 @@ Public API:
   (:mod:`repro.core.space.schema`) and the runtime sanitizers — protocol
   (:mod:`repro.core.space.checked`) and happens-before race detection
   (:mod:`repro.core.space.raced`)
-- the :class:`TupleSpace` facade every ACAN component consumes
+- the :class:`TupleSpace` facade every ACAN component consumes (also
+  the numpy-scalar key canonicalization point, :func:`canonicalize_key`)
 - namespace scoping: :class:`ScopedSpace` per-program views over one
   shared space (multi-tenant ACAN), with the :class:`NsSubject` fused
   subject and the helpers in :mod:`repro.core.space.scoped`
+- distribution (PR 10): :class:`RemoteBackend` client /
+  :class:`TSServer` host over the :mod:`repro.core.space.wire` protocol
+  — spec head ``remote`` (``remote+checked+sharded:4``) or
+  ``$REPRO_TS_ADDR``
 """
 
-from repro.core.space.api import (ANY, Journal, Key, Pattern, SpaceBackend,
-                                  TSTimeout, is_concrete, match,
-                                  subject_is_fixed, validate_key)
+from repro.core.space.api import (ANY, FieldIn, FieldLE, Journal, Key,
+                                  Pattern, SpaceBackend, TSTimeout,
+                                  is_concrete, match, subject_is_fixed,
+                                  validate_key)
 from repro.core.space.checked import (CheckedBackend, Violation, find_checked,
                                       get_role, role, set_role)
 from repro.core.space.crashpoint import (CrashPointBackend, CrashPointFired,
                                          CrashSpec, find_crashpoint)
-from repro.core.space.facade import BACKEND_ENV, TupleSpace, make_backend
+from repro.core.space.facade import (BACKEND_ENV, TupleSpace,
+                                     canonicalize_key, make_backend)
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.raced import (Race, RacedBackend, find_raced,
                                     stage_context, task_context)
+from repro.core.space.remote import (ADDR_ENV, RemoteBackend, RemoteOpError,
+                                     RemoteSpaceError, server_timeout)
 from repro.core.space.schema import (CONTROL_SCHEMAS, FieldSpec, KeySchema,
                                      LIFECYCLES, ROLES, SchemaRegistry)
 from repro.core.space.local import LocalBackend
 from repro.core.space.scoped import (DEFAULT_NAMESPACE, NsSubject,
-                                     ScopedSpace, as_scoped, key_namespace,
-                                     scope_key, scope_pattern,
+                                     NsSubjectPred, ScopedSpace, as_scoped,
+                                     key_namespace, scope_key, scope_pattern,
                                      task_take_pattern, unscope_key)
+from repro.core.space.server import TSServer
 from repro.core.space.sharded import ShardedBackend
 
 __all__ = [
-    "ANY", "Journal", "Key", "Pattern", "SpaceBackend", "TSTimeout",
+    "ANY", "FieldIn", "FieldLE", "Journal", "Key", "Pattern",
+    "SpaceBackend", "TSTimeout",
     "match", "subject_is_fixed", "is_concrete", "validate_key",
-    "BACKEND_ENV", "TupleSpace", "make_backend",
+    "BACKEND_ENV", "TupleSpace", "canonicalize_key", "make_backend",
+    "ADDR_ENV", "RemoteBackend", "RemoteOpError", "RemoteSpaceError",
+    "TSServer", "server_timeout",
     "LocalBackend", "ShardedBackend", "InstrumentedBackend",
     "CheckedBackend", "Violation", "find_checked", "get_role", "role",
     "set_role",
@@ -50,7 +63,8 @@ __all__ = [
     "Race", "RacedBackend", "find_raced", "stage_context", "task_context",
     "CONTROL_SCHEMAS", "FieldSpec", "KeySchema", "LIFECYCLES", "ROLES",
     "SchemaRegistry",
-    "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",
+    "DEFAULT_NAMESPACE", "NsSubject", "NsSubjectPred", "ScopedSpace",
+    "as_scoped",
     "key_namespace", "scope_key", "scope_pattern", "task_take_pattern",
     "unscope_key",
 ]

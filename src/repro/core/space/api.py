@@ -78,8 +78,9 @@ from itertools import count as _seq_counter
 from typing import Any, Callable, Iterable, Protocol, runtime_checkable
 
 __all__ = [
-    "ANY", "Key", "Pattern", "Journal", "match", "TSTimeout",
-    "SpaceBackend", "subject_is_fixed", "is_concrete", "validate_key",
+    "ANY", "FieldIn", "FieldLE", "Key", "Pattern", "Journal", "match",
+    "TSTimeout", "SpaceBackend", "subject_is_fixed", "is_concrete",
+    "validate_key",
 ]
 
 
@@ -150,6 +151,45 @@ def validate_key(key: Any) -> None:
     """The single key-type gate used by ``put`` *and* ``put_many``."""
     if not isinstance(key, tuple) or not key:
         raise TypeError(f"TS key must be a non-empty tuple, got {key!r}")
+
+
+class FieldIn:
+    """Picklable pattern-field predicate: matches fields in ``values``.
+
+    Equivalent to ``lambda v: v in values`` but wire-safe — lambdas
+    can't cross the remote backend's frame encoder (closures don't
+    pickle), so runtime pattern predicates must be module-level callable
+    classes like this one (and the scoped-namespace predicates)."""
+
+    __slots__ = ("values",)
+
+    def __init__(self, values: Any) -> None:
+        self.values = frozenset(values)
+
+    def __call__(self, v: Any) -> bool:
+        return v in self.values
+
+    def __repr__(self) -> str:
+        return f"FieldIn({sorted(self.values)!r})"
+
+
+class FieldLE:
+    """Picklable pattern-field predicate: matches fields ``<= cut``
+    (wire-safe replacement for ``lambda v: v <= cut``)."""
+
+    __slots__ = ("cut",)
+
+    def __init__(self, cut: Any) -> None:
+        self.cut = cut
+
+    def __call__(self, v: Any) -> bool:
+        try:
+            return bool(v <= self.cut)
+        except TypeError:
+            return False
+
+    def __repr__(self) -> str:
+        return f"FieldLE({self.cut!r})"
 
 
 class TSTimeout(Exception):

@@ -17,6 +17,21 @@ it is chosen per instance::
 (``instrumented:sharded:4``) or ``+``-stacked (``checked+sharded:4``,
 ``raced+checked+sharded``); the leftmost wrapper is outermost.
 
+``remote`` (PR 10) splits the stack across a process boundary:
+everything right of ``remote`` is the spec the *server* hosts,
+everything left of it wraps the client. ``remote+checked+sharded:4``
+connects a :class:`~repro.core.space.remote.RemoteBackend` to a server
+hosting ``checked+sharded:4`` — spawned privately unless
+``$REPRO_TS_ADDR`` names a running one. ``remote`` alone hosts the
+default ``sharded``.
+
+The facade is also the **key canonicalization point** (PR 10): numpy
+scalar key fields (``np.int64(3)``, ``np.float32(0.5)``, ...) are
+converted to their Python equivalents on the way in, so
+``("loss", d, np.int64(s))`` and ``("loss", d, s)`` are one key — not
+two aliased tuples that hash apart, match apart, and serialize apart
+over the wire.
+
 The facade owns the hash-chained :class:`~repro.core.ledger.Ledger`
 (paper §4: "all updates can be logged in an immutable blockchain") and
 wires ``ledger.append`` into the backend's journal hook, so every
@@ -29,6 +44,8 @@ from __future__ import annotations
 import os
 from typing import Any, Iterable
 
+import numpy as np
+
 from repro.core.ledger import Ledger
 from repro.core.space.api import Key, Pattern, SpaceBackend
 from repro.core.space.checked import CheckedBackend
@@ -36,6 +53,7 @@ from repro.core.space.crashpoint import CrashPointBackend
 from repro.core.space.instrumented import InstrumentedBackend
 from repro.core.space.local import LocalBackend
 from repro.core.space.raced import RacedBackend
+from repro.core.space.remote import RemoteBackend
 from repro.core.space.sharded import ShardedBackend
 
 #: Environment variable consulted when no backend is passed explicitly.
@@ -59,14 +77,28 @@ def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
     if "+" in head:
         # Wrapper stack: "checked+sharded:4" / "instrumented+checked+local".
         parts = [p.strip() for p in head.split("+") if p.strip()]
-        backend = make_backend(parts[-1] + ((":" + rest) if rest else ""),
-                               journal=journal)
-        for name in reversed(parts[:-1]):
+        if "remote" in parts:
+            # Everything right of "remote" ships to the server as its
+            # hosted spec; everything left of it wraps the client.
+            cut = parts.index("remote")
+            server_spec = "+".join(parts[cut + 1:]) + (
+                (":" + rest) if rest else "")
+            backend: SpaceBackend = RemoteBackend(
+                server_spec=server_spec or "sharded", journal=journal)
+            wrappers = parts[:cut]
+        else:
+            backend = make_backend(
+                parts[-1] + ((":" + rest) if rest else ""), journal=journal)
+            wrappers = parts[:-1]
+        for name in reversed(wrappers):
             if name not in _WRAPPERS:
                 raise ValueError(f"unknown tuple-space wrapper {name!r} "
                                  f"in spec {spec!r}")
             backend = _WRAPPERS[name](backend)
         return backend
+    if head == "remote":
+        # Colon form: "remote:checked+sharded:4" — rest is the server spec.
+        return RemoteBackend(server_spec=rest or "sharded", journal=journal)
     if head == "local":
         return LocalBackend(journal=journal)
     if head == "sharded":
@@ -79,6 +111,24 @@ def make_backend(spec: str | None = None, journal=None) -> SpaceBackend:
         f"unknown tuple-space backend {spec!r} "
         f"(expected local | sharded[:n] | instrumented[:spec] | "
         f"checked[+spec] | raced[+spec] | crashpoint[+spec])")
+
+
+def canonicalize_key(key):
+    """Replace numpy scalar fields with their Python equivalents
+    (``np.int64(3)`` → ``3``); the single normalization point for keys
+    and patterns entering the space through the facade. Without this,
+    ``("loss", d, np.int64(s))`` hashes/equals like ``("loss", d, s)``
+    inside one dict but pickles differently over the wire and trips the
+    key-schema lint's field-type expectations — one key, two spellings.
+
+    Non-tuple inputs and tuples without numpy scalars pass through
+    untouched (fast path: no allocation).
+    """
+    if isinstance(key, tuple) and any(
+            isinstance(f, np.generic) for f in key):
+        return tuple(f.item() if isinstance(f, np.generic) else f
+                     for f in key)
+    return key
 
 
 class TupleSpace:
@@ -116,20 +166,21 @@ class TupleSpace:
 
     # ------------------------------------------------------------------ put
     def put(self, key: Key, value: Any) -> None:
-        self.backend.put(key, value)
+        self.backend.put(canonicalize_key(key), value)
 
     def put_many(self, items: Iterable[tuple[Key, Any]]) -> None:
-        self.backend.put_many(items)
+        self.backend.put_many(
+            [(canonicalize_key(k), v) for k, v in items])
 
     # ------------------------------------------------------------ accessors
     def read(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
         """Blocking non-destructive match (paper's ``read(&pattern, &buffer)``)."""
-        return self.backend.read(pattern, timeout)
+        return self.backend.read(canonicalize_key(pattern), timeout)
 
     def get(self, pattern: Pattern, timeout: float | None = None) -> tuple[Key, Any]:
         """Blocking destructive match — once taken, other handlers no longer
         see the tuple (paper §4)."""
-        return self.backend.get(pattern, timeout)
+        return self.backend.get(canonicalize_key(pattern), timeout)
 
     def take_batch(self, pattern: Pattern, max_n: int,
                    timeout: float | None = None) -> list[tuple[Key, Any]]:
@@ -137,31 +188,32 @@ class TupleSpace:
         FIFO-ordered in global put order — the Handler's batched task
         pickup. Fixed-subject patterns drain under one lock acquisition;
         widened patterns guarantee per-tuple atomicity only."""
-        return self.backend.take_batch(pattern, max_n, timeout)
+        return self.backend.take_batch(canonicalize_key(pattern), max_n,
+                                       timeout)
 
     def wait_count(self, pattern: Pattern, n: int,
                    timeout: float | None = None) -> int:
         """Block until ≥ ``n`` live tuples match (woken on each arrival);
         returns the observed count — the Manager's pouch done-counter
         barrier."""
-        return self.backend.wait_count(pattern, n, timeout)
+        return self.backend.wait_count(canonicalize_key(pattern), n, timeout)
 
     def try_read(self, pattern: Pattern) -> tuple[Key, Any] | None:
-        return self.backend.try_read(pattern)
+        return self.backend.try_read(canonicalize_key(pattern))
 
     def try_get(self, pattern: Pattern) -> tuple[Key, Any] | None:
-        return self.backend.try_get(pattern)
+        return self.backend.try_get(canonicalize_key(pattern))
 
     # ---------------------------------------------------------------- misc
     def count(self, pattern: Pattern) -> int:
-        return self.backend.count(pattern)
+        return self.backend.count(canonicalize_key(pattern))
 
     def keys(self, pattern: Pattern) -> list[Key]:
-        return self.backend.keys(pattern)
+        return self.backend.keys(canonicalize_key(pattern))
 
     def delete(self, pattern: Pattern) -> int:
         """Remove all tuples matching pattern; returns count removed."""
-        return self.backend.delete(pattern)
+        return self.backend.delete(canonicalize_key(pattern))
 
     def stats(self) -> dict[str, int]:
         return self.backend.stats()

@@ -64,6 +64,14 @@ def _get_ctx():
     return getattr(_ctx_tls, "ctx", None)
 
 
+def _set_ctx(ctx) -> None:
+    """Install a raw stage/task context tuple on the calling thread —
+    the remote TS server's dispatch threads re-assume the context a
+    client transmitted with each op, so a server-side RacedBackend
+    attributes remote accesses exactly like local ones."""
+    _ctx_tls.ctx = ctx
+
+
 class stage_context:
     """Run a block as stage ``(rnd, stage)`` of the calling Manager's
     program — stage_tasks, combine and finish_round attribution."""

@@ -50,9 +50,9 @@ from typing import Any, Iterable
 from repro.core.space.api import ANY, Key, Pattern
 
 __all__ = [
-    "DEFAULT_NAMESPACE", "NsSubject", "ScopedSpace", "as_scoped",
-    "key_namespace", "scope_key", "scope_pattern", "task_take_pattern",
-    "unscope_key",
+    "DEFAULT_NAMESPACE", "NsInnerPred", "NsSubject", "NsSubjectPred",
+    "ScopedSpace", "TaskSubjectPred", "as_scoped", "key_namespace",
+    "scope_key", "scope_pattern", "task_take_pattern", "unscope_key",
 ]
 
 #: The passthrough namespace: keys stay raw, single-tenant behaviour is
@@ -76,6 +76,13 @@ class NsSubject(tuple):
 
     def __new__(cls, namespace: str, subject: Any) -> "NsSubject":
         return super().__new__(cls, (namespace, subject))
+
+    def __getnewargs__(self) -> tuple:
+        # tuple's default protocol passes the *pair itself* as the single
+        # __new__ argument, which would unpickle as
+        # NsSubject(("ns", "subj"), <missing>) — spell the two-argument
+        # constructor out so scoped keys survive the wire (RemoteBackend).
+        return (self[0], self[1])
 
     @property
     def namespace(self) -> str:
@@ -127,6 +134,95 @@ def key_namespace(key: Key) -> str:
     return DEFAULT_NAMESPACE
 
 
+class NsSubjectPred:
+    """Predicate: any subject of one namespace. A module-level callable
+    class (not a closure) so scoped patterns pickle across the wire to a
+    remote tuple-space server; value-equal instances compare equal."""
+
+    __slots__ = ("namespace",)
+
+    def __init__(self, namespace: str) -> None:
+        self.namespace = namespace
+
+    def __call__(self, s: Any) -> bool:
+        return isinstance(s, NsSubject) and s[0] == self.namespace
+
+    def __eq__(self, other: Any) -> bool:
+        return (type(other) is NsSubjectPred
+                and other.namespace == self.namespace)
+
+    def __hash__(self) -> int:
+        return hash((NsSubjectPred, self.namespace))
+
+    def __getstate__(self) -> str:
+        return self.namespace
+
+    def __setstate__(self, state: str) -> None:
+        self.namespace = state
+
+
+class NsInnerPred:
+    """Predicate: one namespace's subjects filtered by an inner subject
+    predicate (itself picklable or not — callers who never cross the wire
+    may pass closures as before)."""
+
+    __slots__ = ("namespace", "inner")
+
+    def __init__(self, namespace: str, inner: Any) -> None:
+        self.namespace = namespace
+        self.inner = inner
+
+    def __call__(self, s: Any) -> bool:
+        return (isinstance(s, NsSubject) and s[0] == self.namespace
+                and bool(self.inner(s[1])))
+
+    def __eq__(self, other: Any) -> bool:
+        return (type(other) is NsInnerPred
+                and other.namespace == self.namespace
+                and other.inner == self.inner)
+
+    def __hash__(self) -> int:
+        return hash((NsInnerPred, self.namespace))
+
+    def __getstate__(self) -> tuple:
+        return (self.namespace, self.inner)
+
+    def __setstate__(self, state: tuple) -> None:
+        self.namespace, self.inner = state
+
+
+class TaskSubjectPred:
+    """The shared fleet's cross-namespace ``task`` subject predicate:
+    matches the task bucket of every namespace (``namespaces=None``) or
+    of a fixed set. Picklable (the handler fleet's take pattern must
+    reach a remote server); value-equal instances compare equal."""
+
+    __slots__ = ("namespaces",)
+
+    def __init__(self, namespaces: frozenset | None) -> None:
+        self.namespaces = namespaces
+
+    def __call__(self, s: Any) -> bool:
+        if self.namespaces is None:
+            return (s[1] if isinstance(s, NsSubject) else s) == "task"
+        if isinstance(s, NsSubject):
+            return s[1] == "task" and s[0] in self.namespaces
+        return s == "task" and DEFAULT_NAMESPACE in self.namespaces
+
+    def __eq__(self, other: Any) -> bool:
+        return (type(other) is TaskSubjectPred
+                and other.namespaces == self.namespaces)
+
+    def __hash__(self) -> int:
+        return hash((TaskSubjectPred, self.namespaces))
+
+    def __getstate__(self) -> frozenset | None:
+        return self.namespaces
+
+    def __setstate__(self, state: frozenset | None) -> None:
+        self.namespaces = state
+
+
 def scope_pattern(namespace: str, pattern: Pattern) -> Pattern:
     """Rewrite a pattern so it only matches ``namespace``'s tuples.
 
@@ -143,14 +239,9 @@ def scope_pattern(namespace: str, pattern: Pattern) -> Pattern:
         return pattern
     subject = pattern[0]
     if subject is ANY:
-        def pred(s: Any, _ns: str = namespace) -> bool:
-            return isinstance(s, NsSubject) and s[0] == _ns
-        return (pred,) + pattern[1:]
+        return (NsSubjectPred(namespace),) + pattern[1:]
     if callable(subject) and not isinstance(subject, type):
-        def pred(s: Any, _ns: str = namespace, _inner=subject) -> bool:
-            return (isinstance(s, NsSubject) and s[0] == _ns
-                    and bool(_inner(s[1])))
-        return (pred,) + pattern[1:]
+        return (NsInnerPred(namespace, subject),) + pattern[1:]
     return (NsSubject(namespace, subject),) + pattern[1:]
 
 
@@ -158,17 +249,8 @@ def task_take_pattern(namespaces: Iterable[str] | None = None) -> Pattern:
     """The shared fleet's cross-namespace task pattern: matches
     ``("task", tid)`` in every namespace (``None``) or in the given set
     (include :data:`DEFAULT_NAMESPACE` for raw, unscoped tasks)."""
-    if namespaces is None:
-        def pred(s: Any) -> bool:
-            return (s[1] if isinstance(s, NsSubject) else s) == "task"
-    else:
-        names = frozenset(namespaces)
-
-        def pred(s: Any) -> bool:
-            if isinstance(s, NsSubject):
-                return s[1] == "task" and s[0] in names
-            return s == "task" and DEFAULT_NAMESPACE in names
-    return (pred, ANY)
+    names = None if namespaces is None else frozenset(namespaces)
+    return (TaskSubjectPred(names), ANY)
 
 
 class ScopedSpace:

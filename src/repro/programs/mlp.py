@@ -357,35 +357,35 @@ KEY_SCHEMAS: tuple[KeySchema, ...] = (
     _ks("fpart", [int_field("layer"), int_field("data_id"),
                   int_field("out_lo"), int_field("out_hi"),
                   int_field("in_lo"), int_field("in_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="forward partial W[ol:oh,il:ih]·x"),
     _ks("actpart", [int_field("layer"), int_field("data_id"),
                     int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="activation slice"),
     _ks("losspart", [int_field("data_id"), int_field("lo"),
                      int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="loss over output slice"),
     _ks("dypart", [int_field("layer"), int_field("data_id"),
                    int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="dLoss/dpre slice (last layer)"),
     _ks("dy", [int_field("layer"), int_field("data_id")], _MGR, _RW,
         "round_scoped", description="combined dLoss/dpre"),
     _ks("gw", [int_field("layer"), int_field("data_id"),
                int_field("out_lo"), int_field("out_hi"),
                int_field("in_lo"), int_field("in_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="dW tile"),
     _ks("gb", [int_field("layer"), int_field("data_id"),
                int_field("out_lo"), int_field("out_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="db slice"),
     _ks("bpart", [int_field("layer"), int_field("data_id"),
                   int_field("in_lo"), int_field("in_hi"),
                   int_field("out_lo"), int_field("out_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="dx partial"),
     _ks("gW", [int_field("layer"), int_field("data_id")], _MGR, _RW,
         "round_scoped", description="combined weight gradient"),
@@ -393,11 +393,11 @@ KEY_SCHEMAS: tuple[KeySchema, ...] = (
         "round_scoped", description="combined bias gradient"),
     _ks("wnew", [int_field("layer"), int_field("step"),
                  int_field("out_lo"), int_field("out_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="updated W rows (pre-commit)"),
     _ks("bnew", [int_field("layer"), int_field("step"),
                  int_field("out_lo"), int_field("out_hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="updated bias rows (pre-commit)"),
     _ks("loss", [int_field("data_id"), int_field("step")], _MGR,
         frozenset({"manager", "cloud"}), "round_scoped",

@@ -237,21 +237,21 @@ KEY_SCHEMAS: tuple[KeySchema, ...] = (
         frozenset({"manager", "executor", "cloud"}), "persistent",
         description="committed expert version"),
     _ks("route", [int_field("round"), int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="block routing: top-k ids + gates"),
     _ks("disp", [int_field("round"), int_field("expert")], _MGR, _RW,
         "round_scoped", description="per-expert dispatch list"),
     _ks("efwd", [int_field("round"), int_field("expert"),
                  int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="gate-weighted expert outputs"),
     _ks("gw1", [int_field("round"), int_field("expert"),
                 int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="dW1 partial"),
     _ks("gw2", [int_field("round"), int_field("expert"),
                 int_field("lo"), int_field("hi")],
-        _EXEC, _MGR, "stage_scoped", deleters=_MGR_HDL,
+        _EXEC, _MGR_HDL, "stage_scoped", deleters=_MGR_HDL,
         description="dW2 partial"),
     _ks("dy", [int_field("round")], _MGR, _RW, "round_scoped",
         description="combined dLoss/dYhat (B, d_out)"),

@@ -1,0 +1,349 @@
+"""RemoteBackend ⇄ TSServer (PR 10): the full SpaceBackend protocol over
+the wire — blocking ops with server-side waiters, deadline conversion,
+pipelined concurrent waiters across connections, the batched-framing
+round-trip budget, the invalidation-coherent read-through cache,
+server restart/reconnect surfaces, role/context transmission for
+server-side sanitizers, and the facade's numpy key canonicalization."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.space import (ANY, RemoteBackend, RemoteSpaceError, TSServer,
+                              TSTimeout, TupleSpace, canonicalize_key,
+                              make_backend, role)
+from repro.core.space.remote import server_timeout
+
+
+@pytest.fixture
+def server():
+    srv = TSServer("sharded:4").start()
+    yield srv
+    srv.close()
+
+
+@pytest.fixture
+def rb(server):
+    backend = RemoteBackend(addr=server.addr, cache_subjects=())
+    yield backend
+    backend.close()
+
+
+# ------------------------------------------------------------- basic ops
+def test_full_protocol_surface(rb):
+    rb.put(("w", 0), np.arange(4.0))
+    rb.put_many([(("task", i), f"t{i}") for i in range(5)])
+    k, v = rb.read(("w", 0))
+    assert k == ("w", 0) and v[2] == 2.0
+    assert rb.try_read(("nope", 0)) is None
+    assert rb.count(("task", ANY)) == 5
+    assert sorted(rb.keys(("task", ANY))) == [("task", i) for i in range(5)]
+    k, v = rb.get(("task", 0))
+    assert v == "t0"
+    assert rb.try_get(("task", 1))[1] == "t1"
+    assert rb.delete(("task", 2)) == 1
+    batch = rb.take_batch(("task", ANY), 10, timeout=1.0)
+    assert sorted(v for _, v in batch) == ["t3", "t4"]
+    assert rb.wait_count(("w", ANY), 1, timeout=1.0) >= 1
+    snap = rb.snapshot()
+    assert ("w", 0) in snap
+    assert rb.stats()["puts"] >= 6
+
+
+def test_fifo_take_order_preserved(rb):
+    for i in range(8):
+        rb.put(("task", i), i)
+    got = [v for _, v in rb.take_batch(("task", ANY), 8, timeout=1.0)]
+    assert got == list(range(8))      # global_seq FIFO survives the wire
+
+
+def test_blocking_read_woken_by_later_put(rb, server):
+    out = []
+    th = threading.Thread(
+        target=lambda: out.append(rb.read(("late", 0), timeout=5.0)))
+    th.start()
+    time.sleep(0.1)
+    other = RemoteBackend(addr=server.addr, cache_subjects=())
+    other.put(("late", 0), "v")
+    th.join(3.0)
+    other.close()
+    assert out and out[0][1] == "v"
+
+
+def test_concurrent_blocking_waiters_across_connections(server):
+    """N waiters parked across two connections each get exactly one of N
+    tuples — server-side waiter parking must not wedge the connection's
+    pipeline (each blocking op runs on its own dispatch thread)."""
+    clients = [RemoteBackend(addr=server.addr, cache_subjects=())
+               for _ in range(2)]
+    results = []
+    lock = threading.Lock()
+
+    def waiter(c):
+        got = c.get(("job", ANY), timeout=5.0)
+        with lock:
+            results.append(got)
+
+    threads = [threading.Thread(target=waiter, args=(clients[i % 2],))
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    time.sleep(0.2)
+    feeder = RemoteBackend(addr=server.addr, cache_subjects=())
+    feeder.put_many([(("job", i), i) for i in range(6)])
+    for t in threads:
+        t.join(5.0)
+    for c in clients + [feeder]:
+        c.close()
+    assert sorted(v for _, v in results) == list(range(6))
+
+
+# ------------------------------------------------- deadlines (satellite 2)
+def test_server_timeout_conversion_unit():
+    assert server_timeout(None) is None
+    now = time.monotonic()
+    remaining = server_timeout(now + 2.0)
+    assert 1.9 < remaining <= 2.0
+    # A deadline already in the past must clamp to zero, not go negative
+    # (a negative server timeout would mean "wait forever" in some APIs —
+    # exactly the over-wait the conversion exists to prevent).
+    assert server_timeout(now - 5.0) == 0.0
+
+
+def test_timeout_is_relative_to_call_entry(rb):
+    t0 = time.monotonic()
+    with pytest.raises(TSTimeout):
+        rb.get(("never", 0), timeout=0.3)
+    elapsed = time.monotonic() - t0
+    assert 0.25 < elapsed < 2.0     # honored server-side, no over-wait
+
+
+def test_wait_count_timeout(rb):
+    rb.put(("d", 0), 1)
+    with pytest.raises(TSTimeout):
+        rb.wait_count(("d", ANY), 3, timeout=0.2)
+    assert rb.wait_count(("d", ANY), 1, timeout=0.2) == 1
+
+
+# --------------------------------------------- batched framing (tentpole)
+def test_pouch_drain_two_round_trips(rb):
+    """The acceptance gate: one put_many + one take_batch = exactly two
+    request frames, regardless of batch size."""
+    rb.put_many([(("task", i), np.full(128, i)) for i in range(64)])
+    before = rb.round_trips
+    rb.put_many([(("r", i), np.full(64, i)) for i in range(64)])
+    out = rb.take_batch(("task", ANY), 64, timeout=1.0)
+    assert len(out) == 64
+    assert rb.round_trips - before == 2
+
+
+def test_error_propagation(rb):
+    with pytest.raises(TypeError):
+        rb.put("not-a-tuple", 1)    # client-side validate_key, no wire trip
+    # A server-side error comes back typed by name over the wire and the
+    # connection survives it.
+    with pytest.raises(ValueError):
+        rb._request("frobnicate", ())
+    rb.ping()
+
+
+# ------------------------------------------------------ read-through cache
+def test_cache_hit_skips_round_trip(server):
+    rb = RemoteBackend(addr=server.addr, cache_subjects={"w"})
+    try:
+        rb.put(("w", 1), np.arange(3.0))
+        rb.read(("w", 1))
+        before = rb.round_trips
+        for _ in range(5):
+            k, v = rb.read(("w", 1))
+        assert rb.round_trips == before       # all served locally
+        assert rb.cache_hits >= 5
+        assert v[1] == 1.0
+    finally:
+        rb.close()
+
+
+def test_cache_invalidated_by_version_bump(server):
+    """Write-through invalidation: a mutation by ANOTHER client must
+    evict this client's cached entry (the ``("w", l)``/``("wver", l)``
+    commit cycle)."""
+    reader = RemoteBackend(addr=server.addr, cache_subjects={"w", "wver"})
+    writer = RemoteBackend(addr=server.addr, cache_subjects=())
+    try:
+        writer.put(("w", 0), np.zeros(4))
+        writer.put(("wver", 0), 0)
+        assert reader.read(("w", 0))[1][0] == 0.0
+        assert reader.read(("wver", 0))[1] == 0
+        # commit: delete + re-put (both journal, both must invalidate)
+        writer.delete(("w", 0))
+        writer.put(("w", 0), np.ones(4))
+        writer.put(("wver", 0), 1)
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            if (reader.read(("wver", 0))[1] == 1
+                    and reader.read(("w", 0))[1][0] == 1.0):
+                break
+            time.sleep(0.01)
+        assert reader.read(("wver", 0))[1] == 1
+        assert reader.read(("w", 0))[1][0] == 1.0
+    finally:
+        reader.close()
+        writer.close()
+
+
+def test_cache_never_serves_nonconcrete_patterns(server):
+    rb = RemoteBackend(addr=server.addr, cache_subjects={"w"})
+    try:
+        rb.put(("w", 0), 1.0)
+        rb.read(("w", 0))
+        before = rb.round_trips
+        rb.read(("w", ANY))               # wildcard: must round-trip
+        assert rb.round_trips == before + 1
+    finally:
+        rb.close()
+
+
+# ------------------------------------------------- restart / reconnection
+def test_server_restart_errors_then_reconnects():
+    srv = TSServer("sharded:2").start()
+    host, port = srv.addr
+    rb = RemoteBackend(addr=(host, port), cache_subjects=())
+    rb.put(("w", 0), 1)
+    srv.close()
+    time.sleep(0.1)
+    # Broken connection surfaces as RemoteSpaceError, not a hang.
+    with pytest.raises(RemoteSpaceError):
+        rb.read(("w", 0), timeout=1.0)
+    # Server comes back on the same port: the next op reconnects.
+    # (Rebinding immediately after close can briefly hit EADDRINUSE —
+    # retry until the kernel releases the listening socket.)
+    bind_deadline = time.monotonic() + 5.0
+    while True:
+        try:
+            srv2 = TSServer("sharded:2", host=host, port=port).start()
+            break
+        except OSError:
+            if time.monotonic() > bind_deadline:
+                raise
+            time.sleep(0.1)
+    try:
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            try:
+                rb.ping()
+                break
+            except RemoteSpaceError:
+                time.sleep(0.05)
+        assert rb.ping() == "pong"
+        assert rb.reconnects >= 1
+        # State lived in the dead server: gone. The client surface is
+        # explicit about that (fresh store), not silently stale.
+        assert rb.try_read(("w", 0)) is None
+    finally:
+        rb.close()
+        srv2.close()
+
+
+def test_pending_waiter_fails_fast_on_server_death():
+    srv = TSServer("sharded:2").start()
+    rb = RemoteBackend(addr=srv.addr, cache_subjects=())
+    errs = []
+
+    def waiter():
+        try:
+            rb.get(("never", 0), timeout=30.0)
+        except (RemoteSpaceError, TSTimeout) as e:
+            errs.append(e)
+
+    th = threading.Thread(target=waiter, daemon=True)
+    th.start()
+    time.sleep(0.2)
+    srv.close()
+    th.join(5.0)               # NOT 30 — the death must fail the waiter
+    rb.close()
+    assert not th.is_alive()
+    assert errs and isinstance(errs[0], RemoteSpaceError)
+
+
+# ------------------------------------- server-side sanitizers (role/ctx)
+def test_roles_transmitted_to_server_side_checked(server):
+    """A checked stack on the SERVER must attribute remote ops to the
+    client thread's role — the request carries it."""
+    srv = TSServer("checked+sharded:2").start()
+    try:
+        rb = RemoteBackend(addr=srv.addr, cache_subjects=())
+        checked = srv.backend
+        from repro.core.space.schema import KeySchema
+        from repro.core.space.api import Key  # noqa: F401
+        checked.registry.register(KeySchema(
+            subject="guarded", fields=(), producers=frozenset({"manager"}),
+            consumers=frozenset({"manager"}), deleters=frozenset({"manager"}),
+            lifecycle="persistent"))
+        with role("handler"):
+            rb.put(("guarded",), 1)          # wrong role → recorded
+        with role("manager"):
+            rb.put(("guarded",), 2)          # right role → clean
+        report = checked.protocol_report()
+        assert report["violations"] == 1
+        assert "handler" in report["violation_samples"][0]
+        rb.close()
+    finally:
+        srv.close()
+
+
+# ----------------------------------------------- spec / facade integration
+def test_make_backend_remote_spec_spawns_private_server():
+    b = make_backend("remote+sharded:2")
+    try:
+        assert isinstance(b, RemoteBackend)
+        b.put(("w", 0), np.arange(8.0))
+        assert b.read(("w", 0))[1][5] == 5.0
+    finally:
+        b.close()
+
+
+def test_make_backend_remote_client_side_wrappers():
+    from repro.core.space import InstrumentedBackend
+    b = make_backend("instrumented+remote+sharded:2")
+    try:
+        assert isinstance(b, InstrumentedBackend)
+        assert isinstance(b.inner, RemoteBackend)
+        assert b.inner.server_spec == "sharded:2"
+    finally:
+        b.inner.close()
+
+
+def test_remote_spec_rejects_recursion():
+    with pytest.raises(ValueError):
+        TSServer("remote+sharded")
+
+
+# --------------------------------------- numpy canonicalization (sat. 1)
+def test_numpy_scalar_key_fields_canonicalized():
+    assert canonicalize_key(("loss", 1, np.int64(3))) == ("loss", 1, 3)
+    assert type(canonicalize_key(("x", np.float32(0.5)))[1]) is float
+    same = ("plain", 1, "s")
+    assert canonicalize_key(same) is same          # fast path: no copy
+
+
+def test_facade_canonicalizes_numpy_aliased_keys():
+    """The regression the satellite names: ``("loss", d, np.int64(s))``
+    and ``("loss", d, s)`` must be ONE key through the facade — puts
+    alias, reads alias, deletes alias."""
+    ts = TupleSpace(backend="local")
+    ts.put(("loss", 0, np.int64(3)), 0.25)
+    assert ts.count(("loss", 0, 3)) == 1
+    hit = ts.try_read(("loss", 0, np.int64(3)))
+    assert hit is not None and type(hit[0][2]) is int
+    ts.put(("loss", 0, 3), 0.5)                    # overwrite, not alias
+    assert ts.count(("loss", ANY, ANY)) == 1
+    assert ts.delete(("loss", np.int64(0), 3)) == 1
+
+
+def test_facade_canonicalizes_put_many_and_batch_ops():
+    ts = TupleSpace(backend="local")
+    ts.put_many([(("task", np.int32(i)), i) for i in range(4)])
+    got = ts.take_batch(("task", ANY), 4, timeout=1.0)
+    assert [type(k[1]) for k, _ in got] == [int] * 4

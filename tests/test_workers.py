@@ -1,0 +1,110 @@
+"""The out-of-process handler fleet (PR 10): real worker processes over
+the embedded tuple-space server reproduce the thread fleet bit-for-bit,
+the registry guard refuses programs the workers can't resolve, and
+SIGKILL-mid-round revival preserves exactly-once training — identical
+final weights, zero schema violations, zero leaks, with the checked
+sanitizer hosted server-side."""
+
+import numpy as np
+import pytest
+
+from repro.core import ACANCloud, CloudConfig, FaultPlan, LayerSpec
+from repro.core.program import GLOBAL_OPS, OpRegistry
+from repro.core.workers import HandlerProcess, ProcessCrashEvent
+from repro.programs.mlp import MLPProgram
+
+N_LAYERS = 2
+
+
+def _cfg(**kw):
+    base = dict(layers=[LayerSpec(16, 16), LayerSpec(16, 1)],
+                n_handlers=2, epochs=1, n_samples=6, task_cap=64.0,
+                pouch_size=50, lr=0.05, time_scale=1e-6,
+                initial_timeout=0.2, wall_limit=180.0, seed=0,
+                ts_backend="checked+sharded:4",
+                fault_plan=FaultPlan(interval=1e9))
+    base.update(kw)
+    return CloudConfig(**base)
+
+
+def _final_weights(cloud):
+    return [cloud.ts.try_read(("w", layer))[1] for layer in range(N_LAYERS)]
+
+
+@pytest.fixture(scope="module")
+def thread_baseline():
+    """One fault-free thread-fleet run: the bit-exact reference both
+    process-fleet runs must reproduce (SGD bs=1 is deterministic as long
+    as every sample is applied exactly once, whatever the fleet)."""
+    cloud = ACANCloud(_cfg(fleet="thread"))
+    res = cloud.run()
+    assert res.ledger_ok and res.ts_violations == 0
+    return [l for _, l in res.loss_history], _final_weights(cloud)
+
+
+def test_process_fleet_matches_thread_fleet(thread_baseline):
+    base_losses, base_w = thread_baseline
+    cloud = ACANCloud(_cfg(fleet="process"))
+    res = cloud.run()
+    assert [l for _, l in res.loss_history] == base_losses
+    for got, want in zip(_final_weights(cloud), base_w):
+        np.testing.assert_array_equal(got, want)
+    assert res.ledger_ok
+    assert res.ts_violations == 0, res.ts_violation_samples
+    assert res.ts_leaks == {}
+
+
+def test_sigkill_revival_identical_weights(thread_baseline):
+    """Every second the daemon SIGKILLs the whole worker fleet mid-round
+    (p=1.0) and respawns real processes — the re-issue/commit-window
+    machinery must still apply each sample exactly once: loss trajectory
+    and final weights bit-identical to the fault-free reference.
+
+    The interval must exceed worker boot time (~0.5 s: fresh interpreter
+    + numpy import + server handshake) or every generation dies before
+    touching a task and the run just thrashes; the larger ``time_scale``
+    stretches the run across several kill cycles without changing the
+    numerics (emulated compute is sleep, not math)."""
+    base_losses, base_w = thread_baseline
+    cloud = ACANCloud(_cfg(
+        fleet="process", time_scale=5e-4,
+        fault_plan=FaultPlan(interval=1.0, p_handler_crash=1.0, seed=1)))
+    res = cloud.run()
+    assert res.handler_revivals >= 1
+    assert len(res.loss_history) == len(base_losses)
+    assert [l for _, l in res.loss_history] == base_losses
+    for got, want in zip(_final_weights(cloud), base_w):
+        np.testing.assert_array_equal(got, want)
+    assert res.ledger_ok
+    assert res.ts_violations == 0, res.ts_violation_samples
+    assert res.ts_leaks == {}
+
+
+def test_process_fleet_rejects_custom_registry():
+    """Workers resolve ops in the builtin GLOBAL_OPS only — a program
+    carrying a private registry can't ship its callables to another
+    process, so the cloud must refuse up front, not hang at runtime."""
+    prog = MLPProgram([LayerSpec(4, 4)], epochs=1, n_samples=1)
+    prog.registry = OpRegistry(parent=GLOBAL_OPS)
+    with pytest.raises(ValueError, match="built-in op"):
+        ACANCloud(_cfg(fleet="process"), program=prog)
+
+
+def test_process_crash_event_kills_current_incarnation():
+    """ProcessCrashEvent.set() must SIGKILL whatever process it points
+    at *now* — the daemon re-points ``proc`` at each respawn."""
+    import subprocess
+    import sys
+    p = subprocess.Popen([sys.executable, "-c",
+                          "import time; time.sleep(60)"])
+    hp = HandlerProcess(p, name="h0")
+    ev = ProcessCrashEvent()
+    ev.proc = hp
+    assert hp.is_alive()
+    ev.set()
+    hp.join(5.0)
+    assert not hp.is_alive()
+    assert ev.kills == 1
+    # Event semantics the daemon relies on: never reads as "already set".
+    assert not ev.is_set()
+    ev.clear()

@@ -43,6 +43,7 @@ ROLE_BY_FILE = (
     ("core/manager.py", "manager"),
     ("core/program.py", "manager"),
     ("core/handler.py", "handler"),
+    ("core/workers.py", "handler"),
     ("core/executor.py", "executor"),
     ("core/cloud.py", "cloud"),
     ("core/faults.py", "daemon"),
