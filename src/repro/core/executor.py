@@ -26,12 +26,17 @@ everything below reads as before:
 key (as the program writes it)               namespaced subject   value
 ===========================================  ===================  ==========================
 ``("task", tid)``                            ``ns::task``         task wire string — or
-                                                                  ``(wire, handler_name)``
-                                                                  after a "store": the name
-                                                                  tags which handler put it
+                                                                  ``(wire, handler_name,``
+                                                                  ``nonce)`` after a
+                                                                  "store": the name tags
+                                                                  which handler put it
                                                                   back so it can skip its
                                                                   own re-puts for one
-                                                                  backoff cycle; ``tid`` is
+                                                                  backoff cycle, the nonce
+                                                                  marks ownership across
+                                                                  process boundaries for
+                                                                  the PR 6 fence
+                                                                  compensation; ``tid`` is
                                                                   ``e<epoch>t<seq>`` — the
                                                                   Manager epoch makes a
                                                                   revived Manager's ids

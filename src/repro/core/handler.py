@@ -13,7 +13,8 @@ through :meth:`~repro.core.executor.TaskExecutor.execute_batch`, writes
 results, and marks completion with one batched put.
 
 "Store" livelock guard: a stored task is re-put tagged with the storing
-handler's name (value becomes ``(wire, name)``). If the same handler
+handler's name and a unique ownership nonce (value becomes
+``(wire, name, nonce)``). If the same handler
 drains its own fresh re-put it puts the task straight back and backs off
 for one ``store_backoff`` cycle instead of spinning take→store→take —
 with every handler under-capacity, the task circulates gently at backoff
@@ -53,11 +54,15 @@ single-tenant fast path, byte-identical to the pre-PR-4 behaviour
 
 from __future__ import annotations
 
+import itertools
 import threading
 import time
+import uuid
 from collections import defaultdict
 from dataclasses import dataclass, field
 from typing import Any
+
+import numpy as np
 
 from repro.core.costmodel import OnlineCostModel, read_backlog
 from repro.core.executor import PreconditionUnmet, TaskExecutor
@@ -121,10 +126,42 @@ class SpeedBox:
 
 def _unpack_task(value) -> tuple[str, str | None]:
     """Task tuple value -> (wire, stored_by). Fresh Manager issues carry
-    the bare wire string; handler "store" re-puts carry (wire, name)."""
+    the bare wire string; handler "store" re-puts carry
+    ``(wire, name, nonce)`` (pre-PR-10 re-puts were ``(wire, name)`` —
+    still accepted)."""
     if isinstance(value, tuple):
-        return value
+        return value[0], value[1]
     return value, None
+
+
+def _values_match(a, b) -> bool:
+    """Ownership test for the fence compensations: is the tuple read
+    back from TS *our* write? Object identity decides instantly for the
+    in-process backends; over a :class:`RemoteBackend` every read is a
+    freshly unpickled copy, so fall back to ndarray-aware structural
+    equality. Content equality is sound here because every op's output
+    is a pure function of the tuples it reads (paper §5.4 idempotency):
+    equal content means ours or a duplicate execution's — semantically
+    interchangeable — while a later round's legitimate rewrite of a
+    step-less key differs (new weights → new values). In the
+    pathological bit-identical-rewrite case a delete degrades to one
+    Manager re-issue (the missing-tuple discipline), never corruption."""
+    if a is b:
+        return True
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        return (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)
+                and a.shape == b.shape and a.dtype == b.dtype
+                and np.array_equal(a, b))
+    if isinstance(a, (tuple, list)) and isinstance(b, (tuple, list)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(_values_match(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict) and isinstance(b, dict):
+        return (a.keys() == b.keys()
+                and all(_values_match(v, b[k]) for k, v in a.items()))
+    try:
+        return bool(a == b)
+    except (TypeError, ValueError):
+        return False
 
 
 @dataclass
@@ -174,6 +211,20 @@ class Handler:
     tasks_deferred: int = 0           # stored back by the slow-handler rule
     batches_taken: int = 0
     busy_time: float = 0.0            # emulated compute seconds (utilisation)
+    #: Ownership salt for "store" re-puts: object identity does not
+    #: survive the wire (the PR 10 process fleet reads back freshly
+    #: unpickled copies), so each re-put value carries a nonce unique to
+    #: this handler incarnation — the fence compensation deletes only a
+    #: read-back carrying OUR token (see ``_unstore_if_stale``).
+    _store_salt: str = field(
+        default_factory=lambda: uuid.uuid4().hex[:12], repr=False)
+    _store_seq: Any = field(
+        default_factory=lambda: itertools.count(1), repr=False)
+
+    def _store_value(self, wire: str) -> tuple:
+        """Ownership-tagged re-put value ``(wire, name, nonce)``."""
+        return (wire, self.name,
+                f"{self._store_salt}.{next(self._store_seq)}")
 
     def _maybe_crash(self) -> None:
         if self.crash_event.is_set():
@@ -241,14 +292,21 @@ class Handler:
         ``("mstate", "finished")``) and would then outlive the job as a
         leaked task tuple. Re-read the fence *after* the put: if the
         task's round is finished by now, take our own re-put back. The
-        delete is value-identity-guarded — a fresh Manager re-issue under
-        the same tid is a different object and survives."""
+        delete is ownership-guarded by VALUE, not object identity (which
+        never matches over a :class:`RemoteBackend` — every read-back is
+        a fresh unpickled copy): event-loop re-puts carry a
+        ``(wire, name, nonce)`` token unique to this incarnation, so a
+        fresh Manager re-issue (a bare wire string) or another handler's
+        re-put (different name/nonce) always survives. Poll-loop stores
+        are untagged bare wire by design (the measured baseline); there
+        an equal read-back of a *finished* round is deleted — which is
+        exactly what the Manager's own sweep would do with it."""
         if rt is None or task is None:
             return
         if task.step >= self._fence_base(rt):
             return
         hit = self.ts.try_read(key)
-        if hit is not None and hit[1] is value:
+        if hit is not None and _values_match(hit[1], value):
             self.ts.delete(key)
             self.tasks_fenced += 1
 
@@ -257,14 +315,16 @@ class Handler:
         """The group's round finished while we were executing (the
         Manager's cleanup passes may both have run already): delete our
         own writes so they cannot outlive the round as orphans. Result
-        deletes are value-identity-guarded — if a later round
-        legitimately re-wrote the same key (step-less keys like the MLP
-        ``fpart`` alias across rounds), the stored object is not ours
-        and stays. Done marks are content-keyed (``step`` included), so
-        the concrete deletes cannot touch a live round's marks."""
+        deletes are guarded by :func:`_values_match` (identity for the
+        in-process backends, ndarray-aware content equality over the
+        wire) — if a later round legitimately re-wrote the same key
+        (step-less keys like the MLP ``fpart`` alias across rounds), the
+        stored value is not ours and stays. Done marks are content-keyed
+        (``step`` included), so the concrete deletes cannot touch a live
+        round's marks."""
         for key, value in written:
             hit = rt.space.try_read(key)
-            if hit is not None and hit[1] is value:
+            if hit is not None and _values_match(hit[1], value):
                 rt.space.delete(key)
         for t in group:
             rt.space.delete(("done",) + content_key(t))
@@ -380,7 +440,7 @@ class Handler:
                     # Over this tenant's per-batch cap: store it back
                     # (tagged like a capability miss) for a handler with
                     # headroom on this namespace.
-                    stored = (wire, self.name)
+                    stored = self._store_value(wire)
                     self.ts.put(key, stored)
                     self._unstore_if_stale(key, stored, task, rt)
                     skip_until[key] = now + self.store_backoff
@@ -397,7 +457,7 @@ class Handler:
                     # "store": an unserved namespace, unknown op, or
                     # too-big task — put it back for a more capable
                     # handler, tagged so we skip it for one backoff cycle.
-                    stored = (wire, self.name)
+                    stored = self._store_value(wire)
                     self.ts.put(key, stored)
                     self._unstore_if_stale(key, stored, task, rt)
                     skip_until[key] = now + self.store_backoff
@@ -414,7 +474,7 @@ class Handler:
                     # handler draining its OWN tag past the window
                     # executes it — guaranteed progress, no livelock
                     # even with every handler fitted slow.
-                    stored = (wire, self.name)
+                    stored = self._store_value(wire)
                     self.ts.put(key, stored)
                     self._unstore_if_stale(key, stored, task, rt)
                     # Quarter window: a deferred task should reach a fast
@@ -448,7 +508,7 @@ class Handler:
                     # damage to ONE group per batch instead of the whole
                     # drain.
                     for g_ns, g_task, _, g_key, g_wire, _ in entries:
-                        stored = (g_wire, self.name)
+                        stored = self._store_value(g_wire)
                         self.ts.put(g_key, stored)
                         self._unstore_if_stale(g_key, stored, g_task, rt)
                         skip_until[g_key] = (time.monotonic()

@@ -21,7 +21,16 @@ Performance model:
   invalidation frames that share the response FIFO: any response that
   could observe a mutation is delivered *after* that mutation's
   invalidation, so data that flows through the TS (task issued after
-  weight commit → handler reads weights) is never served stale.
+  weight commit → handler reads weights) is never served stale. The
+  FIFO alone is not enough, though: the demux thread drains frames, but
+  the *store* into the cache happens later on the requesting thread —
+  a response that observed pre-commit state could be stored after the
+  commit's invalidation was already drained. An **invalidation
+  generation** closes that window: the demux thread bumps a counter on
+  every invalidation (and on reconnect), each read records the counter
+  before its request frame is sent, and the store is skipped (under the
+  same lock the demux thread invalidates with) if the counter moved
+  while the request was in flight.
 
 Deadline semantics (satellite 2): blocking ops take *relative* timeouts
 at the API (protocol contract), are pinned to an **absolute client
@@ -155,6 +164,12 @@ class RemoteBackend:
         self.reconnects = 0
         self._cache: dict[tuple, tuple] = {}
         self._cache_enabled = False
+        #: Invalidation generation (see module docstring): bumped under
+        #: ``_inv_lock`` by the demux thread on every invalidation frame
+        #: and on reconnect; a read that started before the bump must
+        #: not store its (possibly pre-mutation) result.
+        self._inv_gen = 0
+        self._inv_lock = threading.Lock()
         self._sock = None
         self._wlock = threading.Lock()
         self._plock = threading.Lock()
@@ -221,7 +236,9 @@ class RemoteBackend:
             s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             recv = threading.Thread(target=self._recv_loop, args=(s,),
                                     name="ts-remote-recv", daemon=True)
-            self._cache.clear()
+            with self._inv_lock:
+                self._inv_gen += 1
+                self._cache.clear()
             self._cache_enabled = False
             self._sock = s
             recv.start()
@@ -236,7 +253,9 @@ class RemoteBackend:
             if self._sock is sock:
                 self._sock = None
                 self._cache_enabled = False
-                self._cache.clear()
+                with self._inv_lock:
+                    self._inv_gen += 1       # kill in-flight cache stores
+                    self._cache.clear()
                 self.reconnects += 1
         # shutdown first: close() alone won't wake our receiver thread
         # blocked in recv (the in-flight syscall pins the file
@@ -264,8 +283,10 @@ class RemoteBackend:
                 req_id = msg[0]
                 if req_id == 0:
                     if msg[1] == "inv":
-                        for k in msg[2]:
-                            self._cache.pop(k, None)
+                        with self._inv_lock:
+                            self._inv_gen += 1
+                            for k in msg[2]:
+                                self._cache.pop(k, None)
                     continue
                 with self._plock:
                     p = self._pending.pop(req_id, None)
@@ -331,13 +352,23 @@ class RemoteBackend:
             return hit
         return None
 
-    def _cache_store(self, pattern: Pattern, result: tuple | None) -> None:
+    def _cache_store(self, pattern: Pattern, result: tuple | None,
+                     gen: int) -> None:
+        """Insert a read result — unless an invalidation (or reconnect)
+        was processed since ``gen`` was sampled before the request was
+        sent, in which case the result may predate the mutation and
+        caching it would serve stale data for the whole next version
+        window. Taken under ``_inv_lock`` so the insert cannot interleave
+        with the demux thread's bump-and-evict."""
         if (result is not None and self._cache_enabled
                 and is_concrete(pattern)
                 and _plain_subject(pattern) in self.cache_subjects):
-            if len(self._cache) >= _CACHE_CAP:
-                self._cache.clear()
-            self._cache[result[0]] = (result[0], result[1])
+            with self._inv_lock:
+                if self._inv_gen != gen:
+                    return                   # invalidated while in flight
+                if len(self._cache) >= _CACHE_CAP:
+                    self._cache.clear()
+                self._cache[result[0]] = (result[0], result[1])
 
     # ---------------------------------------------------------------- put
     def put(self, key: Key, value: Any) -> None:
@@ -365,8 +396,9 @@ class RemoteBackend:
         hit = self._cache_lookup(pattern)
         if hit is not None:
             return hit
+        gen = self._inv_gen                  # sample BEFORE the request
         result = self._request("read", (pattern,), _deadline(timeout))
-        self._cache_store(pattern, result)
+        self._cache_store(pattern, result, gen)
         return result
 
     def get(self, pattern: Pattern,
@@ -392,8 +424,9 @@ class RemoteBackend:
         hit = self._cache_lookup(pattern)
         if hit is not None:
             return hit
+        gen = self._inv_gen                  # sample BEFORE the request
         result = self._request("try_read", (pattern,))
-        self._cache_store(pattern, result)
+        self._cache_store(pattern, result, gen)
         return result
 
     def try_get(self, pattern: Pattern) -> tuple[Key, Any] | None:

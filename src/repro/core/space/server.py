@@ -13,7 +13,10 @@ Design:
 - **Blocking stays server-side**: the waiter parks in the hosted
   backend's own condvars; the client sends a server-relative timeout
   (already converted from its absolute deadline at frame-encode time)
-  and simply waits for the response frame.
+  and simply waits for the response frame. Waits run in bounded
+  ``WAITER_SLICE`` re-checks of the connection, so a client that dies
+  mid-wait (SIGKILLed process-fleet worker) frees its parked waiter
+  threads within one slice instead of leaking them for the run.
 - **Sanitizers stack server-side**: host ``checked+sharded`` (or
   ``raced+checked+sharded``) and every remote op is checked exactly like
   a local one — each request carries the client thread's role tag and
@@ -37,6 +40,7 @@ from __future__ import annotations
 
 import socket
 import threading
+import time
 from collections import deque
 from typing import Any
 
@@ -51,6 +55,16 @@ __all__ = ["TSServer", "main"]
 #: Ops that may park on a backend condvar — dispatched on a side thread
 #: so the connection keeps pipelining.
 BLOCKING_OPS = frozenset({"read", "get", "take_batch", "wait_count"})
+
+#: Parked blocking ops wait in bounded slices of this many seconds,
+#: re-checking their connection between slices — so a waiter whose
+#: client died (the process fleet SIGKILLs workers mid-blocking-take)
+#: unparks within one slice instead of sitting in the hosted backend's
+#: condvar forever (``timeout=None`` has no natural wake-up, and
+#: ``_Conn.close()`` wakes the reader/writer but cannot reach threads
+#: parked inside the backend). A satisfied wait still wakes instantly —
+#: the slicing only bounds how long a *dead* connection's waiter lives.
+WAITER_SLICE = 0.5
 
 #: Builtin exception types re-raised by name on the client (everything
 #: else surfaces as RemoteOpError with the original repr).
@@ -139,7 +153,10 @@ class _Conn:
         set_role(role_name)
         _set_ctx(ctx)
         try:
-            result = self.server.run_op(self, op, args, timeout)
+            if op in BLOCKING_OPS:
+                result = self._run_blocking(op, args, timeout)
+            else:
+                result = self.server.run_op(self, op, args, timeout)
             self.enqueue((req_id, "ok", result))
         except TSTimeout as e:
             self.enqueue((req_id, "timeout", str(e)))
@@ -149,6 +166,34 @@ class _Conn:
         finally:
             set_role(None)
             _set_ctx(None)
+
+    def _run_blocking(self, op, args, timeout):
+        """Execute a blocking op as a sequence of ``WAITER_SLICE``-bounded
+        waits so the parked thread notices a dead connection (see
+        ``WAITER_SLICE``). Each slice that times out consumed nothing
+        from the backend (the blocking ops take-or-raise atomically), so
+        retrying preserves the op's semantics; the total wait honors the
+        client's server-relative ``timeout`` (``None`` = forever —
+        bounded only by connection lifetime)."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            if deadline is None:
+                slice_t = WAITER_SLICE
+            else:
+                slice_t = min(max(deadline - time.monotonic(), 0.0),
+                              WAITER_SLICE)
+            try:
+                return self.server.run_op(self, op, args, slice_t)
+            except TSTimeout:
+                if self.closed:
+                    # Client is gone: abandon the wait. The response
+                    # would be dropped by enqueue() anyway — raising
+                    # here (vs. parking forever) is what frees the
+                    # dispatch thread and its backend waiter slot.
+                    raise
+                if (deadline is not None
+                        and time.monotonic() >= deadline):
+                    raise
 
     def close(self) -> None:
         with self._cond:

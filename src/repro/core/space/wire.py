@@ -26,16 +26,34 @@ deliberately fragmented writes to exercise partial-read recovery).
 
 from __future__ import annotations
 
+import os
 import pickle
 import struct
 from typing import Any
 
-__all__ = ["FrameError", "MAX_FRAME", "decode_msg", "encode_segments",
-           "recv_exact", "recv_msg", "send_msg"]
+__all__ = ["FrameError", "IOV_MAX", "MAX_FRAME", "decode_msg",
+           "encode_segments", "recv_exact", "recv_msg", "send_msg"]
 
 _LEN = struct.Struct("<I")
 _HDR = struct.Struct("<IQ")
 _BUF = struct.Struct("<Q")
+
+
+def _iov_max() -> int:
+    """The kernel's per-``sendmsg`` iovec cap (Linux: typically 1024).
+    A frame with more out-of-band buffers than this must be sent in
+    several ``sendmsg`` calls — exceeding the cap fails the whole send
+    with ``EMSGSIZE``, which callers would misread as a dead
+    connection."""
+    try:
+        n = os.sysconf("SC_IOV_MAX")
+    except (AttributeError, OSError, ValueError):
+        n = -1
+    return n if n > 0 else 1024
+
+
+#: Max segments handed to one ``sendmsg`` call (see :func:`_iov_max`).
+IOV_MAX = _iov_max()
 
 #: Upper bound on one frame's body — a corrupted/foreign length prefix
 #: must fail loudly instead of allocating gigabytes.
@@ -108,7 +126,11 @@ def send_msg(sock, msg: Any, lock=None) -> None:
 def _send_segments(sock, segs: list) -> None:
     while segs:
         try:
-            sent = sock.sendmsg(segs)
+            # Never hand the kernel more than IOV_MAX iovecs — a large
+            # put_many/snapshot frame can carry thousands of array
+            # segments, and an over-long vector fails outright with
+            # EMSGSIZE. The outer loop drains whatever remains.
+            sent = sock.sendmsg(segs[:IOV_MAX])
         except AttributeError:            # transport without sendmsg
             for s in segs:
                 sock.sendall(s)

@@ -62,19 +62,55 @@ def test_unstore_keeps_live_round_reput():
     assert h.tasks_fenced == 0
 
 
-def test_unstore_identity_guard_spares_fresh_reissue():
-    """A revived Manager re-issuing under the same tid writes a NEW
-    object — the stale handler's compensation must not delete it."""
+def test_unstore_token_guard_spares_fresh_reissue():
+    """A Manager re-issue under the same tid is a bare (untagged) wire
+    string — the stale handler's tokened compensation must not delete
+    it. Ownership is decided by VALUE (the ``(wire, name, nonce)``
+    token), not object identity, which never matches over a
+    RemoteBackend (every read-back is a fresh unpickled copy)."""
     ts = TupleSpace(backend="sharded")
     ts.put(("mstate", "frontier"), {"base": 5, "completed": []})
     h, rt = _handler(ts), _rt(ts)
-    ours = ("wire", "h0")
-    theirs = tuple(list(ours))       # equal value, different identity
-    assert ours == theirs and ours is not theirs
+    ours = h._store_value("wire")
+    ts.put(("task", "t1"), "wire")   # fresh re-issue: untagged
+    h._unstore_if_stale(("task", "t1"), ours, _task(step=1), rt)
+    assert ts.try_read(("task", "t1"))[1] == "wire"
+    assert h.tasks_fenced == 0
+
+
+def test_unstore_token_guard_spares_other_incarnations_reput():
+    """Same handler NAME, different incarnation (a daemon-revived
+    worker): the nonce differs, so the old incarnation's compensation
+    leaves the new incarnation's re-put alone."""
+    ts = TupleSpace(backend="sharded")
+    ts.put(("mstate", "frontier"), {"base": 5, "completed": []})
+    h, rt = _handler(ts), _rt(ts)
+    ours = h._store_value("wire")
+    theirs = _handler(ts)._store_value("wire")   # fresh salt, same name
+    assert ours != theirs
     ts.put(("task", "t1"), theirs)
     h._unstore_if_stale(("task", "t1"), ours, _task(step=1), rt)
-    assert ts.try_read(("task", "t1"))[1] is theirs
+    assert ts.try_read(("task", "t1"))[1] == theirs
     assert h.tasks_fenced == 0
+
+
+def test_unstore_token_matches_across_serialization():
+    """The PR 10 process-fleet case the old identity guard silently
+    broke on: the read-back is a pickle round-trip of our own re-put —
+    a different object with the same token — and MUST still be
+    compensated, or stale tasks leak past shutdown in the process
+    fleet."""
+    import pickle
+    ts = TupleSpace(backend="sharded")
+    ts.put(("mstate", "frontier"), {"base": 5, "completed": []})
+    h, rt = _handler(ts), _rt(ts)
+    ours = h._store_value("wire")
+    copy = pickle.loads(pickle.dumps(ours))
+    assert copy == ours and copy is not ours
+    ts.put(("task", "t1"), copy)
+    h._unstore_if_stale(("task", "t1"), ours, _task(step=1), rt)
+    assert ts.try_read(("task", "t1")) is None
+    assert h.tasks_fenced == 1
 
 
 def test_unstore_finished_flag_fences_every_step():
@@ -95,6 +131,39 @@ def test_unstore_noop_without_rt_or_task():
     h._unstore_if_stale(("task", "t1"), value, None, _rt(ts))
     h._unstore_if_stale(("task", "t1"), value, _task(step=0), None)
     assert ts.try_read(("task", "t1")) is not None
+
+
+# ------------------------------------------------------- _undo_stale units
+def test_undo_stale_deletes_own_writes_across_serialization():
+    """Orphan-partial compensation over the wire: the read-back of our
+    result write is an unpickled ndarray copy — content-equal, not
+    identical — and must still be undone (the process-fleet leak the
+    identity guard caused)."""
+    import pickle
+
+    import numpy as np
+    ts = TupleSpace(backend="sharded")
+    h, rt = _handler(ts), _rt(ts)
+    ours = np.arange(6.0)
+    stored = pickle.loads(pickle.dumps(ours))
+    ts.put(("fpart", 0, 1, 0, 4), stored)
+    h._undo_stale(rt, [_task(step=1)], [(("fpart", 0, 1, 0, 4), ours)])
+    assert ts.try_read(("fpart", 0, 1, 0, 4)) is None
+    assert h.tasks_fenced == 1
+
+
+def test_undo_stale_spares_later_rounds_rewrite():
+    """A later round legitimately re-wrote the same step-less key with
+    DIFFERENT content (new weights → new partials): not ours, stays."""
+    import numpy as np
+    ts = TupleSpace(backend="sharded")
+    h, rt = _handler(ts), _rt(ts)
+    ours = np.arange(6.0)
+    theirs = np.arange(6.0) + 1.0
+    ts.put(("fpart", 0, 1, 0, 4), theirs)
+    h._undo_stale(rt, [_task(step=1)], [(("fpart", 0, 1, 0, 4), ours)])
+    hit = ts.try_read(("fpart", 0, 1, 0, 4))
+    assert hit is not None and hit[1][0] == 1.0
 
 
 # ----------------------------------------------- frontier ``swept`` cursor

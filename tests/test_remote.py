@@ -15,6 +15,7 @@ from repro.core.space import (ANY, RemoteBackend, RemoteSpaceError, TSServer,
                               TSTimeout, TupleSpace, canonicalize_key,
                               make_backend, role)
 from repro.core.space.remote import server_timeout
+from repro.core.space.server import WAITER_SLICE
 
 
 @pytest.fixture
@@ -193,6 +194,67 @@ def test_cache_invalidated_by_version_bump(server):
         writer.close()
 
 
+def test_cache_store_skipped_when_invalidated_in_flight(server):
+    """The stale-store race: a read response that observed pre-commit
+    state must NOT enter the cache when the commit's invalidation was
+    drained while the request was in flight — the demux thread bumps the
+    generation on every invalidation, and a store whose pre-send sample
+    no longer matches is dropped."""
+    rb = RemoteBackend(addr=server.addr, cache_subjects={"w"})
+    try:
+        rb.put(("w", 5), 1.0)
+        gen = rb._inv_gen
+        result = rb._request("read", (("w", 5),))
+        with rb._inv_lock:                 # what _recv_loop does on 'inv'
+            rb._inv_gen += 1
+        rb._cache_store(("w", 5), result, gen)
+        assert ("w", 5) not in rb._cache   # invalidated mid-flight: dropped
+        gen = rb._inv_gen
+        result = rb._request("read", (("w", 5),))
+        rb._cache_store(("w", 5), result, gen)
+        assert ("w", 5) in rb._cache       # quiescent: stored
+    finally:
+        rb.close()
+
+
+def test_cache_coherence_under_commit_race(server):
+    """Hammer the commit cycle (delete + re-put by another client)
+    against a caching reader: the reader must never observe the value
+    going backwards — a regression would mean a stale entry was stored
+    after its invalidation frame was drained and then served for the
+    whole next version window."""
+    reader = RemoteBackend(addr=server.addr, cache_subjects={"w"})
+    writer = RemoteBackend(addr=server.addr, cache_subjects=())
+    writer.put(("w", 0), 0)
+    stop = threading.Event()
+
+    def commit_loop():
+        v = 0
+        while not stop.is_set():
+            v += 1
+            writer.delete(("w", 0))
+            writer.put(("w", 0), v)
+
+    th = threading.Thread(target=commit_loop, daemon=True)
+    th.start()
+    last = -1
+    try:
+        deadline = time.monotonic() + 1.5
+        while time.monotonic() < deadline:
+            hit = reader.try_read(("w", 0))
+            if hit is None:
+                continue                   # between delete and re-put
+            assert hit[1] >= last, (
+                f"served stale cached value {hit[1]} after observing {last}")
+            last = hit[1]
+    finally:
+        stop.set()
+        th.join(3.0)
+        reader.close()
+        writer.close()
+    assert last >= 0
+
+
 def test_cache_never_serves_nonconcrete_patterns(server):
     rb = RemoteBackend(addr=server.addr, cache_subjects={"w"})
     try:
@@ -244,6 +306,40 @@ def test_server_restart_errors_then_reconnects():
     finally:
         rb.close()
         srv2.close()
+
+
+def test_dead_connection_unparks_server_waiters(server):
+    """A waiter parked with ``timeout=None`` must not outlive its
+    connection: when the client dies mid-blocking-take (the process
+    fleet SIGKILLs workers), the server-side dispatch thread unparks
+    within one ``WAITER_SLICE`` re-check instead of leaking in the
+    hosted backend's condvar for the life of the run."""
+    def wait_threads():
+        return [t for t in threading.enumerate()
+                if t.name.startswith("ts-wait-")]
+
+    rb = RemoteBackend(addr=server.addr, cache_subjects=())
+    errs = []
+
+    def waiter():
+        try:
+            rb.get(("never-arrives", 0), timeout=None)
+        except RemoteSpaceError as e:
+            errs.append(e)
+
+    th = threading.Thread(target=waiter, daemon=True)
+    th.start()
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline and not wait_threads():
+        time.sleep(0.02)
+    assert wait_threads(), "waiter never parked server-side"
+    rb.close()                     # hard client death: FIN both ways
+    th.join(5.0)
+    assert errs, "client-side waiter did not fail on connection loss"
+    deadline = time.monotonic() + 3 * WAITER_SLICE + 2.0
+    while time.monotonic() < deadline and wait_threads():
+        time.sleep(0.05)
+    assert not wait_threads(), "server leaked parked waiter threads"
 
 
 def test_pending_waiter_fails_fast_on_server_death():

@@ -14,8 +14,9 @@ import pytest
 from repro.core.space import ANY, FieldIn, FieldLE, NsSubject, NsSubjectPred
 from repro.core.space.api import match
 from repro.core.space.scoped import scope_pattern, task_take_pattern
-from repro.core.space.wire import (FrameError, MAX_FRAME, decode_msg,
-                                   encode_segments, recv_msg, send_msg)
+from repro.core.space.wire import (IOV_MAX, FrameError, MAX_FRAME,
+                                   decode_msg, encode_segments, recv_msg,
+                                   send_msg)
 
 
 def roundtrip(msg):
@@ -155,6 +156,36 @@ def test_two_frames_in_one_stream():
         a.sendall(blob)
         assert recv_msg(b) == (1, "a")
         assert recv_msg(b) == (2, "b")
+    finally:
+        a.close()
+        b.close()
+
+
+def test_frame_with_more_buffers_than_iov_max_sends():
+    """A pouch-sized put_many/snapshot frame can carry thousands of
+    out-of-band array segments — more iovecs than one ``sendmsg``
+    accepts (IOV_MAX, typically 1024). The sender must chunk the
+    gather write instead of failing the whole frame with EMSGSIZE
+    (which the caller would misread as a dead connection)."""
+    n = IOV_MAX + 200
+    arrays = [np.full(2, i, dtype=np.int32) for i in range(n)]
+    msg = (9, "put_many", arrays)
+    assert len(encode_segments(msg)) > IOV_MAX
+    a, b = _socketpair()
+    try:
+        got = {}
+
+        def reader():
+            got["msg"] = recv_msg(b)
+
+        t = threading.Thread(target=reader, daemon=True)
+        t.start()
+        send_msg(a, msg)
+        t.join(10.0)
+        assert not t.is_alive()
+        rid, op, out = got["msg"]
+        assert (rid, op) == (9, "put_many") and len(out) == n
+        np.testing.assert_array_equal(out[-1], arrays[-1])
     finally:
         a.close()
         b.close()
